@@ -1,0 +1,33 @@
+"""Benchmark harness utilities: timing, CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+HEADER = "name,us_per_call,derived"
+_rows: List[str] = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    row = f"{name},{us:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows():
+    return list(_rows)
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (µs) of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,60 @@
+"""Quickstart: LAQ + operator fusion in ~60 lines.
+
+Builds a small star schema, runs a relational query through linear-algebra
+operators, then fuses a linear model into the dimension tables (paper
+Eq. 1) and shows fused == non-fused with far less online work.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import LinearOperator, plan_fusion, predict_fused, \
+    predict_nonfused, prefuse
+from repro.core.laq import DimSpec, Pred, Table, select, star_join
+
+rng = np.random.default_rng(0)
+
+# -- 1. Relations (a fact table + two dimension tables) ---------------------
+customers = Table.from_columns("customers", {
+    "custkey": np.arange(100),
+    "age": rng.integers(18, 80, 100).astype(np.float32),
+    "spend": rng.gamma(2.0, 50.0, 100).astype(np.float32),
+}, key_cols=("custkey",))
+
+products = Table.from_columns("products", {
+    "prodkey": np.arange(40),
+    "price": rng.gamma(2.0, 20.0, 40).astype(np.float32),
+    "rating": rng.uniform(1, 5, 40).astype(np.float32),
+}, key_cols=("prodkey",))
+
+orders = Table.from_columns("orders", {
+    "o_custkey": rng.integers(0, 100, 500),
+    "o_prodkey": rng.integers(0, 40, 500),
+    "quantity": rng.integers(1, 9, 500).astype(np.float32),
+}, key_cols=("o_custkey", "o_prodkey"))
+
+# -- 2. Relational ops as linear algebra ------------------------------------
+big_orders = select(orders, [Pred("quantity", ">", 5.0)])
+print(f"selection kept {int(big_orders.nvalid)}/500 rows")
+
+star = star_join(orders, [
+    DimSpec(customers, "o_custkey", "custkey", ("age", "spend")),
+    DimSpec(products, "o_prodkey", "prodkey", ("price", "rating")),
+])
+features = star.materialize()           # T = Σⱼ Iⱼ Bⱼ Mⱼ   (500 × 4)
+print("star-join feature matrix:", features.shape)
+
+# -- 3. Operator fusion (the paper's contribution) ---------------------------
+model = LinearOperator(jnp.asarray(rng.normal(size=(4, 1)), jnp.float32))
+decision = plan_fusion(model, fact_rows=500, dim_rows=[100, 40])
+print(f"planner: fuse={decision.fuse} — {decision.reason}")
+
+pre = prefuse(star, model)              # Bⱼ Mⱼ L pushed into the dims
+fused = predict_fused(star, pre)        # online: 2 gathers + 1 add
+nonfused = predict_nonfused(star, model)
+np.testing.assert_allclose(np.asarray(fused), np.asarray(nonfused),
+                           rtol=1e-5, atol=1e-5)
+print("fused == non-fused ✓ ; online FLOPs per row:",
+      f"fused={model.l * 2}, non-fused={4 * 2 + 4 * model.l * 2}")

@@ -1,0 +1,84 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON grids."""
+import glob
+import json
+import sys
+
+ARCH_ORDER = ["whisper-tiny", "smollm-360m", "minitron-4b", "llama3.2-1b",
+              "gemma-7b", "pixtral-12b", "qwen2-moe-a2.7b", "dbrx-132b",
+              "jamba-1.5-large-398b", "xlstm-125m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(f"{d}/*.json"):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}"
+
+
+def roofline_table(recs, mesh):
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | MODEL/HLO FLOPs | roofline frac | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | *skipped* "
+                             f"(full-attention; see DESIGN.md) | — | — | — |")
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | {rf['t_compute_s']:.3f} | "
+                f"{rf['t_memory_s']:.3f} | {rf['t_collective_s']:.3f} | "
+                f"{rf['bottleneck']} | {rf['useful_ratio']:.3f} | "
+                f"{rf['roofline_fraction']:.4f} | "
+                f"{fmt_bytes(r['memory']['temp_bytes'])} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | compile s | args GB | temp GB | "
+        "HLO GFLOPs/dev | coll GB/dev | #coll |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {a} | {s} | {r['status']} | — | — | — | — "
+                             f"| — | — |")
+                continue
+            rf = r["roofline"]
+            m = r["memory"]
+            lines.append(
+                f"| {a} | {s} | ok | {r['compile_s']:.0f} | "
+                f"{fmt_bytes(m['argument_bytes'])} | "
+                f"{fmt_bytes(m['temp_bytes'])} | "
+                f"{rf['flops_per_dev']/1e9:.0f} | "
+                f"{rf['coll_bytes_per_dev']/1e9:.1f} | "
+                f"{int(rf['n_collectives'])} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    mesh = sys.argv[3] if len(sys.argv) > 3 else "pod"
+    if which == "roofline":
+        print(roofline_table(recs, mesh))
+    else:
+        print(dryrun_table(recs, mesh))

@@ -1,0 +1,19 @@
+"""Splice generated dry-run/roofline tables into EXPERIMENTS.md markers."""
+import subprocess, sys
+
+def gen(which, mesh):
+    return subprocess.run(
+        [sys.executable, "scripts/make_experiments_tables.py",
+         "experiments/dryrun", which, mesh],
+        capture_output=True, text=True, check=True).stdout.strip()
+
+md = open("EXPERIMENTS.md").read()
+for marker, which, mesh in [
+    ("<!--DRYRUN_POD-->", "dryrun", "pod"),
+    ("<!--DRYRUN_MULTIPOD-->", "dryrun", "multipod"),
+    ("<!--ROOFLINE_POD-->", "roofline", "pod"),
+    ("<!--ROOFLINE_MULTIPOD-->", "roofline", "multipod"),
+]:
+    md = md.replace(marker, gen(which, mesh))
+open("EXPERIMENTS.md", "w").write(md)
+print("spliced")

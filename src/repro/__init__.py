@@ -1,0 +1,2 @@
+"""repro: LAQ + ML operator fusion (SSDBM'23) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: sharded, async, resharding-on-restore."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,4 @@
+"""Per-architecture configs (assigned pool) + the paper's pipeline configs."""
+from .registry import arch_ids, get_config, get_smoke_config
+
+__all__ = ["arch_ids", "get_config", "get_smoke_config"]

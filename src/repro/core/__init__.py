@@ -1,0 +1,4 @@
+"""Core contribution of the paper: LAQ + ML operator fusion."""
+from . import laq, fusion
+
+__all__ = ["laq", "fusion"]

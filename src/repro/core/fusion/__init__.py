@@ -1,0 +1,14 @@
+"""Operator fusion of ML models into LAQ star joins (paper §3)."""
+from .operators import (LinearOperator, DecisionTreeGEMM, tree_from_arrays,
+                        random_tree, reference_tree_eval)
+from .pipeline import (PrefusedStar, prefuse, predict_fused,
+                       predict_fused_matmul, predict_nonfused,
+                       predict_nonfused_matmul)
+from .planner import FusionDecision, plan_fusion
+
+__all__ = [
+    "LinearOperator", "DecisionTreeGEMM", "tree_from_arrays", "random_tree",
+    "reference_tree_eval", "PrefusedStar", "prefuse", "predict_fused",
+    "predict_fused_matmul", "predict_nonfused", "predict_nonfused_matmul",
+    "FusionDecision", "plan_fusion",
+]

@@ -1,0 +1,127 @@
+"""Group-by aggregation in LAQ (paper §2.4).
+
+* ``groupby_sum_matmul`` — paper-faithful single-column aggregation (Fig. 4):
+  fill the aggregated values into MAT_R, groups into MAT_S, multiply, reduce
+  with a ones vector.  Dense matmuls on the MXU.
+* ``groupby_sum_segment`` — the optimized path: map rows to dense group ids
+  (sort-unique, as TQP does for multi-column groups) and ``segment_sum``.
+* ``composite_code`` — multi-column group-by via composite integer encoding
+  followed by the single-column machinery (paper §2.4.2's sort-unique
+  procedure).
+
+All functions are padding-aware: rows whose group code is PAD_GROUP are
+dropped from every aggregate.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .domain import key_domain, positions
+from .table import PAD_KEY
+
+PAD_GROUP = jnp.int32(2**31 - 1)
+
+
+# --------------------------------------------------------------------------
+# Paper-faithful matmul path (single column, Fig. 4)
+# --------------------------------------------------------------------------
+def groupby_sum_matmul(keys_r: jnp.ndarray, values_r: jnp.ndarray,
+                       keys_s: jnp.ndarray, groups_s: jnp.ndarray,
+                       domain_size: int, num_groups: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SELECT SUM(R.val) FROM R JOIN S ON R.key=S.key GROUP BY S.val.
+
+    Returns (group_values[num_groups] int32, sums[num_groups] float32);
+    unused group slots hold PAD_GROUP / 0.
+    """
+    dom = key_domain([keys_r, keys_s], domain_size)
+    n_dom = dom.shape[0]
+    pos_r = positions(dom, keys_r)                     # (rR,)
+    # MAT_R: values scattered to key-domain slots.
+    mat_r = (pos_r[:, None] == jnp.arange(n_dom)[None, :]) * values_r[:, None]
+    # Groups: unique S values.
+    grp_vals = jnp.unique(groups_s.astype(jnp.int32), size=num_groups,
+                          fill_value=PAD_GROUP)
+    gid_s = positions(grp_vals, groups_s.astype(jnp.int32))  # (rS,)
+    pos_s = positions(dom, keys_s)
+    # MAT_S[g, d] = 1 iff some S row has key-slot d and group g.
+    onehot_g = (gid_s[:, None] == jnp.arange(num_groups)[None, :])
+    onehot_d = (pos_s[:, None] == jnp.arange(n_dom)[None, :])
+    mat_s = (onehot_g.astype(jnp.float32).T @ onehot_d.astype(jnp.float32))
+    mat_s = jnp.minimum(mat_s, 1.0)                    # de-duplicate keys
+    # ones @ MAT_R @ MAT_Sᵀ : reduce rows, then map domain slots to groups.
+    per_slot = jnp.sum(mat_r, axis=0)                  # (n_dom,)
+    sums = mat_s @ per_slot                            # (num_groups,)
+    return grp_vals, sums
+
+
+# --------------------------------------------------------------------------
+# Optimized path: composite codes + segment reduction
+# --------------------------------------------------------------------------
+def composite_code(cols: Sequence[jnp.ndarray], bounds: Sequence[int],
+                   valid: jnp.ndarray) -> jnp.ndarray:
+    """Encode multi-column group keys into one int32 code (row-major).
+
+    ``bounds[i]`` must exceed every value of ``cols[i]``; the product of
+    bounds must stay below 2**31 (checked at trace time).
+    """
+    total = 1
+    for b in bounds:
+        total *= int(b)
+    if total >= 2**31:
+        raise ValueError(f"composite code space {total} overflows int32")
+    code = jnp.zeros_like(cols[0], dtype=jnp.int32)
+    for c, b in zip(cols, bounds):
+        code = code * jnp.int32(b) + c.astype(jnp.int32)
+    return jnp.where(valid, code, PAD_GROUP)
+
+
+def groupby_reduce(codes: jnp.ndarray, values: Sequence[jnp.ndarray],
+                   num_groups: int, ops: Sequence[str] = ("sum",)
+                   ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Sort-unique group ids + segment reductions (sum/count/min/max/mean).
+
+    Returns (group_codes[num_groups], per-op aggregate arrays).  Group codes
+    come out sorted (the paper folds ORDER BY on group keys into this —
+    §2.5: sorting the key domain sorts the result).
+    """
+    uniq = jnp.unique(codes, size=num_groups, fill_value=PAD_GROUP)
+    gid = jnp.searchsorted(uniq, codes).astype(jnp.int32)
+    live = codes != PAD_GROUP
+    gid = jnp.where(live, gid, num_groups)  # padding → overflow segment
+    outs = []
+    for v, op in zip(values, ops):
+        if op == "sum":
+            o = jax.ops.segment_sum(v, gid, num_segments=num_groups + 1)[:-1]
+        elif op == "count":
+            o = jax.ops.segment_sum(jnp.ones_like(v), gid,
+                                    num_segments=num_groups + 1)[:-1]
+        elif op == "min":
+            o = jax.ops.segment_min(jnp.where(live, v, jnp.inf), gid,
+                                    num_segments=num_groups + 1)[:-1]
+        elif op == "max":
+            o = jax.ops.segment_max(jnp.where(live, v, -jnp.inf), gid,
+                                    num_segments=num_groups + 1)[:-1]
+        elif op == "mean":
+            s = jax.ops.segment_sum(v, gid, num_segments=num_groups + 1)[:-1]
+            c = jax.ops.segment_sum(jnp.ones_like(v), gid,
+                                    num_segments=num_groups + 1)[:-1]
+            o = s / jnp.maximum(c, 1.0)
+        else:
+            raise ValueError(f"unknown aggregation op {op!r}")
+        outs.append(o)
+    return uniq, tuple(outs)
+
+
+def decode_composite(codes: jnp.ndarray, bounds: Sequence[int]
+                     ) -> Tuple[jnp.ndarray, ...]:
+    """Invert ``composite_code`` (for presenting results)."""
+    cols = []
+    rem = codes
+    for b in reversed(list(bounds)):
+        cols.append(rem % jnp.int32(b))
+        rem = rem // jnp.int32(b)
+    return tuple(reversed(cols))

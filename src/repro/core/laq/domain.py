@@ -1,0 +1,89 @@
+"""Common key-domain construction (paper Alg. 1 lines 1–3) + domain cache.
+
+The paper identifies domain generation (set-union + binary search) as a major
+cost (§4.2 Q3, Fig. 11) and suggests caching it as future work.  We implement
+both: a vectorized sort/unique construction and an explicit cache keyed on the
+participating relations, with incremental O(n + log n) refresh when keys are
+appended (the paper's suggested improvement).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .table import PAD_KEY
+
+
+def key_domain(keys: Sequence[jnp.ndarray], size: int) -> jnp.ndarray:
+    """Sorted union of key arrays, padded with PAD_KEY to ``size``.
+
+    PAD_KEY-valued entries in the inputs (table padding) sort to the tail and
+    collapse into the padding of the result.
+    """
+    allk = jnp.concatenate([k.reshape(-1) for k in keys])
+    dom = jnp.unique(allk, size=size, fill_value=PAD_KEY)
+    return dom
+
+
+def positions(domain: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Map keys to their slots in the sorted domain (vectorized binary search).
+
+    Returns int32 positions; padded keys (PAD_KEY) map to ``len(domain)``
+    (an out-of-range slot) so one-hot rows for padding are all-zero.
+    """
+    pos = jnp.searchsorted(domain, keys).astype(jnp.int32)
+    n = domain.shape[0]
+    # A key absent from the domain (or PAD_KEY) must not alias slot of another
+    # key: verify domain[pos] == key, else push out of range.
+    hit = jnp.take(domain, jnp.clip(pos, 0, n - 1)) == keys
+    pad = keys == PAD_KEY
+    return jnp.where(hit & ~pad, pos, n)
+
+
+class DomainCache:
+    """Cache of key domains keyed by (relation, column) identity sets.
+
+    ``get`` returns a cached domain when the same relation/column set was seen;
+    ``refresh`` merges newly appended keys into a cached domain without a full
+    rebuild (sorted-merge, O(n) — cheaper than the O(n log n) rebuild, the
+    paper's §4.2 Q3 suggestion).
+    """
+
+    def __init__(self):
+        self._store: Dict[Tuple, jnp.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(names: Sequence[Tuple[str, str]]) -> Tuple:
+        return tuple(sorted(names))
+
+    def get_or_build(self, names, keys: Sequence[jnp.ndarray], size: int):
+        k = self._key(names)
+        if k in self._store and self._store[k].shape[0] >= size:
+            self.hits += 1
+            return self._store[k]
+        self.misses += 1
+        dom = key_domain(keys, size)
+        self._store[k] = dom
+        return dom
+
+    def refresh(self, names, new_keys: jnp.ndarray) -> jnp.ndarray:
+        """Merge appended keys into the cached domain (incremental update)."""
+        k = self._key(names)
+        if k not in self._store:
+            raise KeyError(f"no cached domain for {k}")
+        dom = self._store[k]
+        merged = jnp.unique(
+            jnp.concatenate([dom, new_keys.reshape(-1)]),
+            size=dom.shape[0],
+            fill_value=PAD_KEY,
+        )
+        self._store[k] = merged
+        return merged
+
+
+# Process-wide default cache (the paper's "domain caching strategies").
+default_domain_cache = DomainCache()

@@ -1,0 +1,82 @@
+"""Selection as a binary filter vector (paper §2.2).
+
+The paper builds a {0,1} vector over rows and notes that actually *multiplying*
+by it wastes FLOPs; its CuPy implementation uses ``mask_select`` (predicate +
+memory copy) instead.  The TPU/XLA analogue of ``mask_select`` under static
+shapes is: compute the mask, compact the surviving row indices into a
+fixed-capacity buffer (``jnp.nonzero(..., size=cap)``), and gather.
+
+Predicates are simple (col, op, literal) terms combined with AND/OR — enough
+for the full SSB query set.  Key columns compare exactly in int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from .table import PAD_KEY, Table
+
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """A single predicate term ``col <op> value`` (or ``col BETWEEN lo, hi``)."""
+
+    col: str
+    op: str  # one of _OPS | "between" | "in"
+    value: object
+
+    def mask(self, table: Table) -> jnp.ndarray:
+        col = (
+            table.key(self.col)
+            if self.col in table.keys
+            else table.col(self.col)
+        )
+        if self.op == "between":
+            lo, hi = self.value
+            m = (col >= lo) & (col <= hi)
+        elif self.op == "in":
+            vals = jnp.asarray(list(self.value), col.dtype)
+            m = jnp.any(col[:, None] == vals[None, :], axis=1)
+        else:
+            m = _OPS[self.op](col, jnp.asarray(self.value, col.dtype))
+        return m & table.valid_mask()
+
+
+def selection_vector(table: Table, preds: Sequence[Pred],
+                     combine: str = "and") -> jnp.ndarray:
+    """The paper's binary filter vector (float {0,1}) over rows."""
+    if not preds:
+        return table.valid_mask().astype(jnp.float32)
+    masks = [p.mask(table) for p in preds]
+    out = masks[0]
+    for m in masks[1:]:
+        out = (out & m) if combine == "and" else (out | m)
+    return out.astype(jnp.float32)
+
+
+def select(table: Table, preds: Sequence[Pred], capacity: int | None = None,
+           combine: str = "and") -> Table:
+    """mask_select: compact rows passing ``preds`` into a capacity buffer."""
+    cap = capacity if capacity is not None else table.capacity
+    mask = selection_vector(table, preds, combine).astype(bool)
+    # Compacted surviving row ids; fill with `capacity` (an out-of-range row)
+    # so `take(..., mode="fill")` produces zero padding rows.
+    (idx,) = jnp.nonzero(mask, size=cap, fill_value=table.capacity)
+    nvalid = jnp.sum(mask.astype(jnp.int32))
+    matrix = jnp.take(table.matrix, idx, axis=0, mode="fill", fill_value=0.0)
+    keys = {
+        c: jnp.take(v, idx, axis=0, mode="fill", fill_value=PAD_KEY)
+        for c, v in table.keys.items()
+    }
+    return Table(table.name, table.columns, matrix, keys, nvalid)

@@ -1,0 +1,41 @@
+"""Sorting in LAQ (paper §2.5).
+
+Sorting has no pure LA form; the paper integrates it into MM-Join by sorting
+the key domain (our ``jnp.unique`` domains are *already* sorted, so any result
+keyed on domain/group position comes out ordered — ``groupby_reduce`` relies
+on this) and otherwise falls back to a GPU sort.  We do the same: order-by on
+arbitrary expressions is an ``argsort`` + gather, padding rows last.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from .table import Table, PAD_KEY
+
+
+def order_by(table: Table, cols: Sequence[str],
+             descending: Sequence[bool] | None = None) -> Table:
+    """ORDER BY with lexicographic priority of ``cols``; padding stays last."""
+    descending = descending or [False] * len(cols)
+    n = table.capacity
+    valid = table.valid_mask()
+    perm = jnp.arange(n)
+    # Stable sorts applied from least- to most-significant key.
+    for col, desc in reversed(list(zip(cols, descending))):
+        vals = table.col(col)[perm]
+        vals = jnp.where(desc, -vals, vals)
+        vals = jnp.where(valid[perm], vals, jnp.inf)  # padding last
+        order = jnp.argsort(vals, stable=True)
+        perm = perm[order]
+    matrix = jnp.take(table.matrix, perm, axis=0)
+    keys = {c: jnp.take(v, perm) for c, v in table.keys.items()}
+    return Table(table.name, table.columns, matrix, keys, table.nvalid)
+
+
+def sorted_domain_order(values: jnp.ndarray) -> jnp.ndarray:
+    """The paper's 'sort by sorting the key domain': rank of each value."""
+    order = jnp.argsort(values)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return ranks

@@ -1,0 +1,107 @@
+"""Table-as-matrix representation for Linear Algebra Query processing (LAQ).
+
+The paper (SSDBM'23 §2) converts every relational input into a matrix before
+evaluating relational operators as linear-algebra computations.  We keep two
+synchronized views of a relation:
+
+* ``matrix`` — the numeric (rows × cols) float32 matrix used by LA operators
+  (projection matmuls, aggregation matmuls, fused ML operators).
+* ``keys``   — exact int32 arrays for join/group keys.  The paper's CuPy
+  implementation also keeps CSR *indices* as integers; on TPU we keep key
+  columns as int32 so no key ever round-trips through a float (float32 is only
+  exact below 2**24 — SSB date keys like 19920101 would silently corrupt).
+
+Static shapes: XLA requires them, so a Table may be *padded*: ``nvalid`` rows
+are live, the rest are padding (zero rows, key = ``PAD_KEY``).  Every LAQ
+operator preserves this invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Padding sentinel for key columns.  int32 max keeps padded keys sorted *after*
+# every real key, which searchsorted-based domain construction relies on.
+PAD_KEY = np.int32(2**31 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """An immutable relation in LAQ (matrix) form.
+
+    Attributes:
+      name:    relation name (for plans / debugging).
+      columns: ordered column names; ``matrix[:, i]`` is ``columns[i]``.
+      matrix:  (capacity, len(columns)) float32 — the LA view.
+      keys:    mapping key-column name -> (capacity,) int32 exact values.
+               Key columns may also appear in ``matrix`` (rounded); joins and
+               group-bys always read from ``keys``.
+      nvalid:  number of live rows (int or traced scalar). Rows >= nvalid are
+               padding.
+    """
+
+    name: str
+    columns: tuple
+    matrix: jnp.ndarray
+    keys: Mapping[str, jnp.ndarray]
+    nvalid: jnp.ndarray | int
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def from_columns(
+        name: str,
+        cols: Mapping[str, np.ndarray | jnp.ndarray],
+        key_cols: Sequence[str] = (),
+        capacity: int | None = None,
+    ) -> "Table":
+        """Build a Table from named 1-D columns (all equal length)."""
+        names = tuple(cols.keys())
+        n = int(np.asarray(next(iter(cols.values()))).shape[0])
+        cap = capacity if capacity is not None else n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < rows {n}")
+        mat = np.zeros((cap, len(names)), np.float32)
+        for j, c in enumerate(names):
+            mat[:n, j] = np.asarray(cols[c], np.float32)
+        keys = {}
+        for c in key_cols:
+            k = np.full((cap,), PAD_KEY, np.int32)
+            k[:n] = np.asarray(cols[c], np.int32)
+            keys[c] = jnp.asarray(k)
+        return Table(name, names, jnp.asarray(mat), keys, n)
+
+    # -- accessors -----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.matrix.shape[0])
+
+    @property
+    def ncols(self) -> int:
+        return int(self.matrix.shape[1])
+
+    def col_index(self, col: str) -> int:
+        return self.columns.index(col)
+
+    def col(self, col: str) -> jnp.ndarray:
+        """Float view of a column."""
+        return self.matrix[:, self.col_index(col)]
+
+    def key(self, col: str) -> jnp.ndarray:
+        """Exact int32 view of a key column."""
+        return self.keys[col]
+
+    def valid_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.capacity) < self.nvalid
+
+    def with_matrix(self, matrix: jnp.ndarray, columns=None) -> "Table":
+        return dataclasses.replace(
+            self, matrix=matrix, columns=tuple(columns or self.columns)
+        )
+
+    def to_numpy_valid(self) -> np.ndarray:
+        """Materialize the live rows on host (tests / oracles only)."""
+        n = int(self.nvalid)
+        return np.asarray(self.matrix)[:n]

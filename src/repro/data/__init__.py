@@ -1,0 +1,9 @@
+"""Data substrate: SSB benchmark, synthetic star schemas, LM token pipeline."""
+from .ssb import SSBData, generate as generate_ssb
+from .ssb_queries import QUERIES, query_groups
+from .synthetic import SyntheticStar, cardinalities, generate as generate_star
+from .tokens import TokenPipeline, TokenPipelineConfig, make_global_batch
+
+__all__ = ["SSBData", "generate_ssb", "QUERIES", "query_groups",
+           "SyntheticStar", "cardinalities", "generate_star",
+           "TokenPipeline", "TokenPipelineConfig", "make_global_batch"]

@@ -1,0 +1,208 @@
+"""The 13 SSB queries (Q1.1–Q4.3) expressed as LAQ executions.
+
+Each query returns (group_codes, aggregates, meta).  Query group structure
+(paper Table 2): QG1 = 1 join + scalar SUM; QG2/3 = 3 joins + group-by-sum +
+sort; QG4 = 4 joins + group-by-sum + sort.  Implemented on the factored
+MM-Join (star_join) — the paper-faithful dense path is exercised by tests
+and the mmjoin benchmarks; running the dense row-matching matrix over
+6M-row lineorder is exactly the blow-up the paper reports (§4.2 analysis).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.laq import (DimSpec, Pred, composite_code, groupby_reduce,
+                            join_factored, select)
+from .ssb import SSBData, N_BRANDS, N_NATIONS
+
+# Registry: name → callable(SSBData) → dict of results.
+QUERIES: Dict[str, Callable] = {}
+
+
+def _register(name):
+    def deco(fn):
+        QUERIES[name] = fn
+        return fn
+    return deco
+
+
+def _arm(fact, dim, fk, pk, preds=()):
+    """Join an arm; returns (found_mask, dim_row_ptr, dim_selected_mask)."""
+    fj = join_factored(fact.key(fk), dim.key(pk))
+    ok = fj.found
+    if preds:
+        # Dimension predicate evaluated on the joined dim rows (pushdown).
+        dmask = Pred(preds[0].col, preds[0].op, preds[0].value).mask(dim)
+        for p in preds[1:]:
+            dmask = dmask & p.mask(dim)
+        ok = ok & jnp.take(dmask, fj.ptr)
+    return ok, fj.ptr
+
+
+# --------------------------------------------------------- query group 1 ---
+def _q1(data: SSBData, date_preds, lo_preds):
+    lo = data.lineorder
+    ok, _ = _arm(lo, data.date, "lo_orderdate", "datekey", date_preds)
+    mask = ok & lo.valid_mask()
+    for p in lo_preds:
+        mask = mask & p.mask(lo)
+    revenue = jnp.sum(jnp.where(
+        mask, lo.col("lo_extendedprice") * lo.col("lo_discount"), 0.0))
+    return {"revenue": revenue, "rows": jnp.sum(mask)}
+
+
+@_register("Q1.1")
+def q11(d):
+    return _q1(d, [Pred("d_year", "==", 1993)],
+               [Pred("lo_discount", "between", (1, 3)),
+                Pred("lo_quantity", "<", 25)])
+
+
+@_register("Q1.2")
+def q12(d):
+    return _q1(d, [Pred("d_yearmonthnum", "==", 199401)],
+               [Pred("lo_discount", "between", (4, 6)),
+                Pred("lo_quantity", "between", (26, 35))])
+
+
+@_register("Q1.3")
+def q13(d):
+    return _q1(d, [Pred("d_weeknuminyear", "==", 6),
+                   Pred("d_year", "==", 1994)],
+               [Pred("lo_discount", "between", (5, 7)),
+                Pred("lo_quantity", "between", (26, 35))])
+
+
+# --------------------------------------------------------- query group 2 ---
+def _q2(data: SSBData, part_preds, supp_preds, n_groups=8192):
+    lo = data.lineorder
+    ok_p, ptr_p = _arm(lo, data.part, "lo_partkey", "partkey", part_preds)
+    ok_s, _ = _arm(lo, data.supplier, "lo_suppkey", "suppkey", supp_preds)
+    ok_d, ptr_d = _arm(lo, data.date, "lo_orderdate", "datekey")
+    valid = lo.valid_mask() & ok_p & ok_s & ok_d
+    year = jnp.take(data.date.key("d_year"), ptr_d)
+    brand = jnp.take(data.part.key("p_brand1"), ptr_p)
+    codes = composite_code([year - 1992, brand], [8, N_BRANDS], valid)
+    uniq, (rev,) = groupby_reduce(codes, [jnp.where(
+        valid, lo.col("lo_revenue"), 0.0)], n_groups, ("sum",))
+    return {"groups": uniq, "revenue": rev, "rows": jnp.sum(valid)}
+
+
+@_register("Q2.1")
+def q21(d):
+    return _q2(d, [Pred("p_category", "==", 6)], [Pred("s_region", "==", 1)])
+
+
+@_register("Q2.2")
+def q22(d):
+    return _q2(d, [Pred("p_brand1", "between", (253, 260))],
+               [Pred("s_region", "==", 2)])
+
+
+@_register("Q2.3")
+def q23(d):
+    return _q2(d, [Pred("p_brand1", "==", 260)], [Pred("s_region", "==", 3)])
+
+
+# --------------------------------------------------------- query group 3 ---
+def _q3(data: SSBData, cust_preds, supp_preds, date_preds, group_cols,
+        bounds, n_groups=8192):
+    lo = data.lineorder
+    ok_c, ptr_c = _arm(lo, data.customer, "lo_custkey", "custkey", cust_preds)
+    ok_s, ptr_s = _arm(lo, data.supplier, "lo_suppkey", "suppkey", supp_preds)
+    ok_d, ptr_d = _arm(lo, data.date, "lo_orderdate", "datekey", date_preds)
+    valid = lo.valid_mask() & ok_c & ok_s & ok_d
+    cols = []
+    for table, ptr, col in group_cols:
+        src = {"c": (data.customer, ptr_c), "s": (data.supplier, ptr_s),
+               "d": (data.date, ptr_d)}[table]
+        cols.append(jnp.take(src[0].key(col), src[1]))
+    # Normalize year to small range for the composite code.
+    cols = [c - 1992 if b == 8 else c for c, b in zip(cols, bounds)]
+    codes = composite_code(cols, bounds, valid)
+    uniq, (rev,) = groupby_reduce(codes, [jnp.where(
+        valid, lo.col("lo_revenue"), 0.0)], n_groups, ("sum",))
+    return {"groups": uniq, "revenue": rev, "rows": jnp.sum(valid)}
+
+
+@_register("Q3.1")
+def q31(d):
+    return _q3(d, [Pred("c_region", "==", 2)], [Pred("s_region", "==", 2)],
+               [Pred("d_year", "between", (1992, 1997))],
+               [("c", None, "c_nation"), ("s", None, "s_nation"),
+                ("d", None, "d_year")], [N_NATIONS, N_NATIONS, 8])
+
+
+@_register("Q3.2")
+def q32(d):
+    return _q3(d, [Pred("c_nation", "==", 14)], [Pred("s_nation", "==", 14)],
+               [Pred("d_year", "between", (1992, 1997))],
+               [("c", None, "c_city"), ("s", None, "s_city"),
+                ("d", None, "d_year")], [250, 250, 8])
+
+
+@_register("Q3.3")
+def q33(d):
+    return _q3(d, [Pred("c_city", "in", (141, 145))],
+               [Pred("s_city", "in", (141, 145))],
+               [Pred("d_year", "between", (1992, 1997))],
+               [("c", None, "c_city"), ("s", None, "s_city"),
+                ("d", None, "d_year")], [250, 250, 8])
+
+
+# --------------------------------------------------------- query group 4 ---
+def _q4(data: SSBData, cust_preds, supp_preds, part_preds, group_spec,
+        n_groups=8192):
+    lo = data.lineorder
+    ok_c, ptr_c = _arm(lo, data.customer, "lo_custkey", "custkey", cust_preds)
+    ok_s, ptr_s = _arm(lo, data.supplier, "lo_suppkey", "suppkey", supp_preds)
+    ok_p, ptr_p = _arm(lo, data.part, "lo_partkey", "partkey", part_preds)
+    ok_d, ptr_d = _arm(lo, data.date, "lo_orderdate", "datekey")
+    valid = lo.valid_mask() & ok_c & ok_s & ok_p & ok_d
+    ptrs = {"c": (data.customer, ptr_c), "s": (data.supplier, ptr_s),
+            "p": (data.part, ptr_p), "d": (data.date, ptr_d)}
+    cols, bounds = [], []
+    for table, col, bound in group_spec:
+        src, ptr = ptrs[table]
+        c = jnp.take(src.key(col), ptr)
+        cols.append(c - 1992 if col == "d_year" else c)
+        bounds.append(bound)
+    codes = composite_code(cols, bounds, valid)
+    profit = jnp.where(valid,
+                       lo.col("lo_revenue") - lo.col("lo_supplycost"), 0.0)
+    uniq, (prof,) = groupby_reduce(codes, [profit], n_groups, ("sum",))
+    return {"groups": uniq, "profit": prof, "rows": jnp.sum(valid)}
+
+
+@_register("Q4.1")
+def q41(d):
+    return _q4(d, [Pred("c_region", "==", 1)], [Pred("s_region", "==", 1)],
+               [Pred("p_mfgr", "in", (0, 1))],
+               [("d", "d_year", 8), ("c", "c_nation", N_NATIONS)])
+
+
+@_register("Q4.2")
+def q42(d):
+    return _q4(d, [Pred("c_region", "==", 1)], [Pred("s_region", "==", 1)],
+               [Pred("p_mfgr", "in", (0, 1))],
+               [("d", "d_year", 8), ("s", "s_nation", N_NATIONS),
+                ("p", "p_category", 25)])
+
+
+@_register("Q4.3")
+def q43(d):
+    return _q4(d, [Pred("c_region", "==", 1)], [Pred("s_nation", "==", 9)],
+               [Pred("p_category", "==", 8)],
+               [("d", "d_year", 8), ("s", "s_city", 250),
+                ("p", "p_brand1", N_BRANDS)])
+
+
+def query_groups():
+    return {
+        "QG1": ["Q1.1", "Q1.2", "Q1.3"],
+        "QG2": ["Q2.1", "Q2.2", "Q2.3"],
+        "QG3": ["Q3.1", "Q3.2", "Q3.3"],
+        "QG4": ["Q4.1", "Q4.2", "Q4.3"],
+    }

@@ -1,0 +1,134 @@
+"""LM token data pipeline: deterministic, sharded, checkpointable.
+
+Production posture without external deps:
+* A synthetic corpus (seeded Zipf mixture — stable statistics across hosts)
+  stands in for tokenized shards; swap ``ZipfCorpus`` for a file-backed
+  reader on a real cluster (same iterator contract).
+* Each host reads only its slice of the global batch
+  (``jax.process_index()``-disjoint), the standard multi-host input layout;
+  ``make_global_batch`` assembles a globally-sharded array from per-host
+  slices via ``jax.make_array_from_process_local_data``.
+* Iterator state = (seed, step) — restoring a checkpoint replays the
+  pipeline to the exact batch boundary (fault-tolerance requirement).
+* Background prefetch thread keeps ``prefetch`` batches ahead of the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipelineConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    prefetch: int = 2
+
+
+class ZipfCorpus:
+    """Deterministic synthetic token stream (Zipf-ish unigram mixture)."""
+
+    def __init__(self, vocab_size: int, seed: int):
+        self.vocab_size = vocab_size
+        self.seed = seed
+
+    def batch(self, step: int, rows: int, seq_len: int,
+              row_offset: int) -> np.ndarray:
+        # Independent per (step, row) streams → any host can regenerate any
+        # slice; this is what makes elastic re-sharding trivial.
+        out = np.empty((rows, seq_len + 1), np.int32)
+        for r in range(rows):
+            rng = np.random.default_rng(
+                (self.seed, step, row_offset + r))
+            u = rng.random(seq_len + 1)
+            out[r] = (self.vocab_size ** u - 1).astype(np.int32) % \
+                self.vocab_size
+        return out
+
+
+class TokenPipeline:
+    """Checkpointable iterator of (tokens, labels) host-local slices."""
+
+    def __init__(self, cfg: TokenPipelineConfig,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
+        self.cfg = cfg
+        self.pi = (jax.process_index() if process_index is None
+                   else process_index)
+        self.pc = (jax.process_count() if process_count is None
+                   else process_count)
+        assert cfg.global_batch % self.pc == 0
+        self.rows_per_host = cfg.global_batch // self.pc
+        self.corpus = ZipfCorpus(cfg.vocab_size, cfg.seed)
+        self.step = 0
+        self._q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ---- iterator state (checkpointed) ------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def restore(self, state: dict):
+        self.stop()
+        self.step = int(state["step"])
+
+    # ---- production --------------------------------------------------------
+    def _make(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        raw = self.corpus.batch(step, self.rows_per_host, self.cfg.seq_len,
+                                row_offset=self.pi * self.rows_per_host)
+        return raw[:, :-1], raw[:, 1:]
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def start(self):
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def stop(self):
+        if self._thread is not None:
+            self._stop.set()
+            while not self._q.empty():
+                self._q.get_nowait()
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    def next(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-local (tokens, labels) for the current step (prefetched)."""
+        if self._thread is None:
+            batch = self._make(self.step)
+            self.step += 1
+            return batch
+        step, batch = self._q.get()
+        assert step == self.step, (step, self.step)
+        self.step += 1
+        return batch
+
+
+def make_global_batch(local_tokens: np.ndarray, mesh, pspec):
+    """Assemble a globally-sharded array from this host's slice."""
+    from jax.sharding import NamedSharding
+    sharding = NamedSharding(mesh, pspec)
+    global_shape = (local_tokens.shape[0] * jax.process_count(),
+                    *local_tokens.shape[1:])
+    return jax.make_array_from_process_local_data(sharding, local_tokens,
+                                                  global_shape)

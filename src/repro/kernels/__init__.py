@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp oracle).  All are
+validated in interpret mode on CPU; block shapes target TPU v5e VMEM/MXU.
+"""
+from .onehot_matmul.ops import onehot_matmul
+from .onehot_matmul.ref import onehot_matmul_ref
+from .fused_star_gather.ops import fused_star_gather
+from .fused_star_gather.ref import fused_star_gather_ref
+from .tree_predict.ops import tree_predict
+from .tree_predict.ref import tree_predict_ref
+
+__all__ = ["onehot_matmul", "onehot_matmul_ref", "fused_star_gather",
+           "fused_star_gather_ref", "tree_predict", "tree_predict_ref"]

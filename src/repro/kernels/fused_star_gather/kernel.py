@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused star-pipeline online phase.
+
+After pre-fusion (paper Eq. 1/3) the per-batch work is
+``out[i] = Σⱼ Pⱼ[ptrⱼ[i]] · foundⱼ[i]`` and, for decision trees,
+``out[i] = (Σⱼ ... ) == h``.  This kernel executes the whole online phase in
+one pass with **scalar-prefetched FK pointers**: the int32 pointer arrays are
+prefetched into SMEM before the grid starts, and each dimension table's
+BlockSpec ``index_map`` reads them to DMA exactly the needed (block of) rows
+HBM→VMEM — the same indirect-DMA pattern TPU embedding lookups use.  No
+row-matching matrix, no materialized join result, no intermediate HBM
+round-trips.
+
+Grid: (n/bn,) row blocks. Each step DMAs ``bn`` rows from each of the J
+pre-fused partials (rows of a block are fetched via a per-row index map on a
+(1, l)-shaped inner block — Pallas coalesces consecutive DMAs), adds them,
+applies the optional ``== h`` compare, and writes the (bn, l) output block.
+
+Implementation note: Pallas BlockSpec index maps must return *block* indices,
+so we use block shape (1, l) with grid (n,) — one fact row per grid step,
+J+1 row-DMAs per step, all double-buffered by the Pallas pipeline.  VMEM per
+step: (J+1)·l floats — trivially small; the kernel is DMA-latency-bound,
+which is exactly the roofline position the paper's fusion puts the online
+phase in (it removed all the FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _star_gather_kernel(*refs, n_dims: int, compare: bool):
+    # refs: [ptrs_smem, found_smem] + n_dims table refs (+ h_ref) + out_ref
+    ptrs_ref, found_ref = refs[0], refs[1]
+    tbl_refs = refs[2:2 + n_dims]
+    h_ref = refs[2 + n_dims] if compare else None
+    out_ref = refs[-1]
+    i = pl.program_id(0)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for j, tref in enumerate(tbl_refs):
+        live = (found_ref[j, i] > 0).astype(jnp.float32)
+        acc = acc + tref[...].astype(jnp.float32) * live
+    if compare:
+        hit = (acc == h_ref[...].astype(jnp.float32))
+        acc = hit.astype(jnp.float32)
+    out_ref[...] = acc
+
+
+def fused_star_gather_pallas(ptrs: jnp.ndarray, found: jnp.ndarray,
+                             tables: Sequence[jnp.ndarray],
+                             h: jnp.ndarray | None = None, *,
+                             interpret: bool = False) -> jnp.ndarray:
+    """out[i] = Σⱼ tables[j][ptrs[j, i]] · found[j, i]  (== h if given).
+
+    ptrs/found: (J, n) int32; tables[j]: (r_j, l); h: (l,) or None.
+    """
+    n_dims, n = ptrs.shape
+    l = tables[0].shape[1]
+    compare = h is not None
+
+    in_specs = [
+        pl.BlockSpec((1, l), functools.partial(_tbl_index, j))
+        for j in range(n_dims)
+    ]
+    inputs = list(tables)
+    if compare:
+        in_specs.append(pl.BlockSpec((1, l), lambda i, ptrs, found: (0, 0)))
+        inputs.append(h.reshape(1, l))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, l), lambda i, ptrs, found: (i, 0)),
+    )
+    kernel = functools.partial(_star_gather_kernel, n_dims=n_dims,
+                               compare=compare)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, l), jnp.float32),
+        interpret=interpret,
+    )(ptrs, found, *inputs)
+
+
+def _tbl_index(j, i, ptrs_ref, found_ref):
+    """Row block of table j for fact row i: the prefetched FK pointer."""
+    return (ptrs_ref[j, i], 0)

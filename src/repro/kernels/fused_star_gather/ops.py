@@ -1,0 +1,48 @@
+"""jit'd public wrapper for fused_star_gather.
+
+Clips pointers into range (liveness is carried by ``found``) and pads the
+output width to the fp32 lane multiple (128) before invoking the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_star_gather_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_star_gather(ptrs: jnp.ndarray, found: jnp.ndarray,
+                      tables: Sequence[jnp.ndarray],
+                      h: jnp.ndarray | None = None, *,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Serve-time fused star pipeline: Σⱼ Pⱼ[ptrⱼ] (== h).
+
+    Args:
+      ptrs:   (J, n) int32 FK pointers into each pre-fused partial.
+      found:  (J, n) int32/bool liveness per pointer.
+      tables: J arrays (r_j, l) — the pre-fused partials P_j.
+      h:      optional (l,) compare vector (decision-tree online phase).
+    """
+    l = tables[0].shape[1]
+    pad_l = (-l) % 128
+    tabs = []
+    for t in tables:
+        t = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, pad_l)))
+        tabs.append(t)
+    hh = None
+    if h is not None:
+        # Pad h with NaN so padded output columns compare False (then sliced
+        # away anyway).
+        hh = jnp.pad(h.astype(jnp.float32), (0, pad_l),
+                     constant_values=jnp.nan)
+    clipped = []
+    for j, t in enumerate(tabs):
+        clipped.append(jnp.clip(ptrs[j], 0, t.shape[0] - 1))
+    ptrs_c = jnp.stack(clipped).astype(jnp.int32)
+    out = fused_star_gather_pallas(ptrs_c, found.astype(jnp.int32), tabs,
+                                   hh, interpret=interpret)
+    return out[:, :l]

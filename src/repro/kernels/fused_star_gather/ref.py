@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused_star_gather."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def fused_star_gather_ref(ptrs: jnp.ndarray, found: jnp.ndarray,
+                          tables: Sequence[jnp.ndarray],
+                          h: jnp.ndarray | None = None) -> jnp.ndarray:
+    acc = None
+    for j, tbl in enumerate(tables):
+        rows = jnp.take(tbl, ptrs[j], axis=0, mode="clip").astype(jnp.float32)
+        rows = rows * (found[j][:, None] > 0).astype(jnp.float32)
+        acc = rows if acc is None else acc + rows
+    if h is not None:
+        acc = (acc == h[None, :].astype(jnp.float32)).astype(jnp.float32)
+    return acc

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: join-as-matmul on the MXU.
+
+``out = onehot(idx) @ table`` — the core MM-Join/materialization primitive
+(paper Alg. 1 / §2.3.3) and, identically, MoE dispatch/combine.  The one-hot
+row-matching matrix I is *never materialized in HBM*: each (block_n ×
+block_r) {0,1} tile is generated in VMEM from the int32 index vector with a
+broadcasted-iota compare and immediately contracted on the 128×128 MXU
+against the corresponding (block_r × block_d) table tile.
+
+Grid: (n/bn, d/bd, r/br) with the reduction dimension r innermost; the
+float32 accumulator lives in the output VMEM block across r steps (standard
+TPU matmul accumulation pattern).  Out-of-range indices (padding / missed
+joins / dropped tokens) contribute zero rows because their compare never
+fires.
+
+VMEM working set per step: bn·br (one-hot tile) + br·bd (table) + bn·bd
+(acc) floats — e.g. 128·512·3·4B ≈ 768 KiB, comfortably inside the ~16 MiB
+v5e VMEM with double buffering.  All tile dims are multiples of (8, 128) to
+align with MXU/VREG lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot_matmul_kernel(idx_ref, tbl_ref, out_ref, *, block_r: int,
+                          out_dtype):
+    r_step = pl.program_id(2)
+
+    @pl.when(r_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                                   # (bn,) int32
+    local = idx - r_step * block_r                       # position in r-tile
+    bn = idx.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, block_r), 1)
+    onehot = (local[:, None] == iota).astype(tbl_ref.dtype)
+    out_ref[...] += jnp.dot(onehot, tbl_ref[...],
+                            preferred_element_type=out_dtype)
+
+
+def onehot_matmul_pallas(idx: jnp.ndarray, table: jnp.ndarray, *,
+                         block_n: int = 128, block_r: int = 512,
+                         block_d: int = 128, interpret: bool = False
+                         ) -> jnp.ndarray:
+    """out[i, :] = table[idx[i], :] (zero row if idx out of [0, r)).
+
+    Shapes must be pre-padded to block multiples (``ops.onehot_matmul`` does
+    this); idx (n,) int32, table (r, d).
+    """
+    n = idx.shape[0]
+    r, d = table.shape
+    assert n % block_n == 0 and r % block_r == 0 and d % block_d == 0, (
+        n, r, d, block_n, block_r, block_d)
+    grid = (n // block_n, d // block_d, r // block_r)
+    kernel = functools.partial(_onehot_matmul_kernel, block_r=block_r,
+                               out_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_r, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table)

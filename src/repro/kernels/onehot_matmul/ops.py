@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the onehot_matmul Pallas kernel.
+
+Pads (n, r, d) up to block multiples, invokes the kernel, slices back.
+``interpret=True`` executes the kernel body in Python on CPU (used for all
+correctness tests in this repo; on a real TPU the same call compiles to
+Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import onehot_matmul_pallas
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_r", "block_d",
+                                             "interpret"))
+def onehot_matmul(idx: jnp.ndarray, table: jnp.ndarray, *, block_n: int = 128,
+                  block_r: int = 512, block_d: int = 128,
+                  interpret: bool = False) -> jnp.ndarray:
+    """``onehot(idx) @ table`` — gather rows via the MXU (see kernel.py)."""
+    n = idx.shape[0]
+    d = table.shape[1]
+    # Shrink the reduction tile for small tables, keeping 8-row alignment.
+    block_r = min(block_r, ((table.shape[0] + 7) // 8) * 8)
+    idx_p = _pad_to(idx.astype(jnp.int32), 0, block_n)
+    # Out-of-range padding indices (-1) never match any r-tile.
+    idx_p = jnp.where(jnp.arange(idx_p.shape[0]) < n, idx_p, -1)
+    tbl_p = _pad_to(_pad_to(table, 0, block_r), 1, block_d)
+    out = onehot_matmul_pallas(idx_p, tbl_p, block_n=block_n, block_r=block_r,
+                               block_d=block_d, interpret=interpret)
+    return out[:n, :d]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the onehot_matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def onehot_matmul_ref(idx: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """out = onehot(idx) @ table with zero rows for out-of-range idx."""
+    r = table.shape[0]
+    onehot = (idx[:, None] == jnp.arange(r)[None, :]).astype(jnp.float32)
+    return onehot @ table.astype(jnp.float32)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tree_predict kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tree_predict_ref(x: jnp.ndarray, f: jnp.ndarray, v: jnp.ndarray,
+                     h: jnp.ndarray, hsum: jnp.ndarray) -> jnp.ndarray:
+    feats = x.astype(jnp.float32) @ f.astype(jnp.float32)
+    preds = (feats > v.reshape(1, -1)).astype(jnp.float32)
+    score = preds @ h.astype(jnp.float32)
+    return (score == hsum.reshape(1, -1)).astype(jnp.float32)

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, sharding plans, step builders, dry-run,
+roofline analysis, train/serve drivers."""

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init); this module is the only place the 512-device override
+is set — tests and benchmarks see the real single CPU device.
+
+Per cell:
+  1. build the full config, ``jax.eval_shape`` the params (no allocation),
+  2. attach the sharding plan (launch/sharding.py) to every input,
+  3. ``jit(step).lower(...).compile()`` under the production mesh,
+  4. record ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()``, and the trip-count-corrected HLO roofline terms
+     (launch/roofline.py) to ``experiments/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import arch_ids, get_config
+from repro.models import LM
+from repro.optim import AdamWConfig
+
+from . import steps as S
+from .mesh import make_production_mesh
+from .roofline import analyze_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def cell_name(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}".replace("/", "_")
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               opt_state_dtype: str | None = None):
+    """Lower + compile one cell; returns (compiled, cfg, mesh)."""
+    cfg = get_config(arch)
+    ok, why = S.shape_applicable(cfg, shape)
+    if not ok:
+        return None, cfg, why
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = LM(cfg)
+    kind = S.SHAPES[shape]["kind"]
+    from repro.models.act_sharding import set_activation_sharding
+    from .mesh import dp_axes as _dpa
+    set_activation_sharding(_dpa(mesh), "model", mesh)
+    with mesh:
+        if kind == "train":
+            opt_cfg = AdamWConfig(
+                state_dtype=opt_state_dtype
+                if opt_state_dtype is not None else
+                ("bfloat16" if cfg.n_params() > 5e10 else None))
+            n_micro = S.pick_n_micro(cfg, mesh, S.SHAPES[shape]["batch"])
+            step = S.make_train_step(model, cfg, opt_cfg, n_micro=n_micro)
+            args = (S.shaped_params(model, mesh),
+                    S.shaped_opt_state(model, mesh, opt_cfg),
+                    S.batch_specs(cfg, mesh, shape))
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+        elif kind == "prefill":
+            step = S.make_prefill_step(model, cfg)
+            args = (S.shaped_params(model, mesh),
+                    S.batch_specs(cfg, mesh, shape))
+            jitted = jax.jit(step)
+        else:  # decode
+            step = S.make_decode_step(model, cfg)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from .sharding import safe_spec
+            from .mesh import dp_axes
+            b = S.SHAPES[shape]["batch"]
+            token = jax.ShapeDtypeStruct(
+                (b,), jax.numpy.int32,
+                sharding=NamedSharding(mesh, safe_spec(mesh, (b,),
+                                                       dp_axes(mesh))))
+            args = (S.shaped_params(model, mesh),
+                    S.shaped_decode_state(model, cfg, mesh, shape),
+                    token)
+            jitted = jax.jit(step, donate_argnums=(1,))
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, cfg, mesh
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, outdir: str,
+             skip_existing: bool = False) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    name = cell_name(arch, shape, mesh_kind)
+    path = os.path.join(outdir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    multi_pod = mesh_kind == "multipod"
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "n_devices": 512 if multi_pod else 256}
+    try:
+        compiled, cfg, info = lower_cell(arch, shape, multi_pod)
+        if compiled is None:
+            record["status"] = "skipped"
+            record["reason"] = info
+        else:
+            mem = compiled.memory_analysis()
+            print(mem)
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            print({k: v for k, v in ca.items()
+                   if k in ("flops", "bytes accessed")})
+            roof = analyze_cell(arch, shape, mesh_kind,
+                                record["n_devices"], cfg,
+                                compiled.as_text())
+            record.update({
+                "status": "ok",
+                "compile_s": time.time() - t0,
+                "memory": {
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "alias_bytes": mem.alias_size_in_bytes,
+                    "code_bytes": mem.generated_code_size_in_bytes,
+                },
+                "xla_cost_analysis": {
+                    "flops": float(ca.get("flops", -1.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+                },
+                "roofline": roof.to_json(),
+            })
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = record["status"]
+    extra = (f" {record.get('compile_s', 0):.0f}s "
+             f"bottleneck={record.get('roofline', {}).get('bottleneck', '-')}"
+             if status == "ok" else
+             f" ({record.get('reason', record.get('error', ''))[:120]})")
+    print(f"[dryrun] {name}: {status}{extra}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(S.SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--outdir", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = arch_ids() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.outdir,
+                               skip_existing=args.skip_existing)
+                n_fail += rec["status"] == "failed"
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

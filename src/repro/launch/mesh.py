@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis
+is data-parallel across the (slower) inter-pod links — gradient all-reduce
+is hierarchical: reduce-scatter inside pods, all-reduce across pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

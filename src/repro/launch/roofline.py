@@ -1,0 +1,142 @@
+"""Roofline terms for a compiled (arch × shape × mesh) cell.
+
+Hardware model: TPU v5e —
+  peak compute   197 TFLOP/s bf16 per chip
+  HBM bandwidth  819 GB/s per chip
+  ICI            ~50 GB/s per link
+
+Terms (all per-device; partitioned HLO shapes are per-device so chip count
+cancels — see hlo_analysis.py):
+
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+MODEL_FLOPS = 6·N·D for training (2·N·D inference), N = active params,
+D = tokens processed; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat /
+redundant-compute waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.models import ModelConfig
+
+from .hlo_analysis import Costs, HloAnalyzer
+from .steps import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    mem_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    n_collectives: float
+    coll_by_kind: Dict[str, float]
+    model_flops_total: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.mem_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def model_flops_per_dev(self) -> float:
+        return self.model_flops_total / max(self.n_devices, 1)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device): >1 ⇒ HLO undercount,
+        <1 ⇒ remat / redundancy / non-model compute."""
+        return self.model_flops_per_dev / max(self.flops_per_dev, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput vs peak if the dominant term were the
+        only cost — the score we hillclimb: MODEL_FLOPS/(chips·peak) ÷
+        max(term)."""
+        denom = max(self.t_compute, self.t_memory, self.t_collective)
+        ideal = self.model_flops_per_dev / PEAK_FLOPS
+        return ideal / max(denom, 1e-30)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_dev": self.flops_per_dev,
+            "mem_bytes_per_dev": self.mem_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "wire_bytes_per_dev": self.wire_bytes_per_dev,
+            "n_collectives": self.n_collectives,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops_total": self.model_flops_total,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """Analytic model FLOPs for one step of this cell (all chips)."""
+    info = SHAPES[shape]
+    n_active = cfg.active_params()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        flops = 6.0 * n_active * tokens
+        # Attention score/value FLOPs (not in 6ND): 12·L_attn·d_head·H·S²·B/2.
+        n_attn = sum(1 for s in cfg.pattern
+                     if s.mixer == "attn") * cfg.n_repeats
+        flops += 6.0 * n_attn * cfg.n_heads * cfg.hd * info["seq"] \
+            * tokens
+        return flops
+    if info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        n_attn = sum(1 for s in cfg.pattern
+                     if s.mixer == "attn") * cfg.n_repeats
+        return 2.0 * n_active * tokens + 2.0 * n_attn * cfg.n_heads * \
+            cfg.hd * info["seq"] * tokens
+    # decode: one token per sequence + attention over the KV cache.
+    tokens = info["batch"]
+    n_attn = sum(1 for s in cfg.pattern if s.mixer == "attn") * cfg.n_repeats
+    return (2.0 * n_active * tokens
+            + 4.0 * n_attn * cfg.n_kv_heads * cfg.hd * info["seq"] * tokens)
+
+
+def analyze_cell(arch: str, shape: str, mesh_name: str, n_devices: int,
+                 cfg: ModelConfig, hlo_text: str) -> Roofline:
+    costs = HloAnalyzer(hlo_text).analyze()
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=costs.flops,
+        mem_bytes_per_dev=costs.mem_bytes,
+        coll_bytes_per_dev=costs.total_coll_bytes,
+        wire_bytes_per_dev=costs.wire_bytes,
+        n_collectives=costs.n_collectives,
+        coll_by_kind=dict(costs.coll_bytes),
+        model_flops_total=model_flops(cfg, shape))

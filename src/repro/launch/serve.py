@@ -1,0 +1,130 @@
+"""Serving driver: the paper's predictive pipeline, end to end.
+
+Batched requests carry foreign keys into a star schema.  The request path:
+
+  1. **LAQ + operator fusion** (the paper's contribution): per-request
+     feature vectors are produced by the *pre-fused* star pipeline —
+     Σⱼ Iⱼ(Bⱼ Mⱼ L) — gathers + adds, no join materialization, no separate
+     ML runtime (paper Eq. 1 / §3.2).
+  2. Optionally, an LM consumes the fused features as a conditioning
+     vector (soft-prompt added to the first token embedding) and decodes
+     a fixed number of tokens with KV caches.
+
+Runs on a laptop CPU (smoke configs) and lowers/compiles identically on
+the production mesh (decode cells of the dry-run).  Reports per-batch
+latency percentiles for fused vs non-fused execution — the paper's
+speedup, measured end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.fusion import (LinearOperator, plan_fusion, predict_fused,
+                               predict_nonfused, prefuse)
+from repro.core.laq import star_join
+from repro.data import generate_star
+from repro.models import LM
+
+
+class FusedFeatureServer:
+    """The paper's pipeline as a serving component."""
+
+    def __init__(self, setting: int, sf: float, k: int, l: int,
+                 scale: float = 1.0, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.syn = generate_star(setting, sf, k, seed=seed, scale=scale)
+        self.model = LinearOperator(
+            jnp.asarray(rng.normal(size=(k, l)).astype(np.float32)))
+        self.decision = plan_fusion(self.model, self.syn.n_fact,
+                                    self.syn.dim_rows)
+        self.prefused = prefuse(self.syn.star, self.model)
+        self._fused = jax.jit(lambda: predict_fused(self.syn.star,
+                                                    self.prefused))
+        self._nonfused = jax.jit(lambda: predict_nonfused(self.syn.star,
+                                                          self.model))
+
+    def features_fused(self):
+        return self._fused()
+
+    def features_nonfused(self):
+        return self._nonfused()
+
+
+def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
+                repeats: int = 20):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    server = FusedFeatureServer(setting=2, sf=1, k=k, l=min(l, cfg.d_model),
+                                scale=0.05)
+    print(f"[serve] fusion planner: fuse={server.decision.fuse} "
+          f"({server.decision.reason})")
+
+    # Conditioning projection: fused features → d_model soft prompt.
+    rng = np.random.default_rng(1)
+    proj = jnp.asarray(rng.normal(
+        size=(server.model.l, cfg.d_model)).astype(np.float32)) * 0.01
+
+    decode = jax.jit(lm.decode_step)
+
+    def serve_batch(fused: bool):
+        t0 = time.perf_counter()
+        feats = (server.features_fused() if fused
+                 else server.features_nonfused())
+        cond = (feats[:batch] @ proj)                     # (batch, d_model)
+        state = lm.init_decode_state(params, batch, max_len=decode_steps + 1)
+        token = jnp.zeros((batch,), jnp.int32)
+        # Soft-prompt injection: add the conditioning vector to the first
+        # embedding via a one-step biased decode.
+        logits, state = decode(params, state, token)
+        out = []
+        for _ in range(decode_steps):
+            token = jnp.argmax(logits + (cond @ lm.head_matrix(params)
+                                         .astype(cond.dtype)), axis=-1)
+            logits, state = decode(params, state, token.astype(jnp.int32))
+            out.append(token)
+        jax.block_until_ready(logits)
+        return time.perf_counter() - t0, jnp.stack(out, 1)
+
+    lat_fused, lat_non = [], []
+    tokens_fused = tokens_non = None
+    for i in range(repeats):
+        dt, tokens_fused = serve_batch(fused=True)
+        lat_fused.append(dt)
+        dt, tokens_non = serve_batch(fused=False)
+        lat_non.append(dt)
+    # Identical predictions either way (fusion is exact — paper Eq. 1).
+    np.testing.assert_array_equal(np.asarray(tokens_fused),
+                                  np.asarray(tokens_non))
+
+    def pct(a, p):
+        return float(np.percentile(np.asarray(a[2:]) * 1e3, p))
+
+    print(f"[serve] batch={batch} decode={decode_steps} "
+          f"fused p50={pct(lat_fused,50):.1f}ms p99={pct(lat_fused,99):.1f}ms"
+          f" | non-fused p50={pct(lat_non,50):.1f}ms "
+          f"p99={pct(lat_non,99):.1f}ms")
+    return lat_fused, lat_non
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--k", type=int, default=64)
+    ap.add_argument("--l", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=10)
+    args = ap.parse_args()
+    run_serving(args.arch, args.batch, args.decode_steps, args.k, args.l,
+                args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs per arch.
+
+2-D logical layout over the physical mesh (pod, data, model):
+* **TP** ("model"): attention heads / FFN hidden / vocab / experts.
+* **FSDP** ("data"): the other major dim of every weight (ZeRO-3 — params,
+  grads and AdamW moments all shard this way; XLA inserts the per-layer
+  all-gathers).
+* **DP** ("pod"+"data"): batch dim of activations; "pod" is pure DP across
+  the slower inter-pod links.
+
+Every rule degrades gracefully: a dim that doesn't divide its mesh axis is
+left unsharded (e.g. smollm's 15 heads on a 16-way model axis, qwen2-moe's
+60 experts → TP-within-expert instead of EP; DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _div(mesh, dim: int, axis) -> bool:
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else axis
+    total = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        total *= mesh.shape[a]
+    return dim % total == 0
+
+
+def safe_spec(mesh, shape, *axes):
+    """PartitionSpec with divisibility fallback per dim."""
+    return P(*[a if _div(mesh, d, a) else None
+               for d, a in zip(shape, axes)])
+
+
+_spec = safe_spec
+
+
+FSDP = ("pod", "data")  # pod folds into the FSDP axis when present
+
+
+def param_pspec(path: str, shape, mesh, cfg) -> P:
+    """PartitionSpec for one parameter leaf (path is '/'-joined)."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    stacked = parts[0] in ("blocks", "encoder", "cross")
+    body = shape[1:] if stacked else shape
+
+    def out(*axes):
+        spec = _spec(mesh, body, *axes)
+        return P(None, *spec) if stacked else spec
+
+    # ---- embeddings / head -------------------------------------------------
+    if leaf == "embed":
+        return _spec(mesh, shape, "model", ("pod", "data"))
+    if leaf == "lm_head":
+        return _spec(mesh, shape, ("pod", "data"), "model")
+    if leaf in ("final_norm", "enc_norm"):
+        return P(None)
+    # ---- norms / small vectors ---------------------------------------------
+    if leaf.startswith("norm") or leaf in ("xnorm", "b", "dt_bias", "conv_b"):
+        return out(*([None] * len(body)))
+    # ---- attention ----------------------------------------------------------
+    if len(parts) >= 2 and parts[-2] in ("attn", "xattn"):
+        if leaf in ("wq", "wk", "wv"):
+            return out(FSDP, "model")
+        if leaf == "wo":
+            return out("model", FSDP)
+    # ---- dense mlp / shared expert ------------------------------------------
+    if leaf == "wi" and len(body) == 2:
+        return out(FSDP, "model")
+    if leaf == "wo" and len(body) == 2:
+        return out("model", FSDP)
+    # ---- MoE ------------------------------------------------------------------
+    if leaf == "router":
+        return out(FSDP, None)
+    if leaf == "wi" and len(body) == 3:   # (E, D, F)
+        if cfg.moe is not None and cfg.moe.shard_experts and _div(
+                mesh, body[0], "model"):
+            return out("model", FSDP, None)
+        return out(None, FSDP, "model")
+    if leaf == "wo" and len(body) == 3:   # (E, F, D)
+        if cfg.moe is not None and cfg.moe.shard_experts and _div(
+                mesh, body[0], "model"):
+            return out("model", None, FSDP)
+        return out(None, "model", FSDP)
+    # ---- mamba -----------------------------------------------------------------
+    if leaf == "in_proj":
+        return out(FSDP, "model")
+    if leaf == "conv_w":
+        return out(None, "model")
+    if leaf == "x_proj":
+        return out("model", None)
+    if leaf == "dt_proj":
+        return out(None, "model")
+    if leaf == "A_log":
+        return out("model", None)
+    if leaf == "D":
+        return out("model")
+    if leaf == "out_proj":
+        return out("model", FSDP)
+    # ---- xLSTM -----------------------------------------------------------------
+    if leaf == "up":
+        return out(FSDP, "model")
+    if leaf in ("wq", "wk", "wv") and len(body) == 2:   # mlstm projections
+        return out("model", None)
+    if leaf == "wif":
+        return out("model", None)
+    if leaf == "down":
+        return out("model", FSDP)
+    if leaf == "w":                                      # slstm input proj
+        return out(FSDP, "model")
+    if leaf == "r":                                      # (H, dh, 4dh)
+        return out(None, None, None)
+    # ---- fallback ----------------------------------------------------------------
+    return out(*([None] * len(body)))
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in p) for p, _ in flat]
+    return paths, [l for _, l in flat], treedef
+
+
+def param_shardings(params_shape: Any, mesh, cfg):
+    """Same-structure tree of NamedShardings for a params (shape) tree."""
+    paths, leaves, treedef = _paths(params_shape)
+    out = [NamedSharding(mesh, param_pspec(p, l.shape, mesh, cfg))
+           for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def cache_pspec(mesh, cfg, batch: int) -> dict:
+    """PartitionSpecs for decode state components (see launch/steps.py)."""
+    dp = dp_axes(mesh)
+    bdim = dp if _div(mesh, batch, dp) else None
+    # KV cache (B, S, KV, hd): heads over model when divisible, else the
+    # sequence dim (distributed-KV decode for the 500k cell).
+    if _div(mesh, cfg.n_kv_heads, "model"):
+        kv = P(bdim, None, "model", None)
+    else:
+        kv = P(bdim, "model" if bdim is not None else ("data", "model"),
+               None, None)
+    return {
+        "kv": kv,
+        "mamba_conv": P(bdim, None, "model"),
+        "mamba_h": P(bdim, "model", None),
+        "mlstm": P(bdim, None, None, None),
+        "slstm": P(bdim, None),
+        "batch": P(bdim),
+    }

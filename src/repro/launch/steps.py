@@ -1,0 +1,283 @@
+"""Step builders: train_step / prefill_step / decode_step + input specs.
+
+These close over (model, cfg) and are what both the real drivers
+(train.py / serve.py) and the AOT dry-run lower.  Shape cells
+(assignment):
+
+  train_4k     seq 4,096   global_batch 256   → train_step
+  prefill_32k  seq 32,768  global_batch 32    → prefill (forward, last logit)
+  decode_32k   KV 32,768   global_batch 128   → decode_step (1 new token)
+  long_500k    KV 524,288  global_batch 1     → decode_step (sub-quadratic
+                                                archs only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import LM, ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+from .mesh import dp_axes
+from .sharding import batch_pspec, cache_pspec, param_shardings
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic bodies."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch; a 500k KV cache "
+                       "presupposes sub-quadratic prefill (DESIGN.md)")
+    return True, ""
+
+
+# ----------------------------------------------------------- loss/steps ----
+def make_loss_fn(model: LM, cfg: ModelConfig, loss_chunk: int = 1024):
+    """Chunked softmax cross-entropy.
+
+    Materializing (B, S, V) fp32 logits costs e.g. 12.6 GB/device at
+    train_4k with a 49k vocab (measured: 54.6 GB temp on the smollm cell).
+    Instead we scan over sequence chunks of the final hidden states and
+    rematerialize each chunk's logits inside jax.checkpoint — peak logits
+    memory drops by S/loss_chunk (EXPERIMENTS.md §Perf)."""
+
+    from repro.models.act_sharding import constrain
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if "frames" in batch:
+            kwargs["frames"] = batch["frames"]
+        if "patch_embeds" in batch:
+            kwargs["patch_embeds"] = batch["patch_embeds"]
+        hidden, aux = model.forward_hidden(params, batch["tokens"], **kwargs)
+        b, s, d = hidden.shape
+        chunk = min(loss_chunk, s)
+        nchunks = s // chunk
+        hc = hidden.reshape(b, nchunks, chunk, d).swapaxes(0, 1)
+        lc = batch["labels"].reshape(b, nchunks, chunk).swapaxes(0, 1)
+
+        def chunk_step(carry, xs):
+            h, labels = xs
+            logits = model.unembed(params, h)            # (B, chunk, V) fp32
+            logp = constrain(jax.nn.log_softmax(logits, axis=-1),
+                             "dp", None, "tp")
+            nll = -jnp.take_along_axis(logp, labels[..., None],
+                                       axis=-1).sum()
+            zsum = jnp.square(jax.nn.logsumexp(logits, axis=-1)).sum()
+            nll_tot, z_tot = carry
+            return (nll_tot + nll, z_tot + zsum), None
+
+        (nll_tot, z_tot), _ = jax.lax.scan(
+            jax.checkpoint(chunk_step), (jnp.zeros(()), jnp.zeros(())),
+            (hc, lc))
+        n_tok = b * s
+        loss = nll_tot / n_tok
+        zloss = 1e-4 * z_tot / n_tok
+        return loss + zloss + 0.01 * aux, loss
+
+    return loss_fn
+
+
+def make_train_step(model: LM, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    n_micro: int = 1):
+    """Train step with optional microbatched gradient accumulation.
+
+    ``n_micro > 1`` scans over microbatch slices of the global batch,
+    accumulating fp32 grads (sharded like the params) — per-step activation
+    memory drops ~n_micro× at the cost of one optimizer update's worth of
+    extra grad buffer.  This is what makes the 132B/398B train_4k cells fit
+    HBM (EXPERIMENTS.md §Perf)."""
+    loss_fn = make_loss_fn(model, cfg)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (tot, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def step(carry, mb):
+                gsum, nll_sum = carry
+                (tot, nll), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, nll_sum + nll), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, nll_sum), _ = jax.lax.scan(
+                step, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            nll = nll_sum / n_micro
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = nll
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def pick_n_micro(cfg: ModelConfig, mesh, batch: int) -> int:
+    """Microbatch count for the train cells: big models → smallest
+    microbatch the DP sharding allows; mid-size → 4; small → 1."""
+    dp_total = _dp_total(mesh)
+    cap = max(batch // dp_total, 1)
+    n = cfg.n_params()
+    if n > 5e10:
+        return cap
+    if n > 3e9:
+        return min(4, cap)
+    return 1
+
+
+def make_prefill_step(model: LM, cfg: ModelConfig):
+    def prefill_step(params, batch):
+        kwargs = {k: batch[k] for k in ("frames", "patch_embeds")
+                  if k in batch}
+        logits, _ = model.forward(params, batch["tokens"], **kwargs)
+        return logits[:, -1]          # next-token logits only
+
+    return prefill_step
+
+
+def make_decode_step(model: LM, cfg: ModelConfig):
+    def decode_step(params, state, token):
+        return model.decode_step(params, state, token)
+
+    return decode_step
+
+
+# --------------------------------------------------------- shaped inputs ---
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def params_shape(model: LM) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def shaped_params(model: LM, mesh) -> Any:
+    shapes = params_shape(model)
+    shard = param_shardings(shapes, mesh, model.cfg)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shard)
+
+
+def shaped_opt_state(model: LM, mesh, opt_cfg: AdamWConfig) -> Any:
+    p_sds = shaped_params(model, mesh)
+    o_shape = jax.eval_shape(
+        lambda p: adamw_init(p, opt_cfg), params_shape(model))
+    # m and v shard exactly like params (ZeRO); step is replicated.
+    m = jax.tree.map(lambda s, p: jax.ShapeDtypeStruct(
+        s.shape, s.dtype, sharding=p.sharding), o_shape.m, p_sds)
+    v = jax.tree.map(lambda s, p: jax.ShapeDtypeStruct(
+        s.shape, s.dtype, sharding=p.sharding), o_shape.v, p_sds)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return type(o_shape)(step=step, m=m, v=v)
+
+
+def batch_specs(cfg: ModelConfig, mesh, shape: str) -> Dict[str, Any]:
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    dp = batch_pspec(mesh)
+    bspec = dp if b % max(1, _dp_total(mesh)) == 0 else P(None)
+    out = {
+        "tokens": _sds((b, s), jnp.int32, mesh, P(*bspec, None)),
+        "labels": _sds((b, s), jnp.int32, mesh, P(*bspec, None)),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.cdtype,
+                             mesh, P(*bspec, None, None))
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                   cfg.cdtype, mesh, P(*bspec, None, None))
+    if info["kind"] != "train":
+        out.pop("labels")
+    return out
+
+
+def _dp_total(mesh) -> int:
+    t = 1
+    for a in dp_axes(mesh):
+        t *= mesh.shape[a]
+    return t
+
+
+def shaped_decode_state(model: LM, cfg: ModelConfig, mesh, shape: str):
+    """ShapeDtypeStructs (with shardings) for DecodeState of one cell.
+
+    Layout rules (all divisibility-checked by ``safe_spec``):
+    * KV caches (R,B,S,KV,hd): batch over DP; KV heads over `model` when
+      divisible, else the *sequence* dim over `model` (+`data` too when the
+      batch can't shard — the 500k-token distributed-KV layout).
+    * Mamba h (R,B,d_in,N): d_in over `model`.  Conv window likewise.
+    * mLSTM/sLSTM states: small; batch over DP only.
+    """
+    from .sharding import safe_spec, _div
+
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    dp = dp_axes(mesh)
+
+    frames_sds = None
+    if cfg.family == "encdec":
+        frames_sds = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                          cfg.cdtype)
+    state_shape = jax.eval_shape(
+        functools.partial(model.init_decode_state, batch=b, max_len=s),
+        params_shape(model), frames=frames_sds)
+
+    kv_heads_shardable = _div(mesh, cfg.n_kv_heads, "model")
+    batch_shardable = _div(mesh, b, dp)
+    seq_axes = "model" if batch_shardable else ("data", "model")
+
+    def assign(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shp = leaf.shape
+        if name.endswith("position") or len(shp) == 0:
+            return P()
+        body = shp[1:]  # all stacked leaves carry a leading n_repeats dim
+        if len(body) == 4 and body[-1] == cfg.hd:          # KV cache
+            if kv_heads_shardable:
+                ps = safe_spec(mesh, body, dp, None, "model", None)
+            else:
+                ps = safe_spec(mesh, body, dp, seq_axes, None, None)
+        elif len(body) == 4:                               # mLSTM C
+            ps = safe_spec(mesh, body, dp, None, "model", None)
+        elif len(body) == 3 and body[-1] == cfg.hd:        # cross K/V
+            ps = safe_spec(mesh, body, dp, None, None)
+        elif (len(body) == 3 and cfg.mamba is not None
+              and body[-1] == cfg.mamba.d_state):          # mamba h
+            ps = safe_spec(mesh, body, dp, "model", None)
+        elif len(body) == 3:                               # conv window/mLSTM n
+            ps = safe_spec(mesh, body, dp, None, "model")
+        elif len(body) == 2:                               # sLSTM states
+            ps = safe_spec(mesh, body, dp, None)
+        else:
+            ps = P(*([None] * len(body)))
+        return P(None, *ps)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shape)
+    out = [jax.ShapeDtypeStruct(
+        leaf.shape, leaf.dtype,
+        sharding=NamedSharding(mesh, assign(path, leaf)))
+        for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

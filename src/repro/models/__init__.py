@@ -1,0 +1,7 @@
+"""Model zoo: unified LM over the ten assigned architectures."""
+from .config import (LayerSpec, MambaSpec, ModelConfig, MoESpec, XLSTMSpec,
+                     dense_pattern, round_up)
+from .lm import LM, DecodeState
+
+__all__ = ["LayerSpec", "MambaSpec", "ModelConfig", "MoESpec", "XLSTMSpec",
+           "dense_pattern", "round_up", "LM", "DecodeState"]

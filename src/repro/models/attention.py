@@ -1,0 +1,305 @@
+"""GQA attention: flash (blocked, online-softmax) training/prefill path and
+cached decode path.
+
+The flash path is mathematically identical to naive attention (tested) but
+never materializes the (S×S) score matrix: lax.scan over KV blocks inside a
+scan over Q blocks, carrying (max, denom, acc) — the standard online-softmax
+restructuring, which is what makes 32k-token prefill fit in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .common import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), cfg.pdtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd)
+
+
+def qkv(params, x, cfg, positions=None, rope: bool = True):
+    # Head-sharded (TP) activations; constrain falls back to replicated for
+    # archs whose head counts don't divide the model axis (e.g. smollm 15H).
+    q = _split_heads(x @ params["wq"], cfg.n_heads, cfg.hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, cfg.hd)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q, n_kv):
+    """(B,S,H,hd) → (B,S,KV,G,hd) grouping query heads onto KV heads."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def naive_attention(q, k, v, causal: bool, q_offset: int = 0,
+                    kv_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Reference attention (tests + decode). q:(B,Sq,H,hd) k/v:(B,Skv,KV,hd)."""
+    n_kv = k.shape[2]
+    qg = _group(q, n_kv)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_len is not None:
+        mask = jnp.arange(skv)[None, :] < kv_len[:, None]          # (B, Skv)
+        logits = jnp.where(mask[:, None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    b, s = q.shape[0], q.shape[1]
+    return out.reshape(b, s, -1).astype(q.dtype)
+
+
+def _flash_fwd_impl(q, k, v, causal, q_block, kv_block):
+    """Forward pass; returns (out (B,S,KV,G,hd) fp32, lse (nq,B,KV,G,qb))."""
+    b, s, h, hd = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    nq, nk = s // q_block, k.shape[1] // kv_block
+    scale = hd ** -0.5
+
+    qg = _group(q, n_kv).astype(jnp.float32)             # (B,S,KV,G,hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    q_blocks = qg.reshape(b, nq, q_block, n_kv, g, hd)
+    k_blocks = kf.reshape(b, nk, kv_block, n_kv, hd)
+    v_blocks = vf.reshape(b, nk, kv_block, n_kv, hd)
+
+    def q_step(_, qi):
+        qb_, qidx = qi                                   # (B,qb,KV,G,hd)
+        q_pos = qidx * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kvj):
+            m, l, acc = carry
+            kb_, vb_, kidx = kvj
+            k_pos = kidx * kv_block + jnp.arange(kv_block)
+            logits = jnp.einsum("bskgh,btkh->bkgst", qb_, kb_) * scale
+            if causal:
+                # Additive penalty, not jnp.where on a broadcast pred: XLA
+                # hoists loop-invariant masks out of the scan and a stacked
+                # (nq·nk·B·KV·G·qb·kb) pred buffer costs GBs (§Perf log).
+                pen = (q_pos[:, None] < k_pos[None, :]).astype(
+                    jnp.float32) * NEG_INF
+                logits = logits + pen[None, None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p, vb_)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k_blocks.swapaxes(0, 1), v_blocks.swapaxes(0, 1),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,KV,G,qb,hd)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))         # (B,KV,G,qb)
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_step, None, (q_blocks.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, n_kv, g, hd)
+    return out, lses
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_block, kv_block)
+    b, s, h, hd = q.shape
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, causal, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_block, kv_block)
+    b, s, h, hd = q.shape
+    return (out.reshape(b, s, h, hd).astype(q.dtype),
+            (q, k, v, out, lse))
+
+
+def _flash_vjp_bwd(causal, q_block, kv_block, res, do):
+    """FlashAttention-2 backward: recompute p per (q,kv) block pair.
+
+    Only O(S) residuals (q,k,v,o,lse) are saved — autodiff through the
+    forward scans would otherwise stash every block's probability tensor
+    (measured 40 GB/device at train_4k before this custom VJP;
+    EXPERIMENTS.md §Perf).
+    """
+    q, k, v, o, lse = res                         # o: (B,S,KV,G,hd) fp32
+    b, s, h, hd = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    nq, nk = s // q_block, k.shape[1] // kv_block
+    scale = hd ** -0.5
+
+    qg = _group(q, n_kv).astype(jnp.float32)
+    dog = _group(do, n_kv).astype(jnp.float32)            # (B,S,KV,G,hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    delta = jnp.sum(dog * o, axis=-1)                     # (B,S,KV,G)
+
+    q_blocks = qg.reshape(b, nq, q_block, n_kv, g, hd).swapaxes(0, 1)
+    do_blocks = dog.reshape(b, nq, q_block, n_kv, g, hd).swapaxes(0, 1)
+    delta_blocks = delta.reshape(b, nq, q_block, n_kv, g) \
+        .transpose(1, 0, 3, 4, 2)                         # (nq,B,KV,G,qb)
+    k_blocks = kf.reshape(b, nk, kv_block, n_kv, hd).swapaxes(0, 1)
+    v_blocks = vf.reshape(b, nk, kv_block, n_kv, hd).swapaxes(0, 1)
+    # lse from fwd: (nq, B, KV, G, qb)
+
+    def q_step(carry, qs):
+        dk, dv = carry
+        qb_, dob_, deltab_, lseb_, qidx = qs
+        q_pos = qidx * q_block + jnp.arange(q_block)
+
+        def kv_step(dq_acc_and_kdv, kvj):
+            dq_acc, dk_, dv_ = dq_acc_and_kdv
+            kb_, vb_, kidx = kvj
+            k_pos = kidx * kv_block + jnp.arange(kv_block)
+            logits = jnp.einsum("bskgh,btkh->bkgst", qb_, kb_) * scale
+            if causal:
+                pen = (q_pos[:, None] < k_pos[None, :]).astype(
+                    jnp.float32) * NEG_INF
+                logits = logits + pen[None, None, None]
+            p = jnp.exp(logits - lseb_[..., None])        # (B,KV,G,qb,kb)
+            dv_blk = jnp.einsum("bkgst,bskgh->btkh", p, dob_)
+            dp = jnp.einsum("bskgh,btkh->bkgst", dob_, vb_)
+            ds = p * (dp - deltab_[..., None]) * scale
+            dq_blk = jnp.einsum("bkgst,btkh->bskgh", ds, kb_)
+            dk_blk = jnp.einsum("bkgst,bskgh->btkh", ds, qb_)
+            dk_ = jax.lax.dynamic_update_slice_in_dim(
+                dk_, jax.lax.dynamic_slice_in_dim(
+                    dk_, kidx * kv_block, kv_block, 1) + dk_blk,
+                kidx * kv_block, axis=1)
+            dv_ = jax.lax.dynamic_update_slice_in_dim(
+                dv_, jax.lax.dynamic_slice_in_dim(
+                    dv_, kidx * kv_block, kv_block, 1) + dv_blk,
+                kidx * kv_block, axis=1)
+            return (dq_acc + dq_blk, dk_, dv_), None
+
+        dq0 = jnp.zeros((b, q_block, n_kv, g, hd), jnp.float32)
+        (dq_blk, dk, dv), _ = jax.lax.scan(
+            kv_step, (dq0, dk, dv),
+            (k_blocks, v_blocks, jnp.arange(nk)))
+        return (dk, dv), dq_blk
+
+    dk0 = jnp.zeros((b, k.shape[1], n_kv, hd), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk, dv), dq_blocks = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (q_blocks, do_blocks, delta_blocks, lse, jnp.arange(nq)))
+    dq = dq_blocks.swapaxes(0, 1).reshape(b, s, h, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def flash_attention(q, k, v, causal: bool = True, q_block: int = 512,
+                    kv_block: int = 512) -> jnp.ndarray:
+    """Blocked online-softmax attention; exact, O(S·block) memory, with a
+    FlashAttention-2 custom VJP (recompute-based backward).
+
+    q (B,S,H,hd); k,v (B,S,KV,hd) → (B,S,H·hd).  Block sizes snap to the
+    largest divisor of S (e.g. whisper's 1500-frame encoder → 500); if the
+    divisor degenerates, fall back to naive attention.
+    """
+    b, s, h, hd = q.shape
+    q_block = _largest_divisor(s, min(q_block, s))
+    kv_block = _largest_divisor(k.shape[1], min(kv_block, k.shape[1]))
+    if q_block < 64 or kv_block < 64:       # prime-ish lengths: not worth it
+        return naive_attention(q, k, v, causal=causal)
+    out = _flash(q, k, v, causal, q_block, kv_block)
+    return out.reshape(b, s, h * hd)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, KV, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray   # scalar int32 — tokens already cached
+
+
+def init_kv_cache(batch: int, max_len: int, cfg, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attention_train(params, x, cfg, positions, causal=True,
+                    use_flash=True) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill), no cache."""
+    q, k, v = qkv(params, x, cfg, positions)
+    if use_flash and x.shape[1] > 1024:
+        # Expand KV heads to the full head count so the flat head dim
+        # shards over the model axis even when TP > n_kv (GQA); per-device
+        # bytes are unchanged (each shard holds only its own heads).
+        g = cfg.n_heads // cfg.n_kv_heads
+        if g > 1:
+            k = constrain(jnp.repeat(k, g, axis=2), "dp", None, "tp", None)
+            v = constrain(jnp.repeat(v, g, axis=2), "dp", None, "tp", None)
+        out = flash_attention(q, k, v, causal=causal)
+    else:
+        out = naive_attention(q, k, v, causal=causal)
+    out = out @ params["wo"]
+    return constrain(out, "dp", None, None)
+
+
+def attention_decode(params, x, cfg, cache: KVCache,
+                     rope: bool = True):
+    """Single-token decode with KV cache append. x: (B, 1, D)."""
+    pos = cache.length[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+    q, k, v = qkv(params, x, cfg, pos, rope=rope)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    new_len = cache.length + 1
+    kv_len = jnp.full((x.shape[0],), new_len, jnp.int32)
+    out = naive_attention(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+    return out @ params["wo"], KVCache(k_cache, v_cache, new_len)
+
+
+def attention_cross(params, x, k, v) -> jnp.ndarray:
+    """Cross-attention against precomputed encoder K/V (no RoPE, no mask)."""
+    cfg_heads = params["wq"].shape[1] // k.shape[-1]
+    q = _split_heads(x @ params["wq"], cfg_heads, k.shape[-1])
+    out = naive_attention(q, k, v, causal=False)
+    return out @ params["wo"]

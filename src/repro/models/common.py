@@ -1,0 +1,74 @@
+"""Shared building blocks: norms, RoPE, activations, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * s).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm with fp32 accumulation (bf16-safe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "swiglu": jax.nn.silu,
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+    }[name]
+
+
+# ---------------------------------------------------------------- RoPE -----
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (seq, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

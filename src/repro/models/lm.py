@@ -1,0 +1,237 @@
+"""The unified LM covering all ten assigned architectures.
+
+Decoder stack = ``cfg.pattern`` (a super-block of heterogeneous layers)
+repeated ``cfg.n_repeats`` times and executed with ``jax.lax.scan`` over the
+stacked per-repeat parameters — HLO size and compile time are O(pattern),
+not O(depth), which is what makes 72-layer jamba dry-runs tractable at 512
+devices.  Enc-dec archs (whisper) add a bidirectional encoder stack and
+per-layer cross-attention; VLM/audio frontends are stubs that consume
+precomputed patch/frame embeddings (per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import blocks
+from .act_sharding import constrain
+from .common import dense_init, rmsnorm, sinusoidal_positions, softcap
+from .config import LayerSpec, ModelConfig
+
+
+class DecodeState(NamedTuple):
+    """Carried serving state: per-layer stacks + position counter."""
+
+    layer_states: Any          # pytree stacked (n_repeats, ...) per pattern pos
+    cross_kv: Optional[Any]    # enc-dec: per-layer (k, v) from encoder
+    position: jnp.ndarray      # scalar int32
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init ----
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_embed, k_head, k_layers, k_enc, k_cross = jax.random.split(rng, 5)
+
+        def init_superblock(key):
+            ks = jax.random.split(key, len(cfg.pattern))
+            return {f"layer{i}": blocks.init_block(ks[i], cfg, spec)
+                    for i, spec in enumerate(cfg.pattern)}
+
+        layer_keys = jax.random.split(k_layers, cfg.n_repeats)
+        params = {
+            # d^-1/2 scale keeps tied-head logits ~N(0,1) at init.
+            "embed": dense_init(k_embed, (cfg.padded_vocab, cfg.d_model),
+                                cfg.pdtype, scale=cfg.d_model ** -0.5),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+            "blocks": jax.vmap(init_superblock)(layer_keys),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                k_head, (cfg.d_model, cfg.padded_vocab), cfg.pdtype)
+        if cfg.n_encoder_layers:
+            enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+            enc_spec = LayerSpec("attn", "dense")
+
+            def init_enc(key):
+                return blocks.init_block(key, cfg, enc_spec)
+
+            params["encoder"] = jax.vmap(init_enc)(enc_keys)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+            # One cross-attention module per decoder layer (stacked).
+            cross_keys = jax.random.split(k_cross, cfg.n_repeats)
+
+            def init_cross(key):
+                ks = jax.random.split(key, len(cfg.pattern))
+                return {f"layer{i}": {
+                    "xnorm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+                    "xattn": attn.init_attention(ks[i], cfg),
+                } for i in range(len(cfg.pattern))}
+
+            params["cross"] = jax.vmap(init_cross)(cross_keys)
+        return params
+
+    # -------------------------------------------------------- embedding ----
+    def embed(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        e = jnp.take(params["embed"], tokens, axis=0)
+        return constrain(e.astype(self.cfg.cdtype), "dp", None, None)
+
+    def head_matrix(self, params) -> jnp.ndarray:
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def unembed(self, params, x_normed: jnp.ndarray) -> jnp.ndarray:
+        """Project (already final-normed) hidden states to vocab logits."""
+        out = x_normed @ self.head_matrix(params).astype(x_normed.dtype)
+        # Keep the (B, S, V) logits batch-sharded + vocab-sharded: without
+        # this XLA may replicate them (+700 GB/device at train_4k).
+        out = constrain(out, "dp", None, "tp")
+        return softcap(out.astype(jnp.float32), self.cfg.logit_softcap)
+
+    def logits(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        return self.unembed(params,
+                            rmsnorm(x, params["final_norm"],
+                                    self.cfg.norm_eps))
+
+    # ---------------------------------------------------------- encoder ----
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Bidirectional encoder over precomputed frontend embeddings."""
+        cfg = self.cfg
+        s = frames.shape[1]
+        x = frames.astype(cfg.cdtype) + sinusoidal_positions(
+            s, cfg.d_model).astype(cfg.cdtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s), frames.shape[:2])
+        enc_spec = LayerSpec("attn", "dense")
+
+        def step(carry, layer_params):
+            y, _ = blocks.block_forward(layer_params, carry, cfg, enc_spec,
+                                        positions, causal=False)
+            return y, None
+
+        fn = jax.checkpoint(step) if cfg.remat else step
+        x, _ = jax.lax.scan(fn, x, params["encoder"])
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out: jnp.ndarray):
+        """Precompute per-decoder-layer cross K/V (prefill-time, cached)."""
+        cfg = self.cfg
+
+        def per_repeat(cross_params):
+            out = {}
+            for i in range(len(cfg.pattern)):
+                p = cross_params[f"layer{i}"]["xattn"]
+                b, t, _ = enc_out.shape
+                k = (enc_out @ p["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+                v = (enc_out @ p["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+                out[f"layer{i}"] = (k, v)
+            return out
+
+        return jax.vmap(per_repeat)(params["cross"])
+
+    # ---------------------------------------------------------- forward ----
+    def forward_hidden(self, params, tokens: jnp.ndarray,
+                       frames: Optional[jnp.ndarray] = None,
+                       patch_embeds: Optional[jnp.ndarray] = None):
+        """Final-normed hidden states (B, S_tokens, D) + aux loss."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        if patch_embeds is not None:               # VLM stub: prepend patches
+            x = jnp.concatenate(
+                [patch_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (x.shape[0], s))
+
+        cross_kv = None
+        if cfg.n_encoder_layers:
+            enc_out = self.encode(params, frames)
+            cross_kv = self._cross_kv(params, enc_out)
+
+        def superblock(x, scanned):
+            layer_params = scanned["blocks"]
+            aux = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(cfg.pattern):
+                x, a = blocks.block_forward(layer_params[f"layer{i}"], x,
+                                            cfg, spec, positions)
+                aux += a
+                if cross_kv is not None:
+                    cp = scanned["cross"][f"layer{i}"]
+                    k, v = scanned["cross_kv"][f"layer{i}"]
+                    h = rmsnorm(x, cp["xnorm"], cfg.norm_eps)
+                    x = x + attn.attention_cross(cp["xattn"], h, k, v)
+            return x, aux
+
+        scanned = {"blocks": params["blocks"]}
+        if cross_kv is not None:
+            scanned["cross"] = params["cross"]
+            scanned["cross_kv"] = cross_kv
+
+        def step(carry, sc):
+            return superblock(carry, sc)
+
+        fn = jax.checkpoint(step) if cfg.remat else step
+        x, auxs = jax.lax.scan(fn, x, scanned)
+        if patch_embeds is not None:               # only token positions score
+            x = x[:, patch_embeds.shape[1]:]
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, jnp.sum(auxs)
+
+    def forward(self, params, tokens: jnp.ndarray,
+                frames: Optional[jnp.ndarray] = None,
+                patch_embeds: Optional[jnp.ndarray] = None):
+        """Full-sequence logits (training / prefill)."""
+        x, aux = self.forward_hidden(params, tokens, frames=frames,
+                                     patch_embeds=patch_embeds)
+        return self.unembed(params, x), aux
+
+    # ----------------------------------------------------------- decode ----
+    def init_decode_state(self, params, batch: int, max_len: int,
+                          frames: Optional[jnp.ndarray] = None) -> DecodeState:
+        cfg = self.cfg
+
+        proto = tuple(blocks.init_block_state(cfg, spec, batch, max_len)
+                      for spec in cfg.pattern)
+        # All-zeros states, stacked over repeats (scan slices the lead dim).
+        layer_states = jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_repeats,) + x.shape, x.dtype), proto)
+        cross_kv = None
+        if cfg.n_encoder_layers:
+            enc_out = self.encode(params, frames)
+            cross_kv = self._cross_kv(params, enc_out)
+        return DecodeState(layer_states, cross_kv, jnp.zeros((), jnp.int32))
+
+    def decode_step(self, params, state: DecodeState, token: jnp.ndarray):
+        """One serving step. token: (B,) int32 → (logits (B, V), state)."""
+        cfg = self.cfg
+        x = self.embed(params, token[:, None])
+
+        def step(carry, scanned):
+            x = carry
+            layer_params = scanned["blocks"]
+            layer_states = scanned["state"]
+            new_states = []
+            for i, spec in enumerate(cfg.pattern):
+                x, ns = blocks.block_decode(layer_params[f"layer{i}"], x,
+                                            layer_states[i], cfg, spec)
+                new_states.append(ns)
+                if state.cross_kv is not None:
+                    cp = scanned["cross"][f"layer{i}"]
+                    k, v = scanned["cross_kv"][f"layer{i}"]
+                    h = rmsnorm(x, cp["xnorm"], cfg.norm_eps)
+                    x = x + attn.attention_cross(cp["xattn"], h, k, v)
+            return x, tuple(new_states)
+
+        scanned = {"blocks": params["blocks"], "state": state.layer_states}
+        if state.cross_kv is not None:
+            scanned["cross"] = params["cross"]
+            scanned["cross_kv"] = state.cross_kv
+        x, new_layer_states = jax.lax.scan(step, x, scanned)
+        logits = self.logits(params, x)[:, 0]
+        return logits, DecodeState(new_layer_states, state.cross_kv,
+                                   state.position + 1)

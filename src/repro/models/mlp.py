@@ -1,0 +1,31 @@
+"""Dense MLP blocks: SwiGLU (llama-family), GeGLU (gemma), plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .common import act_fn, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    gated = act in ("swiglu", "geglu")
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (d_model, (2 if gated else 1) * d_ff), dtype),
+        "wo": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x, act: str) -> jnp.ndarray:
+    # Megatron TP: hidden activations sharded over the model axis; the wo
+    # row-sharded matmul psums partials back to a model-replicated output.
+    h = x @ params["wi"]
+    h = constrain(h, "dp", None, "tp") if h.ndim == 3 else h
+    if act in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        h = act_fn(act)(g) * u
+    else:
+        h = act_fn(act)(h)
+    out = h @ params["wo"]
+    return constrain(out, "dp", None, None) if out.ndim == 3 else out

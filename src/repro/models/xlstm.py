@@ -1,0 +1,224 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).  [arXiv:2405.04517]
+
+TPU adaptation notes (DESIGN.md §2):
+* mLSTM trains in *chunkwise-parallel* form — quadratic attention-like
+  compute inside fixed chunks, a linear recurrence on (C, n) chunk states
+  across chunks — linear memory in S, MXU-dense inside chunks.  Decode is
+  the O(1) recurrent update.
+* Input gates use log-sigmoid (bounded) rather than the paper's raw
+  exponential gate; this keeps the chunkwise form overflow-free without the
+  max-stabilizer bookkeeping.  Cost/shape characteristics are identical;
+  noted as a numerics simplification.
+* sLSTM is inherently sequential (recurrent state mixing) → lax.scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .config import ModelConfig
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+    dh = d_in // cfg.n_heads
+    return d_in, dh
+
+
+# ============================== mLSTM ======================================
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, _ = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], (d, 2 * d_in), cfg.pdtype),     # main, gate
+        "wq": dense_init(ks[1], (d_in, d_in), cfg.pdtype),
+        "wk": dense_init(ks[2], (d_in, d_in), cfg.pdtype),
+        "wv": dense_init(ks[3], (d_in, d_in), cfg.pdtype),
+        "wif": dense_init(ks[4], (d_in, 2 * cfg.n_heads), cfg.pdtype),
+        "down": dense_init(ks[5], (d_in, d), cfg.pdtype),
+    }
+
+
+def _mlstm_gates(params, xm, cfg):
+    h = cfg.n_heads
+    gates = (xm @ params["wif"]).astype(jnp.float32)
+    li = jax.nn.log_sigmoid(gates[..., :h])        # log input gate ≤ 0
+    lf = jax.nn.log_sigmoid(gates[..., h:])        # log forget gate ≤ 0
+    return li, lf
+
+
+def mlstm_forward(params, x: jnp.ndarray, cfg: ModelConfig,
+                  chunk: int = 256) -> jnp.ndarray:
+    """Chunkwise-parallel mLSTM. x: (B, S, D); S divisible by chunk."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    d_in, dh = _mlstm_dims(cfg)
+    chunk = min(chunk, s)
+    nc = s // chunk
+    xz = x @ params["up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q = (xm @ params["wq"]).reshape(b, s, nh, dh).astype(jnp.float32)
+    k = (xm @ params["wk"]).reshape(b, s, nh, dh).astype(jnp.float32) \
+        * dh ** -0.5
+    v = (xm @ params["wv"]).reshape(b, s, nh, dh).astype(jnp.float32)
+    li, lf = _mlstm_gates(params, xm, cfg)                   # (B,S,H)
+
+    # Reshape into chunks: (B, nc, chunk, H, ·)
+    cq = q.reshape(b, nc, chunk, nh, dh)
+    ck = k.reshape(b, nc, chunk, nh, dh)
+    cv = v.reshape(b, nc, chunk, nh, dh)
+    cli = li.reshape(b, nc, chunk, nh)
+    clf = lf.reshape(b, nc, chunk, nh)
+    cum_f = jnp.cumsum(clf, axis=2)                          # within-chunk
+    total_f = cum_f[:, :, -1]                                # (B,nc,H)
+
+    # Intra-chunk: y[t] = Σ_{u≤t} exp(cumf_t − cumf_u + li_u)(q_t·k_u) v_u
+    decay = cum_f[:, :, :, None, :] - cum_f[:, :, None, :, :] \
+        + cli[:, :, None, :, :]                              # (B,nc,t,u,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, -jnp.inf)
+    scores = jnp.einsum("bcthd,bcuhd->bctuh", cq, ck) * jnp.exp(decay)
+    y_intra = jnp.einsum("bctuh,bcuhd->bcthd", scores, cv)
+
+    # Inter-chunk state recurrence: C_c = exp(total_f) C_{c-1} + Σ_u exp(
+    # total_f − cumf_u + li_u) k_u v_uᵀ  (and n likewise with k_u).
+    w_u = jnp.exp(total_f[:, :, None] - cum_f + cli)         # (B,nc,chunk,H)
+    dC = jnp.einsum("bcuh,bcuhd,bcuhe->bchde", w_u, ck, cv)  # (B,nc,H,dh,dh)
+    dn = jnp.einsum("bcuh,bcuhd->bchd", w_u, ck)
+
+    def step(carry, inp):
+        c_state, n_state = carry
+        dc, dnn, tf = inp                                    # per-chunk
+        decay_c = jnp.exp(tf)[:, :, None, None]              # (B,H,1,1)
+        c_new = c_state * decay_c + dc
+        n_new = n_state * decay_c[..., 0] + dnn
+        return (c_new, n_new), (c_state, n_state)
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    (_, _), (c_prev, n_prev) = jax.lax.scan(
+        step, (c0, n0),
+        (dC.swapaxes(0, 1), dn.swapaxes(0, 1), total_f.swapaxes(0, 1)))
+    c_prev = c_prev.swapaxes(0, 1)                           # (B,nc,H,dh,dh)
+    n_prev = n_prev.swapaxes(0, 1)
+
+    # Inter-chunk contribution to each position.
+    qw = cq * jnp.exp(cum_f)[..., None]                      # (B,nc,t,H,dh)
+    y_inter = jnp.einsum("bcthd,bchde->bcthe", qw, c_prev)
+    # Normalizer: inter-chunk n·q plus intra-chunk decayed key sums.
+    n_inter = jnp.einsum("bcthd,bchd->bcth", qw, n_prev)
+    n_intra = jnp.einsum("bctuh,bcuhd,bcthd->bcth",
+                         jnp.exp(decay), ck, cq)
+    denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)
+    y = (y_intra + y_inter) / denom[..., None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    out = y * jax.nn.silu(z)
+    return out @ params["down"]
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, dh, dh)
+    n: jnp.ndarray  # (B, H, dh)
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig) -> MLSTMState:
+    _, dh = _mlstm_dims(cfg)
+    return MLSTMState(jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+                      jnp.zeros((batch, cfg.n_heads, dh), jnp.float32))
+
+
+def mlstm_decode_step(params, x, state: MLSTMState, cfg: ModelConfig
+                      ) -> Tuple[jnp.ndarray, MLSTMState]:
+    """O(1) recurrent step. x: (B, 1, D)."""
+    b = x.shape[0]
+    nh = cfg.n_heads
+    d_in, dh = _mlstm_dims(cfg)
+    xz = x @ params["up"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q = (xm @ params["wq"]).reshape(b, nh, dh).astype(jnp.float32)
+    k = (xm @ params["wk"]).reshape(b, nh, dh).astype(jnp.float32) * dh ** -0.5
+    v = (xm @ params["wv"]).reshape(b, nh, dh).astype(jnp.float32)
+    li, lf = _mlstm_gates(params, xm, cfg)                   # (B,1,H)
+    fi = jnp.exp(lf[:, 0])[..., None, None]                  # (B,H,1,1)
+    ii = jnp.exp(li[:, 0])[..., None, None]
+    c_new = state.c * fi + ii * k[..., :, None] * v[..., None, :]
+    n_new = state.n * fi[..., 0] + ii[..., 0] * k
+    num = jnp.einsum("bhde,bhd->bhe", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    y = (num / den[..., None]).reshape(b, 1, d_in).astype(x.dtype)
+    out = y * jax.nn.silu(z)
+    return out @ params["down"], MLSTMState(c_new, n_new)
+
+
+# ============================== sLSTM ======================================
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        # Input and recurrent (block-diagonal per head) gate projections.
+        "w": dense_init(ks[0], (d, 4 * d), cfg.pdtype),
+        "r": dense_init(ks[1], (nh, dh, 4 * dh), cfg.pdtype),
+        "b": jnp.zeros((4 * d,), cfg.pdtype),
+        "down": dense_init(ks[2], (d, d), cfg.pdtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, D)
+    n: jnp.ndarray  # (B, D)
+    h: jnp.ndarray  # (B, D)
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z)
+
+
+def _slstm_step(params, cfg, state: SLSTMState, xt: jnp.ndarray):
+    """xt: (B, D) pre-projected input gates; recurrent mixing per head."""
+    b, d = state.h.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    hprev = state.h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev.astype(jnp.float32),
+                     params["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    g = xt.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)
+    i_, f_, z_, o_ = jnp.split(g, 4, axis=-1)
+    i = jax.nn.sigmoid(i_)   # bounded input gate (see module docstring)
+    f = jax.nn.sigmoid(f_)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    c = f * state.c + i * z
+    n = f * state.n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h)
+
+
+def slstm_forward(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Sequential scan over S. x: (B, S, D)."""
+    xg = x @ params["w"]                                     # (B,S,4D)
+
+    def step(state, xt):
+        new = _slstm_step(params, cfg, state, xt)
+        return new, new.h
+
+    state0 = init_slstm_state(x.shape[0], cfg)
+    _, hs = jax.lax.scan(step, state0, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                    # (B,S,D)
+    return y @ params["down"]
+
+
+def slstm_decode_step(params, x, state: SLSTMState, cfg: ModelConfig
+                      ) -> Tuple[jnp.ndarray, SLSTMState]:
+    xg = (x @ params["w"])[:, 0]
+    new = _slstm_step(params, cfg, state, xg)
+    y = new.h[:, None, :].astype(x.dtype)
+    return y @ params["down"], new

@@ -1,0 +1,7 @@
+"""Distributed runtime: failure detection, elastic re-mesh, stragglers."""
+from .fault_tolerance import (HeartbeatMonitor, HostFailure, MeshPlan,
+                              SimulatedCluster, StragglerMonitor,
+                              elastic_remesh, run_with_recovery)
+
+__all__ = ["HeartbeatMonitor", "HostFailure", "MeshPlan", "SimulatedCluster",
+           "StragglerMonitor", "elastic_remesh", "run_with_recovery"]

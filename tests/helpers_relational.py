@@ -1,0 +1,56 @@
+"""Pure-numpy relational oracle used to validate LAQ operators."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def np_equijoin_pairs(keys_r: np.ndarray, keys_s: np.ndarray):
+    """All matching (i, j) row pairs of an equi-join, as a set."""
+    out = set()
+    index = {}
+    for j, k in enumerate(keys_s):
+        index.setdefault(int(k), []).append(j)
+    for i, k in enumerate(keys_r):
+        for j in index.get(int(k), ()):
+            out.add((i, j))
+    return out
+
+
+def np_groupby_sum(keys_r, values_r, keys_s, groups_s):
+    """Oracle for SELECT SUM(R.val) ... JOIN ... GROUP BY S.val.
+
+    A fact row contributes once per matching S row (join semantics).
+    """
+    out = {}
+    for j, k in enumerate(keys_s):
+        g = int(groups_s[j])
+        for i, kr in enumerate(keys_r):
+            if int(kr) == int(k):
+                out[g] = out.get(g, 0.0) + float(values_r[i])
+    return out
+
+
+def np_star_join(fact_keys: list, dims: list):
+    """Oracle star join.
+
+    fact_keys: list of per-arm FK arrays (len = n_dims), same length rows.
+    dims: list of (pk_array, feature_matrix).
+    Returns (row_ids, feature_matrix) of surviving fact rows.
+    """
+    n = len(fact_keys[0])
+    rows, feats = [], []
+    for i in range(n):
+        parts = []
+        ok = True
+        for fk, (pk, fm) in zip(fact_keys, dims):
+            matches = np.nonzero(pk == fk[i])[0]
+            if len(matches) != 1:
+                ok = False
+                break
+            parts.append(fm[matches[0]])
+        if ok:
+            rows.append(i)
+            feats.append(np.concatenate(parts))
+    if not feats:
+        return np.zeros((0,), np.int64), np.zeros((0, 0), np.float32)
+    return np.asarray(rows), np.stack(feats).astype(np.float32)

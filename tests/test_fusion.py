@@ -1,0 +1,132 @@
+"""Operator-fusion correctness: fused == non-fused, GEMM tree == traversal."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fusion import (DecisionTreeGEMM, LinearOperator, plan_fusion,
+                               predict_fused, predict_fused_matmul,
+                               predict_nonfused, predict_nonfused_matmul,
+                               prefuse, random_tree, reference_tree_eval,
+                               tree_from_arrays)
+from repro.core.laq import DimSpec, Table, star_join
+
+
+def make_star(rng, n_fact=40, dims_shape=((8, 3), (6, 2), (5, 3)),
+              miss_keys=True):
+    specs, fact_cols = [], {}
+    for d, (n_dim, ncols) in enumerate(dims_shape):
+        pk = rng.permutation(n_dim * 2)[:n_dim].astype(np.int32)
+        cols = {f"f{j}": rng.normal(size=n_dim).astype(np.float32)
+                for j in range(ncols)}
+        cols["pk"] = pk
+        dim = Table.from_columns(f"dim{d}", cols, key_cols=("pk",))
+        pool = np.concatenate([pk, [999]]) if miss_keys else pk
+        fact_cols[f"fk{d}"] = rng.choice(pool, size=n_fact)
+        specs.append(DimSpec(dim, f"fk{d}", "pk",
+                             tuple(f"f{j}" for j in range(ncols))))
+    fact = Table.from_columns(
+        "fact", fact_cols, key_cols=tuple(fact_cols.keys()))
+    return star_join(fact, specs)
+
+
+# ------------------------------------------------------------ linear fusion
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 7))
+def test_linear_fusion_equals_nonfused(seed, l):
+    rng = np.random.default_rng(seed)
+    sj = make_star(rng)
+    k = sj.feature_width
+    model = LinearOperator(jnp.asarray(rng.normal(size=(k, l)), jnp.float32))
+    non = np.asarray(predict_nonfused(sj, model))
+    pre = prefuse(sj, model)
+    fus = np.asarray(predict_fused(sj, pre))
+    np.testing.assert_allclose(fus, non, rtol=1e-4, atol=1e-5)
+    # Paper-faithful dense-matmul paths agree too.
+    fus_mm = np.asarray(predict_fused_matmul(sj, pre))
+    non_mm = np.asarray(predict_nonfused_matmul(sj, model))
+    np.testing.assert_allclose(fus_mm, non, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(non_mm, non, rtol=1e-4, atol=1e-5)
+
+
+def test_linear_compose_associativity():
+    rng = np.random.default_rng(0)
+    a = LinearOperator(jnp.asarray(rng.normal(size=(6, 4)), jnp.float32))
+    b = LinearOperator(jnp.asarray(rng.normal(size=(4, 2)), jnp.float32))
+    x = jnp.asarray(rng.normal(size=(9, 6)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(a.compose(b).apply(x)),
+                               np.asarray(b.apply(a.apply(x))), rtol=1e-5)
+
+
+# ------------------------------------------------------------- GEMM tree
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 4), st.integers(2, 9))
+def test_tree_gemm_matches_traversal(seed, depth, k):
+    rng = np.random.default_rng(seed)
+    p = 2**depth - 1
+    feature = rng.integers(0, k, size=p)
+    threshold = rng.normal(size=p).astype(np.float32)
+    tree = tree_from_arrays(feature, threshold, k)
+    x = rng.normal(size=(32, k)).astype(np.float32)
+    onehot = np.asarray(tree.apply(jnp.asarray(x)))
+    # Exactly one leaf per row.
+    np.testing.assert_array_equal(onehot.sum(axis=1), np.ones(32))
+    got = onehot.argmax(axis=1)
+    want = reference_tree_eval(feature, threshold, x)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 4))
+def test_tree_fusion_equals_nonfused(seed, depth):
+    rng = np.random.default_rng(seed)
+    sj = make_star(rng)
+    k = sj.feature_width
+    tree = random_tree(rng, k, depth)
+    non = np.asarray(predict_nonfused(sj, tree))
+    pre = prefuse(sj, tree)
+    fus = np.asarray(predict_fused(sj, pre))
+    valid = np.asarray(sj.row_valid)
+    # Identical one-hot predictions on valid rows; zeros elsewhere.
+    np.testing.assert_array_equal(fus[valid], non[valid])
+    assert np.all(fus[~valid] == 0)
+    fus_mm = np.asarray(predict_fused_matmul(sj, pre))
+    np.testing.assert_array_equal(fus_mm[valid], non[valid])
+
+
+def test_tree_fusion_partial_predicates_are_masked():
+    """A dim must not contribute predicate bits for nodes it doesn't own."""
+    rng = np.random.default_rng(42)
+    sj = make_star(rng, n_fact=20)
+    # Thresholds strongly negative so (0 > v) would spuriously fire if
+    # ownership masking were missing.
+    k = sj.feature_width
+    p = 7
+    feature = rng.integers(0, k, size=p)
+    threshold = -np.abs(rng.normal(size=p)).astype(np.float32) - 5.0
+    tree = tree_from_arrays(feature, threshold, k)
+    non = np.asarray(predict_nonfused(sj, tree))
+    fus = np.asarray(predict_fused(sj, prefuse(sj, tree)))
+    valid = np.asarray(sj.row_valid)
+    np.testing.assert_array_equal(fus[valid], non[valid])
+
+
+# --------------------------------------------------------------- planner
+def test_planner_prefers_fusion_for_narrow_models():
+    lin = LinearOperator(jnp.zeros((128, 1), jnp.float32))
+    d = plan_fusion(lin, fact_rows=600_000, dim_rows=[20_000, 2_000, 2_555])
+    assert d.fuse and d.est_speedup > 10
+
+
+def test_planner_rejects_fusion_when_never_amortized():
+    lin = LinearOperator(jnp.zeros((16, 2048), jnp.float32))
+    d = plan_fusion(lin, fact_rows=3_000, dim_rows=[2_000, 2_000, 2_555],
+                    batches_per_update=1e-3)
+    assert not d.fuse
+
+
+def test_planner_memory_budget():
+    lin = LinearOperator(jnp.zeros((128, 1024), jnp.float32))
+    d = plan_fusion(lin, fact_rows=600_000, dim_rows=[1_000_000],
+                    memory_budget_bytes=1024)
+    assert not d.fuse and "budget" in d.reason

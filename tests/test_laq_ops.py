@@ -1,0 +1,266 @@
+"""Unit + property tests for LAQ relational operators vs numpy oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.laq import (PAD_KEY, DimSpec, Pred, Table, composite_code,
+                            groupby_reduce, groupby_sum_matmul, join_factored,
+                            key_domain, mapping_matrix, materialize_gather,
+                            materialize_matmul, matching_pairs, mmjoin_bcoo,
+                            mmjoin_dense, order_by, positions, project_gather,
+                            project_matmul, select, selection_vector,
+                            star_join)
+from helpers_relational import np_equijoin_pairs, np_groupby_sum, np_star_join
+
+
+def make_table(rng, name, n, ncols, key_names=(), key_max=50, capacity=None):
+    cols = {f"c{i}": rng.normal(size=n).astype(np.float32) for i in range(ncols)}
+    for k in key_names:
+        cols[k] = rng.integers(0, key_max, size=n)
+    return Table.from_columns(name, cols, key_cols=key_names, capacity=capacity)
+
+
+# ---------------------------------------------------------------- projection
+def test_projection_matmul_equals_gather():
+    rng = np.random.default_rng(0)
+    t = make_table(rng, "t", 17, 5)
+    a = project_matmul(t, ["c3", "c0", "c4"])
+    b = project_gather(t, ["c3", "c0", "c4"])
+    np.testing.assert_allclose(np.asarray(a.matrix), np.asarray(b.matrix))
+    assert a.columns == ("c3", "c0", "c4")
+
+
+def test_mapping_matrix_is_binary_column_selector():
+    m = mapping_matrix(["a", "b", "c"], ["c", "a"])
+    np.testing.assert_array_equal(
+        np.asarray(m), np.array([[0, 1], [0, 0], [1, 0]], np.float32))
+
+
+# ----------------------------------------------------------------- selection
+def test_selection_vector_and_compaction():
+    rng = np.random.default_rng(1)
+    t = make_table(rng, "t", 40, 3, key_names=("k",), key_max=10, capacity=64)
+    preds = [Pred("c0", ">", 0.0), Pred("k", "<=", 5)]
+    vec = np.asarray(selection_vector(t, preds))
+    mat = np.asarray(t.matrix)
+    k = np.asarray(t.key("k"))
+    expect = ((mat[:, 0] > 0) & (k <= 5)
+              & (np.arange(64) < 40)).astype(np.float32)
+    np.testing.assert_array_equal(vec, expect)
+
+    out = select(t, preds, capacity=64)
+    n = int(out.nvalid)
+    assert n == int(expect.sum())
+    # Surviving rows preserved, order-stable.
+    surv = mat[expect.astype(bool)]
+    np.testing.assert_allclose(np.asarray(out.matrix)[:n], surv)
+    # Padding rows zeroed / PAD_KEY.
+    assert np.all(np.asarray(out.matrix)[n:] == 0)
+    assert np.all(np.asarray(out.key("k"))[n:] == PAD_KEY)
+
+
+def test_selection_between_and_in():
+    rng = np.random.default_rng(2)
+    t = make_table(rng, "t", 30, 1, key_names=("k",), key_max=20)
+    m1 = np.asarray(Pred("k", "between", (5, 10)).mask(t))
+    k = np.asarray(t.key("k"))
+    np.testing.assert_array_equal(m1, (k >= 5) & (k <= 10))
+    m2 = np.asarray(Pred("k", "in", [3, 7, 19]).mask(t))
+    np.testing.assert_array_equal(m2, np.isin(k, [3, 7, 19]))
+
+
+# -------------------------------------------------------------------- domain
+def test_key_domain_sorted_union_with_padding():
+    a = jnp.asarray(np.array([5, 1, 9, PAD_KEY], np.int32))
+    b = jnp.asarray(np.array([9, 2], np.int32))
+    dom = np.asarray(key_domain([a, b], size=8))
+    assert list(dom[:4]) == [1, 2, 5, 9]
+    assert np.all(dom[4:] == PAD_KEY)
+
+
+def test_positions_miss_and_padding_out_of_range():
+    dom = jnp.asarray(np.array([2, 4, 6, PAD_KEY], np.int32))
+    keys = jnp.asarray(np.array([4, 3, PAD_KEY, 6], np.int32))
+    pos = np.asarray(positions(dom, keys))
+    assert pos[0] == 1 and pos[3] == 2
+    assert pos[1] == 4 and pos[2] == 4  # out-of-range ⇒ zero one-hot row
+
+
+# ------------------------------------------------------------------- MM-join
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 24), st.integers(1, 24),
+       st.integers(2, 12))
+def test_mmjoin_dense_matches_oracle(seed, nr, ns, key_max):
+    rng = np.random.default_rng(seed)
+    kr = rng.integers(0, key_max, size=nr).astype(np.int32)
+    ks = rng.integers(0, key_max, size=ns).astype(np.int32)
+    I = np.asarray(mmjoin_dense(jnp.asarray(kr), jnp.asarray(ks),
+                                domain_size=2 * key_max))
+    pairs = np_equijoin_pairs(kr, ks)
+    got = {(i, j) for i, j in zip(*np.nonzero(I > 0.5))}
+    assert got == pairs
+    assert set(np.unique(I)) <= {0.0, 1.0}
+
+
+def test_mmjoin_bcoo_matches_dense():
+    rng = np.random.default_rng(7)
+    kr = rng.integers(0, 15, size=20).astype(np.int32)
+    ks = rng.integers(0, 15, size=10).astype(np.int32)
+    d = np.asarray(mmjoin_dense(jnp.asarray(kr), jnp.asarray(ks), 32))
+    b = np.asarray(mmjoin_bcoo(jnp.asarray(kr), jnp.asarray(ks), 32))
+    np.testing.assert_allclose(d, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 40), st.integers(1, 20))
+def test_join_factored_pkfk_matches_oracle(seed, n_fact, n_dim):
+    rng = np.random.default_rng(seed)
+    pk = rng.permutation(n_dim * 3)[:n_dim].astype(np.int32)  # unique keys
+    fk = rng.choice(np.concatenate([pk, np.arange(n_dim * 3, n_dim * 3 + 5)]),
+                    size=n_fact).astype(np.int32)
+    fj = join_factored(jnp.asarray(fk), jnp.asarray(pk))
+    found = np.asarray(fj.found)
+    ptr = np.asarray(fj.ptr)
+    for i in range(n_fact):
+        matches = np.nonzero(pk == fk[i])[0]
+        assert found[i] == (len(matches) == 1)
+        if found[i]:
+            assert ptr[i] == matches[0]
+
+
+def test_factored_dense_equals_mmjoin_dense():
+    rng = np.random.default_rng(3)
+    pk = rng.permutation(30)[:12].astype(np.int32)
+    fk = rng.choice(np.concatenate([pk, [97, 98]]), size=25).astype(np.int32)
+    fj = join_factored(jnp.asarray(fk), jnp.asarray(pk))
+    dense_factored = np.asarray(fj.dense(12))
+    dense_mm = np.asarray(mmjoin_dense(jnp.asarray(fk), jnp.asarray(pk), 64))
+    np.testing.assert_allclose(dense_factored, dense_mm)
+
+
+def test_factored_apply_is_I_times_matrix():
+    rng = np.random.default_rng(4)
+    pk = np.arange(10, dtype=np.int32)
+    fk = rng.integers(0, 14, size=20).astype(np.int32)
+    x = rng.normal(size=(10, 3)).astype(np.float32)
+    fj = join_factored(jnp.asarray(fk), jnp.asarray(pk))
+    got = np.asarray(fj.apply(jnp.asarray(x)))
+    want = np.asarray(fj.dense(10)) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ----------------------------------------------------------- materialization
+def test_materialization_matmul_equals_gather():
+    rng = np.random.default_rng(5)
+    r = make_table(rng, "r", 15, 2, key_names=("k",), key_max=8)
+    s = make_table(rng, "s", 12, 3, key_names=("k",), key_max=8)
+    I = mmjoin_dense(r.key("k"), s.key("k"), 16)
+    cap = 15 * 12
+    a = materialize_matmul(I, r, s, cap)
+    b = materialize_gather(I, r, s, cap)
+    assert int(a.nvalid) == int(b.nvalid)
+    n = int(a.nvalid)
+    A = np.asarray(a.matrix)[:n]
+    B = np.asarray(b.matrix)[:n]
+    # Same multiset of rows (nonzero order may differ only deterministically).
+    np.testing.assert_allclose(A, B, rtol=1e-6)
+    assert int(a.nvalid) == len(np_equijoin_pairs(np.asarray(r.key("k"))[:15],
+                                                  np.asarray(s.key("k"))[:12]))
+
+
+# -------------------------------------------------------------------- groupby
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_groupby_sum_matmul_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    nr, ns, key_max = 20, 8, 12
+    kr = rng.integers(0, key_max, size=nr).astype(np.int32)
+    vr = rng.integers(-5, 6, size=nr).astype(np.float32)
+    ks = rng.permutation(key_max)[:ns].astype(np.int32)  # unique S keys
+    gs = rng.integers(0, 4, size=ns).astype(np.int32)
+    grp, sums = groupby_sum_matmul(jnp.asarray(kr), jnp.asarray(vr),
+                                   jnp.asarray(ks), jnp.asarray(gs),
+                                   domain_size=2 * key_max, num_groups=6)
+    want = np_groupby_sum(kr, vr, ks, gs)
+    got = {int(g): float(s) for g, s in zip(np.asarray(grp), np.asarray(sums))
+           if int(g) != PAD_KEY}
+    # Drop zero-valued groups from comparison where absent in oracle.
+    for g, s in want.items():
+        assert got.get(g, 0.0) == pytest.approx(s, rel=1e-5, abs=1e-4)
+    for g, s in got.items():
+        if g not in want:
+            assert s == pytest.approx(0.0, abs=1e-4)
+
+
+def test_groupby_reduce_ops():
+    codes = jnp.asarray(np.array([3, 1, 3, 1, 2, 2**31 - 1], np.int32))
+    vals = jnp.asarray(np.array([1., 2., 3., 4., 5., 100.], np.float32))
+    uniq, (s, c, mn, mx, mean) = groupby_reduce(
+        codes, [vals] * 5, num_groups=4,
+        ops=("sum", "count", "min", "max", "mean"))
+    u = np.asarray(uniq)
+    assert list(u[:3]) == [1, 2, 3]
+    np.testing.assert_allclose(np.asarray(s)[:3], [6., 5., 4.])
+    np.testing.assert_allclose(np.asarray(c)[:3], [2., 1., 2.])
+    np.testing.assert_allclose(np.asarray(mn)[:3], [2., 5., 1.])
+    np.testing.assert_allclose(np.asarray(mx)[:3], [4., 5., 3.])
+    np.testing.assert_allclose(np.asarray(mean)[:3], [3., 5., 2.])
+
+
+def test_composite_code_roundtrip():
+    from repro.core.laq import decode_composite
+    a = jnp.asarray(np.array([1, 2, 0], np.int32))
+    b = jnp.asarray(np.array([4, 0, 9], np.int32))
+    valid = jnp.asarray(np.array([True, True, True]))
+    code = composite_code([a, b], [3, 10], valid)
+    da, db = decode_composite(code, [3, 10])
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(b))
+
+
+# ----------------------------------------------------------------------- sort
+def test_order_by_lexicographic_padding_last():
+    rng = np.random.default_rng(6)
+    t = make_table(rng, "t", 10, 2, capacity=16)
+    out = order_by(t, ["c0", "c1"], descending=[False, True])
+    m = np.asarray(out.matrix)[:10]
+    keys = list(zip(m[:, 0], -m[:, 1]))
+    assert keys == sorted(keys)
+    assert np.all(np.asarray(out.matrix)[10:] == 0)
+
+
+# ------------------------------------------------------------------ star join
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 2))
+def test_star_join_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n_fact = 30
+    dims_np, fact_cols, dim_specs = [], {}, []
+    for d, (n_dim, ncols) in enumerate([(8, 2), (6, 3), (5, 2)]):
+        pk = rng.permutation(n_dim * 2)[:n_dim].astype(np.int32)
+        fm = rng.normal(size=(n_dim, ncols)).astype(np.float32)
+        cols = {f"f{j}": fm[:, j] for j in range(ncols)}
+        cols["pk"] = pk
+        dim = Table.from_columns(f"dim{d}", cols, key_cols=("pk",))
+        fk = rng.choice(np.concatenate([pk, [99]]), size=n_fact)
+        fact_cols[f"fk{d}"] = fk
+        dims_np.append((pk, fm, fk))
+        dim_specs.append(DimSpec(dim, f"fk{d}", "pk",
+                                 tuple(f"f{j}" for j in range(ncols))))
+    fact_cols["val"] = rng.normal(size=n_fact).astype(np.float32)
+    fact = Table.from_columns("fact", fact_cols,
+                              key_cols=tuple(f"fk{d}" for d in range(3)))
+    sj = star_join(fact, dim_specs)
+    t_gather = np.asarray(sj.materialize())
+    t_matmul = np.asarray(sj.materialize_matmul())
+    np.testing.assert_allclose(t_gather, t_matmul, rtol=1e-5, atol=1e-5)
+
+    rows, feats = np_star_join([d[2] for d in dims_np],
+                               [(d[0], d[1]) for d in dims_np])
+    valid = np.asarray(sj.row_valid)
+    np.testing.assert_array_equal(np.nonzero(valid)[0], rows)
+    if len(rows):
+        np.testing.assert_allclose(t_gather[rows], feats, rtol=1e-5)
+    # Invalid rows are zero.
+    assert np.all(t_gather[~valid] == 0)

@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced configs, one forward + train step.
+
+Full configs are exercised only via the AOT dry-run (no allocation); these
+reduced configs validate numerics/shapes of every layer family on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import arch_ids, get_smoke_config
+from repro.models import LM
+
+
+def _inputs(cfg, rng, batch=2, seq=16):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                         jnp.int32)
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        kwargs["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_patches, cfg.d_model)), jnp.float32)
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens, kwargs = _inputs(cfg, rng)
+    logits, aux = jax.jit(model.forward)(params, tokens, **kwargs)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_train_step_reduces_loss_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(1))
+    tokens, kwargs = _inputs(cfg, rng)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, tokens.shape),
+                         jnp.int32)
+
+    def loss_fn(p):
+        logits, aux = model.forward(p, tokens, **kwargs)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in flat))
+    assert float(gnorm) > 0  # gradients flow through every block type
+
+    # One SGD step reduces the loss (sane training signal).
+    lr = 0.05
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+    loss2 = jax.jit(loss_fn)(params2)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "qwen2-moe-a2.7b",
+                                  "jamba-1.5-large-398b", "xlstm-125m",
+                                  "whisper-tiny", "pixtral-12b"])
+def test_decode_matches_forward(arch):
+    """Prefix decode (token-by-token with caches/states) == full forward."""
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    rng = np.random.default_rng(2)
+    params = model.init(jax.random.PRNGKey(2))
+    batch, seq = 2, 8
+    tokens, kwargs = _inputs(cfg, rng, batch, seq)
+    if cfg.family == "vlm":
+        # Decode path doesn't stream patches; compare text-only forward.
+        kwargs = {}
+    full_logits, _ = jax.jit(model.forward)(params, tokens, **kwargs)
+
+    state = model.init_decode_state(params, batch, max_len=seq,
+                                    frames=kwargs.get("frames"))
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(seq):
+        logits, state = step(params, state, tokens[:, t])
+        outs.append(logits)
+    dec = np.stack([np.asarray(o) for o in outs], axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full_logits), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.attention import flash_attention, naive_attention
+    rng = np.random.default_rng(3)
+    b, s, h, kv, hd = 2, 256, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    for causal in (True, False):
+        fl = np.asarray(flash_attention(q, k, v, causal=causal, q_block=64,
+                                        kv_block=32))
+        nv = np.asarray(naive_attention(q, k, v, causal=causal))
+        np.testing.assert_allclose(fl, nv, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_custom_vjp_grads_match_naive():
+    from repro.models.attention import flash_attention, naive_attention
+    rng = np.random.default_rng(7)
+    b, s, h, kv, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(h * hd,)), jnp.float32)
+    for causal in (True, False):
+        f1 = lambda *a: jnp.sum(flash_attention(
+            *a, causal=causal, q_block=32, kv_block=16) * w)
+        f2 = lambda *a: jnp.sum(naive_attention(*a, causal=causal) * w)
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_assignment():
+    """Full-config parameter counts land near the advertised sizes."""
+    from repro.configs import get_config
+    expect = {
+        "smollm-360m": (0.30e9, 0.45e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "minitron-4b": (3.5e9, 5.5e9),  # 256k untied vocab adds ~1.6B
+        "gemma-7b": (7.0e9, 10.0e9),
+        "pixtral-12b": (11.0e9, 14.0e9),
+        "dbrx-132b": (125e9, 140e9),
+        "jamba-1.5-large-398b": (350e9, 440e9),
+        "xlstm-125m": (0.08e9, 0.20e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),  # total (A2.7b = active)
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+    active = get_config("qwen2-moe-a2.7b").active_params()
+    assert 2.0e9 <= active <= 3.5e9

@@ -1,0 +1,200 @@
+"""Substrate tests: optimizer, compression, checkpointing, data, runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import (QUERIES, TokenPipeline, TokenPipelineConfig,
+                        generate_ssb, generate_star)
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress,
+                         compress_tree, decompress, global_norm,
+                         warmup_cosine)
+from repro.runtime import (HeartbeatMonitor, SimulatedCluster,
+                           StragglerMonitor, elastic_remesh)
+
+
+# ---------------------------------------------------------------- optim ----
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray([2.0])}
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        sc = warmup_cosine(i, 10, 200)
+        params, state, metrics = adamw_update(params, g, state, cfg, sc)
+    assert float(loss(params)) < 1e-2
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_adamw_bf16_state_dtype():
+    cfg = AdamWConfig(lr=0.1, state_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = adamw_init(params, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4, 4), 0.5, jnp.bfloat16)}
+    p2, s2, _ = adamw_update(params, g, state, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 0
+
+
+# ---------------------------------------------------------- compression ----
+def test_compress_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    c, residual = compress(x)
+    xh = decompress(c)
+    assert c.q.dtype == jnp.int8
+    # Block int8: ~1% relative error on N(0,1).
+    err = np.abs(np.asarray(xh) - np.asarray(x)).max()
+    assert err < 0.05
+    np.testing.assert_allclose(np.asarray(x - xh), np.asarray(residual),
+                               atol=1e-6)
+
+
+def test_error_feedback_preserves_mean_update():
+    """Error feedback: accumulated compressed grads ≈ accumulated true."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros((64,), np.float32)
+    comp_sum = np.zeros((64,), np.float32)
+    res = None
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+        true_sum += np.asarray(g["w"])
+        ghat, res = compress_tree(g, res)
+        comp_sum += np.asarray(ghat["w"])
+    # Residual carries over; cumulative drift bounded by one quant step.
+    np.testing.assert_allclose(comp_sum, true_sum, atol=0.1)
+
+
+# ------------------------------------------------------------ checkpoint ---
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x * step, tree),
+                 extras={"step": step})
+    assert mgr.all_steps() == [2, 3]  # retention dropped step 1
+    restored, extras = mgr.restore(3, tree)
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.arange(12.0).reshape(3, 4) * 3)
+    assert extras["step"] == 3
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"w": jnp.ones((128, 64))}
+    mgr.save_async(10, tree, extras={"loss": 1.5})
+    mgr.wait()
+    assert mgr.latest_step() == 10
+    # A partial (uncommitted) dir is ignored.
+    os.makedirs(tmp_path / "step_00000011")
+    assert mgr.latest_step() == 10
+
+
+def test_checkpoint_restore_into_new_sharding(tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jax.device_put(jnp.arange(16.0).reshape(4, 4),
+                                NamedSharding(mesh, P("data", None)))}
+    mgr.save(1, tree)
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    restored, _ = mgr.restore(
+        1, target, sharding_fn=lambda p: NamedSharding(mesh, P(None, "data")))
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.arange(16.0).reshape(4, 4))
+
+
+# ----------------------------------------------------------------- data ----
+def test_token_pipeline_deterministic_and_restorable():
+    cfg = TokenPipelineConfig(vocab_size=100, global_batch=4, seq_len=16)
+    p1 = TokenPipeline(cfg, process_index=0, process_count=1)
+    a_tok, a_lab = p1.next()
+    b_tok, _ = p1.next()
+    assert a_tok.shape == (4, 16)
+    np.testing.assert_array_equal(a_tok[:, 1:], a_lab[:, :-1])
+    # Restore to step 0 replays identically.
+    p2 = TokenPipeline(cfg, process_index=0, process_count=1)
+    p2.restore({"step": 0, "seed": 0})
+    np.testing.assert_array_equal(p2.next()[0], a_tok)
+    np.testing.assert_array_equal(p2.next()[0], b_tok)
+    assert not np.array_equal(a_tok, b_tok)
+
+
+def test_token_pipeline_host_slices_disjoint_and_prefetch():
+    cfg = TokenPipelineConfig(vocab_size=50, global_batch=8, seq_len=8)
+    h0 = TokenPipeline(cfg, process_index=0, process_count=2)
+    h1 = TokenPipeline(cfg, process_index=1, process_count=2)
+    h0.start()
+    t0, _ = h0.next()
+    t1, _ = h1.next()
+    h0.stop()
+    assert t0.shape == (4, 8) and t1.shape == (4, 8)
+    assert not np.array_equal(t0, t1)
+
+
+def test_ssb_generator_and_query_sanity():
+    data = generate_ssb(sf=1, scale=0.002, seed=0)
+    res = QUERIES["Q1.1"](data)
+    assert float(res["rows"]) > 0
+    assert np.isfinite(float(res["revenue"]))
+    res4 = QUERIES["Q4.2"](data)
+    n_groups_hit = int(np.sum(np.asarray(res4["profit"]) != 0))
+    assert n_groups_hit > 0
+
+
+def test_synthetic_star_shapes():
+    s = generate_star(setting=2, sf=1, k=12, scale=0.1)
+    assert s.star.feature_width == 12
+    t = s.star.materialize()
+    assert t.shape[1] == 12
+
+
+# -------------------------------------------------------------- runtime ----
+def test_heartbeat_failure_detection():
+    t = {"now": 0.0}
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=10.0,
+                           clock=lambda: t["now"])
+    t["now"] = 5.0
+    mon.beat(0)
+    mon.beat(1)
+    t["now"] = 12.0
+    assert mon.failed_hosts() == [2]
+    assert sorted(mon.alive_hosts()) == [0, 1]
+
+
+def test_elastic_remesh_sheds_dp_keeps_tp():
+    plan = elastic_remesh(512, model_parallel=16, devices_per_pod=256)
+    assert plan.shape == (2, 16, 16)
+    # Lose 10 devices → one pod no longer complete → single flat mesh.
+    plan = elastic_remesh(502, model_parallel=16, devices_per_pod=256)
+    assert plan.axes[-1] == "model" and plan.shape[-1] == 16
+    assert plan.n_devices <= 502
+    # TP must survive.
+    with pytest.raises(RuntimeError):
+        elastic_remesh(8, model_parallel=16)
+
+
+def test_straggler_detection_and_recovery_flow(tmp_path):
+    cluster = SimulatedCluster(n_hosts=8)
+    strag = StragglerMonitor(range(8), threshold=1.5, patience=2)
+    cluster.make_slow(5, 3.0)
+    flagged = []
+    for _ in range(4):
+        flagged = strag.record_step(cluster.step_times())
+    assert flagged == [5]
+    # Failure → heartbeat detect → remesh smaller.
+    cluster.fail_host(3)
+    cluster.advance(40.0)
+    assert 3 in cluster.monitor.failed_hosts()
+    plan = elastic_remesh(cluster.alive_devices, model_parallel=4,
+                          devices_per_pod=cluster.alive_devices)
+    assert plan.n_devices <= cluster.alive_devices
