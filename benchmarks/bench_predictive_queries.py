@@ -1,0 +1,49 @@
+"""Fused vs non-fused end-to-end latency of compiled predictive queries.
+
+Runs representative SSB shapes through ``compile_query`` — QG1 (1 join +
+scalar sum), QG2 (3 joins + group-by-sum) — plus the predict-then-aggregate
+variants (P1 linear head, P3 GEMM tree head), each compiled twice: the fused
+plan (prefused partials, gathers + segment-sum) and the non-fused reference
+(materialize T, model matmul).  The ratio is the paper's §3 speedup measured
+on the *whole* query, aggregation included.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_predictive_queries
+"""
+from __future__ import annotations
+
+from repro.core.query import compile_query
+from repro.data import QUERY_IR, generate_ssb, ssb_catalog
+
+from .common import bench, emit
+
+SCALE = 0.003   # shrink factor vs true SSB (CPU-sized)
+
+#: QG1 shape (1 join, scalar), QG2 shape (3 joins, group-by), and their
+#: model-headed counterparts (P2 = QG1 shape, P1/P3 = QG2 shape).
+SHAPES = ["Q1.1", "Q2.1", "P2.linear.select.scalar", "P1.linear.year",
+          "P3.tree.year"]
+
+
+def run(sf: float = 1.0, scale: float = SCALE):
+    data = generate_ssb(sf=sf, scale=scale, seed=0)
+    catalog = ssb_catalog(data)
+    for name in SHAPES:
+        q = QUERY_IR[name]()
+        fused = compile_query(catalog, q, backend="fused")
+        us_fused = bench(fused.run)
+        emit(f"predictive/{name}/fused", us_fused,
+             f"rows={int(fused.run()['rows'])};"
+             f"measured_sel={fused.selectivity:.3f};{fused.plan.reason}")
+        if q.model is not None:
+            non = compile_query(catalog, q, backend="nonfused")
+            us_non = bench(non.run)
+            emit(f"predictive/{name}/nonfused", us_non,
+                 f"speedup={us_non / max(us_fused, 1e-9):.2f}x")
+        matmul = compile_query(catalog, q, backend="fused",
+                               agg_backend="matmul")
+        emit(f"predictive/{name}/agg_matmul", bench(matmul.run),
+             "Fig.4 one-hot matmul aggregation")
+
+
+if __name__ == "__main__":
+    run()

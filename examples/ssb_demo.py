@@ -31,12 +31,13 @@ def main():
         t0 = time.perf_counter()
         res = jax.block_until_ready(fn())
         dt = (time.perf_counter() - t0) * 1e3
-        if "revenue" in res and res["revenue"].ndim == 0:
+        key = next(k for k in ("revenue", "profit", "prediction")
+                   if k in res)
+        vals = np.asarray(res[key])
+        if "groups" not in res:
             print(f"{name}: rows={int(res['rows']):7d} "
-                  f"revenue={float(res['revenue']):.2f}  ({dt:.1f} ms)")
+                  f"{key}_total={float(vals.sum()):.2f}  ({dt:.1f} ms)")
         else:
-            key = "revenue" if "revenue" in res else "profit"
-            vals = np.asarray(res[key])
             groups = np.asarray(res["groups"])
             live = groups != PAD_GROUP
             print(f"{name}: rows={int(res['rows']):7d} "

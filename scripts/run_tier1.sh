@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact invocation CI runs, for local parity.
+# Usage: scripts/run_tier1.sh [extra pytest args...]   (e.g. -m 'not slow')
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,4 +1,5 @@
-"""Core contribution of the paper: LAQ + ML operator fusion."""
-from . import laq, fusion
+"""Core contribution of the paper: LAQ + ML operator fusion + the
+predictive-query compiler that plans and fuses whole queries."""
+from . import laq, fusion, query
 
-__all__ = ["laq", "fusion"]
+__all__ = ["laq", "fusion", "query"]

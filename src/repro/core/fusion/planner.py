@@ -49,8 +49,17 @@ def _flops_tree(i: float, k: float, p: float, l: float, rows: Sequence[int]):
 
 def plan_fusion(model: Model, fact_rows: int, dim_rows: Sequence[int],
                 batches_per_update: float = 1000.0,
-                memory_budget_bytes: Optional[int] = None) -> FusionDecision:
-    i = float(fact_rows)
+                memory_budget_bytes: Optional[int] = None,
+                selectivity: float = 1.0) -> FusionDecision:
+    """Fused-vs-nonfused decision for one predictive query.
+
+    ``selectivity`` is the fraction of fact rows surviving selection +
+    join-miss filtering.  Selection precedes prediction in the plan (the
+    compiler folds it into the factored-join validity and ``mask_select``
+    compaction shrinks the online batch), so every *online* term scales by
+    it; the offline pre-fusion cost over the dimension tables does not.
+    """
+    i = float(fact_rows) * min(max(float(selectivity), 0.0), 1.0)
     k = float(model.k)
     l = float(model.l)
     if isinstance(model, LinearOperator):

@@ -6,8 +6,10 @@ from .domain import key_domain, positions, DomainCache, default_domain_cache
 from .join import (FactoredJoin, join_factored, mmjoin_dense, mmjoin_bcoo,
                    onehot_keys, matching_pairs, row_mapping_matrices,
                    materialize_matmul, materialize_gather)
-from .aggregation import (groupby_sum_matmul, groupby_reduce, composite_code,
-                          decode_composite, PAD_GROUP)
+from .aggregation import (groupby_sum_matmul, groupby_sum_segment,
+                          groupby_reduce, groupby_codes, segment_aggregate,
+                          matmul_aggregate, composite_code, decode_composite,
+                          PAD_GROUP)
 from .sort import order_by, sorted_domain_order
 from .star import DimSpec, StarJoin, star_join
 
@@ -17,7 +19,9 @@ __all__ = [
     "DomainCache", "default_domain_cache", "FactoredJoin", "join_factored",
     "mmjoin_dense", "mmjoin_bcoo", "onehot_keys", "matching_pairs",
     "row_mapping_matrices", "materialize_matmul", "materialize_gather",
-    "groupby_sum_matmul", "groupby_reduce", "composite_code",
-    "decode_composite", "PAD_GROUP", "order_by", "sorted_domain_order",
+    "groupby_sum_matmul", "groupby_sum_segment", "groupby_reduce",
+    "groupby_codes", "segment_aggregate", "matmul_aggregate",
+    "composite_code", "decode_composite", "PAD_GROUP",
+    "order_by", "sorted_domain_order",
     "DimSpec", "StarJoin", "star_join",
 ]

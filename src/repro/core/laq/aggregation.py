@@ -8,6 +8,12 @@
 * ``composite_code`` — multi-column group-by via composite integer encoding
   followed by the single-column machinery (paper §2.4.2's sort-unique
   procedure).
+* ``groupby_codes`` / ``segment_aggregate`` / ``matmul_aggregate`` — the
+  code-level backends the predictive-query compiler (``repro.core.query``)
+  chooses between: resolve composite codes to dense group ids once
+  (quasi-static), then reduce values — either with ``segment_sum`` or with
+  the Fig. 4 one-hot matmul.  Both accept (n,) scalars and (n, l) prediction
+  matrices, so a fused model head aggregates with the same machinery.
 
 All functions are padding-aware: rows whose group code is PAD_GROUP are
 dropped from every aggregate.
@@ -55,6 +61,36 @@ def groupby_sum_matmul(keys_r: jnp.ndarray, values_r: jnp.ndarray,
     # ones @ MAT_R @ MAT_Sᵀ : reduce rows, then map domain slots to groups.
     per_slot = jnp.sum(mat_r, axis=0)                  # (n_dom,)
     sums = mat_s @ per_slot                            # (num_groups,)
+    return grp_vals, sums
+
+
+def groupby_sum_segment(keys_r: jnp.ndarray, values_r: jnp.ndarray,
+                        keys_s: jnp.ndarray, groups_s: jnp.ndarray,
+                        domain_size: int, num_groups: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Optimized counterpart of ``groupby_sum_matmul`` (same signature).
+
+    Maps each R row to its S group through the key domain and reduces with
+    ``segment_sum`` instead of building MAT_R / MAT_S.  Requires unique live
+    S keys (the PK side of a star schema) — with duplicate S keys mapping one
+    key slot to several groups, only the matmul form can multi-count.
+    """
+    dom = key_domain([keys_r, keys_s], domain_size)
+    n_dom = dom.shape[0]
+    pos_r = positions(dom, keys_r)
+    pos_s = positions(dom, keys_s)
+    grp_vals = jnp.unique(groups_s.astype(jnp.int32), size=num_groups,
+                          fill_value=PAD_GROUP)
+    gid_s = positions(grp_vals, groups_s.astype(jnp.int32))
+    # slot -> group id (one writer per slot: unique S keys); missing slots and
+    # padded S rows land in the overflow segment.
+    slot_gid = jnp.full((n_dom + 1,), num_groups, jnp.int32)
+    slot_gid = slot_gid.at[jnp.minimum(pos_s, n_dom)].set(
+        jnp.minimum(gid_s, num_groups))
+    slot_gid = slot_gid.at[n_dom].set(num_groups)
+    gid_r = jnp.take(slot_gid, pos_r)
+    sums = jax.ops.segment_sum(values_r, gid_r,
+                               num_segments=num_groups + 1)[:num_groups]
     return grp_vals, sums
 
 
@@ -114,6 +150,42 @@ def groupby_reduce(codes: jnp.ndarray, values: Sequence[jnp.ndarray],
             raise ValueError(f"unknown aggregation op {op!r}")
         outs.append(o)
     return uniq, tuple(outs)
+
+
+# --------------------------------------------------------------------------
+# Code-level backends for the predictive-query compiler
+# --------------------------------------------------------------------------
+def groupby_codes(codes: jnp.ndarray, num_groups: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolve composite codes to (sorted unique codes, dense group ids).
+
+    Padded codes (PAD_GROUP) map to the overflow segment ``num_groups``; both
+    ``segment_aggregate`` and ``matmul_aggregate`` drop it.  The resolution is
+    quasi-static for a fixed fact table, so the compiler runs it once offline.
+    """
+    uniq = jnp.unique(codes, size=num_groups, fill_value=PAD_GROUP)
+    gid = jnp.searchsorted(uniq, codes).astype(jnp.int32)
+    gid = jnp.where(codes != PAD_GROUP,
+                    jnp.minimum(gid, num_groups), num_groups)
+    return uniq, gid
+
+
+def segment_aggregate(gid: jnp.ndarray, values: jnp.ndarray,
+                      num_groups: int) -> jnp.ndarray:
+    """Σ values per group via ``segment_sum``; values (n,) or (n, l)."""
+    return jax.ops.segment_sum(values, gid,
+                               num_segments=num_groups + 1)[:num_groups]
+
+
+def matmul_aggregate(gid: jnp.ndarray, values: jnp.ndarray,
+                     num_groups: int) -> jnp.ndarray:
+    """Paper-faithful Fig. 4 aggregation: onehot(gid)ᵀ @ values on the MXU.
+
+    Overflow rows (gid == num_groups) get an all-zero one-hot row, exactly
+    mirroring the padded-key handling of ``onehot_keys``.
+    """
+    onehot = (gid[:, None] == jnp.arange(num_groups)[None, :])
+    return onehot.astype(values.dtype).T @ values
 
 
 def decode_composite(codes: jnp.ndarray, bounds: Sequence[int]

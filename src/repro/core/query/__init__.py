@@ -1,0 +1,44 @@
+"""Predictive-query compiler: selection ⋈ star join ⋈ model ⋈ group-by,
+lowered to one jitted linear-algebra program.
+
+The paper's thesis (§3) is that relational operators and ML predictions share
+a linear-algebra substrate, so a *whole* predictive query can be planned and
+fused as one program.  This package is that planner/compiler.  IR node →
+paper equation map:
+
+======================  =====================================================
+IR node                 Paper construct
+======================  =====================================================
+``Pred`` (via arms /    §2.2 selection as a binary filter vector s ∈ {0,1}ⁿ —
+``fact_preds``)         folded into the matching matrix's validity instead of
+                        multiplied through the data (mask_select)
+``ArmSpec``             §2.3/§3.1 MM-Join arm: Iⱼ = MAT_fact · MAT_dimᵀ
+                        (Alg. 1), kept factored as FK pointers for PK–FK
+``PredictiveQuery``     §3 predictive pipeline  γ ∘ model ∘ ⋈ ∘ σ
+``model=Linear…``       Eq. 1: T·L = Σⱼ Iⱼ(Bⱼ Mⱼ L) — the linear prefix is
+                        *pre-fused* into each dimension table
+``model=DecisionTree…`` Eq. 3 / Fig. 5: ((T F > v) H) == h with per-dimension
+                        node-ownership masks Wⱼ
+``GroupKey``            §2.4.2 composite group codes (sort-unique); the radix
+                        ``bound`` is one digit of the code
+``Aggregate``           §2.4/Fig. 4 group-by-sum: one-hot matmul (faithful)
+                        or segment_sum (optimized) — compiler-chosen
+======================  =====================================================
+
+``plan_query`` extends the paper's Eq. 2/4 fusion boundary with selection
+selectivity and the Fig. 4 aggregation-backend choice; ``compile_query``
+lowers the winning plan into a single jitted XLA program and exposes a
+row-batched serving entry point (``CompiledQuery.predict_rows``).
+"""
+from .ir import (PREDICTION, Aggregate, ArmSpec, GroupKey, PredictiveQuery,
+                 eval_value)
+from .compile import CompiledQuery, compile_query, query_from_star
+from .planner import (AggDecision, QueryPlan, plan_aggregation, plan_query,
+                      DENSE_JOIN_ELEMS, MXU_SEGMENT_ADVANTAGE)
+
+__all__ = [
+    "PREDICTION", "Aggregate", "ArmSpec", "GroupKey", "PredictiveQuery",
+    "eval_value", "CompiledQuery", "compile_query", "query_from_star",
+    "AggDecision", "QueryPlan", "plan_aggregation", "plan_query",
+    "DENSE_JOIN_ELEMS", "MXU_SEGMENT_ADVANTAGE",
+]

@@ -1,0 +1,319 @@
+"""Lower a ``PredictiveQuery`` to one jitted XLA program.
+
+Offline (quasi-static, runs once per (query, catalog)):
+  1. selection masks on the fact table and each dimension (``Pred``, §2.2),
+  2. factored matching matrices per arm (``join_factored``, Alg. 1 / §3.1),
+     with dimension-side predicate masks gathered through the FK pointers —
+     the selection vector *folded into* the join validity instead of being
+     multiplied through the data,
+  3. the model's linear prefix pushed into the dimension tables
+     (``prefuse``, Eq. 1/3),
+  4. composite group codes + dense group ids (§2.4.2),
+  5. the whole-query cost model (``plan_query``) choosing fused/nonfused and
+     gather/matmul backends from the measured selectivity.
+
+Online (the single jitted program): Σⱼ Iⱼ Pⱼ gathers (+ ``== h`` for trees),
+value expressions, and the group-by reduction composed directly on the fused
+prediction output — no intermediate table ever materializes on the fused
+path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..fusion.pipeline import (PrefusedStar, predict_fused,
+                               predict_fused_matmul, predict_nonfused,
+                               predict_nonfused_matmul, prefuse)
+from ..laq.aggregation import (composite_code, groupby_codes,
+                               matmul_aggregate, segment_aggregate)
+from ..laq.join import join_factored
+from ..laq.projection import mapping_matrix
+from ..laq.selection import select
+from ..laq.star import DimSpec, StarJoin
+from ..laq.table import Table
+from .ir import (PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
+                 eval_value)
+from .planner import QueryPlan, plan_query
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """An executable plan: one jitted program + its quasi-static artifacts."""
+
+    query: PredictiveQuery
+    plan: QueryPlan
+    backend: str                    # "fused" | "nonfused"
+    join_backend: str               # "gather" | "matmul"
+    agg_backend: str                # "segment" | "matmul"
+    star: StarJoin
+    prefused: Optional[PrefusedStar]
+    selectivity: float              # measured fraction of surviving fact rows
+    group_codes: Optional[jnp.ndarray]   # sorted unique composite codes
+    _gid: Optional[jnp.ndarray]
+    _rows: jnp.ndarray                   # surviving-row count
+    _run: callable
+    _predict: Optional[callable]
+    _predict_rows: Optional[callable]
+
+    @property
+    def is_traced(self) -> bool:
+        """True when compiled under an outer trace — such a plan holds
+        tracers and must not be cached/reused outside that trace."""
+        return isinstance(self._rows, jax.core.Tracer)
+
+    def run(self) -> Dict[str, jnp.ndarray]:
+        """Execute the query; returns aggregates (+ "groups", "rows")."""
+        out = dict(self._run())
+        if self.group_codes is not None:
+            out["groups"] = self.group_codes
+        out["rows"] = self._rows
+        return out
+
+    def predictions(self) -> jnp.ndarray:
+        """The (fact_capacity, l) prediction matrix (model queries only)."""
+        if self._predict is None:
+            raise ValueError("query has no model")
+        return self._predict()
+
+    def predict_rows(self, row_ids: jnp.ndarray) -> jnp.ndarray:
+        """Batched serving: predictions for a batch of fact row ids.
+
+        On the fused backend this is |arms| gathers into the prefused
+        partials + adds — the paper's online phase, at request batch size.
+        Out-of-range ids follow ``jnp.take`` fill semantics (NaN rows);
+        negative ids wrap like numpy.
+        """
+        if self._predict_rows is None:
+            raise ValueError("query has no model")
+        return self._predict_rows(row_ids)
+
+
+def _static_int(x, default: int) -> int:
+    """``int(x)`` when concrete, ``default`` when ``x`` is a tracer."""
+    try:
+        return int(x)
+    except jax.errors.ConcretizationTypeError:
+        return default
+
+
+def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery
+                  ) -> Tuple[StarJoin, jnp.ndarray]:
+    """Joins + combined validity with every selection mask folded in."""
+    fact = catalog[q.fact]
+    valid = fact.valid_mask()
+    for p in q.fact_preds:
+        valid = valid & p.mask(fact)
+    dims, joins = [], []
+    for arm in q.arms:
+        dim = catalog[arm.table]
+        dims.append(DimSpec(dim, arm.fk_col, arm.pk_col, arm.feature_cols))
+        fj = join_factored(fact.key(arm.fk_col), dim.key(arm.pk_col))
+        ok = fj.found
+        if arm.preds:
+            dmask = arm.preds[0].mask(dim)
+            for p in arm.preds[1:]:
+                dmask = dmask & p.mask(dim)
+            ok = ok & jnp.take(dmask, fj.ptr)
+        joins.append(fj)
+        valid = valid & ok
+    star = StarJoin(fact=fact, dims=tuple(dims), joins=tuple(joins),
+                    row_valid=valid)
+    return star, valid
+
+
+def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
+                   star: StarJoin):
+    """Exact int32 group-key columns, gathered through the arm pointers."""
+    arm_ptr = {a.table: fj.ptr for a, fj in zip(q.arms, star.joins)}
+    cols, bounds = [], []
+    for gk in q.group_keys:
+        if gk.table == "fact":
+            c = star.fact.key(gk.col)
+        else:
+            c = jnp.take(catalog[gk.table].key(gk.col), arm_ptr[gk.table])
+        cols.append(c - jnp.int32(gk.offset))
+        bounds.append(gk.bound)
+    return cols, bounds
+
+
+def _check_aggregates(q: PredictiveQuery):
+    for agg in q.aggregates:
+        if agg.op != "sum":
+            raise NotImplementedError(
+                f"aggregate op {agg.op!r} not supported by the compiler")
+        if agg.value == PREDICTION and q.model is None:
+            raise ValueError("PREDICTION aggregate requires a model")
+
+
+def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
+                  backend: str = "auto", join_backend: str = "auto",
+                  agg_backend: str = "auto",
+                  select_capacity: Optional[int] = None,
+                  batches_per_update: float = 1000.0,
+                  memory_budget_bytes: Optional[int] = None) -> CompiledQuery:
+    """Plan + lower ``q`` against ``catalog`` into one jitted program.
+
+    ``backend`` / ``join_backend`` / ``agg_backend`` override the planner
+    ("auto" defers to the cost model); explicit "matmul" backends give the
+    paper-faithful reference lowering used by tests and benchmarks.
+
+    ``select_capacity`` applies the fact predicates by ``mask_select``
+    compaction (§2.2) *before* the joins: surviving rows are packed into a
+    fixed buffer of that many rows, shrinking every online shape — the right
+    call for very selective queries.  Row ids seen by ``predict_rows`` then
+    index the compacted table.
+    """
+    for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
+                         (join_backend, ("auto", "gather", "matmul")),
+                         (agg_backend, ("auto", "segment", "matmul"))):
+        if arg not in allowed:
+            raise ValueError(f"backend {arg!r} not one of {allowed}")
+    _check_aggregates(q)
+    if select_capacity is not None:
+        fact = select(catalog[q.fact], q.fact_preds,
+                      capacity=select_capacity)
+        catalog = {**catalog, q.fact: fact}
+        q = dataclasses.replace(q, fact_preds=())
+    star, valid = _resolve_star(catalog, q)
+    fact = star.fact
+    rows = jnp.sum(valid.astype(jnp.int32))
+    # Offline compilation measures selectivity from the data; when a caller
+    # traces compile_query itself (whole pipeline under one outer jit), the
+    # counts are abstract — plan with static shapes and selectivity 1.
+    n_fact = _static_int(fact.nvalid, fact.capacity)
+    try:
+        sel = float(rows) / max(n_fact, 1)
+    except jax.errors.ConcretizationTypeError:
+        sel = 1.0
+
+    out_width = q.model.l if q.model is not None else 1
+    # The planner's selectivity term models mask_select compaction (§2.2):
+    # online shapes only actually shrink when ``select_capacity`` compacted
+    # the fact table (already reflected in n_fact).  The default lowering
+    # masks without compacting, so its online cost stays at full capacity —
+    # feeding the measured selectivity in would optimize a plan shape that
+    # is not the one being executed.
+    plan = plan_query(q.model, n_fact,
+                      [_static_int(d.dim.nvalid, d.dim.capacity)
+                       for d in star.dims],
+                      selectivity=1.0,
+                      num_groups=q.num_groups if q.group_keys else 0,
+                      out_width=out_width,
+                      batches_per_update=batches_per_update,
+                      memory_budget_bytes=memory_budget_bytes)
+    backend = plan.backend if backend == "auto" else backend
+    join_backend = plan.join_backend if join_backend == "auto" else join_backend
+    agg_backend = ((plan.agg.backend if plan.agg else "segment")
+                   if agg_backend == "auto" else agg_backend)
+
+    prefused = None
+    if q.model is not None and backend == "fused":
+        prefused = prefuse(star, q.model)
+
+    uniq = gid = None
+    if q.group_keys:
+        cols, bounds = _group_columns(catalog, q, star)
+        codes = composite_code(cols, bounds, valid)
+        uniq, gid = groupby_codes(codes, q.num_groups)
+
+    reduce_fn = (matmul_aggregate if agg_backend == "matmul"
+                 else segment_aggregate)
+
+    def _predictions():
+        if backend == "fused":
+            return (predict_fused(star, prefused) if join_backend == "gather"
+                    else predict_fused_matmul(star, prefused))
+        return (predict_nonfused(star, q.model) if join_backend == "gather"
+                else predict_nonfused_matmul(star, q.model))
+
+    def _online():
+        pred = _predictions() if q.model is not None else None
+        out = {}
+        for agg in q.aggregates:
+            if agg.value == PREDICTION:
+                vals = pred                      # already validity-masked
+            else:
+                vals = jnp.where(valid, eval_value(fact, agg.value), 0.0)
+            if gid is not None:
+                out[agg.name] = reduce_fn(gid, vals, q.num_groups)
+            else:
+                out[agg.name] = jnp.sum(vals, axis=0)
+        return out
+
+    predict_jit = predict_rows_jit = None
+    if q.model is not None:
+        predict_jit = jax.jit(_predictions)
+        predict_rows_jit = jax.jit(
+            _make_predict_rows(star, q.model, prefused, backend))
+
+    return CompiledQuery(
+        query=q, plan=plan, backend=backend, join_backend=join_backend,
+        agg_backend=agg_backend, star=star, prefused=prefused,
+        selectivity=sel, group_codes=uniq, _gid=gid, _rows=rows,
+        _run=jax.jit(_online), _predict=predict_jit,
+        _predict_rows=predict_rows_jit)
+
+
+def _make_predict_rows(star: StarJoin, model, prefused: Optional[PrefusedStar],
+                       backend: str):
+    """Row-batched prediction: the serving path (fact rows as requests)."""
+    if backend == "fused":
+        def fn(row_ids):
+            v = jnp.take(star.row_valid, row_ids)
+            acc = None
+            for fj, part in zip(star.joins, prefused.partials):
+                ptr = jnp.take(fj.ptr, row_ids)
+                hit = jnp.take(fj.found, row_ids)
+                p = jnp.take(part, ptr, axis=0) * hit[:, None].astype(
+                    part.dtype)
+                acc = p if acc is None else acc + p
+            acc = acc * v[:, None].astype(acc.dtype)
+            if prefused.h is None:
+                return acc
+            eq = (acc == prefused.h[None, :].astype(acc.dtype))
+            return eq.astype(acc.dtype) * v[:, None].astype(acc.dtype)
+        return fn
+
+    def fn(row_ids):
+        v = jnp.take(star.row_valid, row_ids)
+        parts = []
+        for d, fj in zip(star.dims, star.joins):
+            proj = d.dim.matrix @ mapping_matrix(d.dim.columns,
+                                                 d.feature_cols)
+            ptr = jnp.take(fj.ptr, row_ids)
+            hit = jnp.take(fj.found, row_ids)
+            parts.append(jnp.take(proj, ptr, axis=0)
+                         * hit[:, None].astype(proj.dtype))
+        t = jnp.concatenate(parts, axis=1) * v[:, None].astype(jnp.float32)
+        out = model.apply(t)
+        return out * v[:, None].astype(out.dtype)
+    return fn
+
+
+def query_from_star(star: StarJoin, fact_name: str = None, *,
+                    model=None, aggregates: Tuple[Aggregate, ...] = (),
+                    group_keys=(), num_groups: int = 8192
+                    ) -> Tuple[Dict[str, Table], PredictiveQuery]:
+    """Lift an already-resolved ``StarJoin`` into (catalog, PredictiveQuery).
+
+    Convenience for callers holding legacy ``star_join`` outputs (synthetic
+    generators, serving): the compiler re-resolves the joins, so the result
+    is equivalent to having built the IR directly.
+    """
+    fact_name = fact_name or star.fact.name
+    catalog = {fact_name: star.fact}
+    arms = []
+    for d in star.dims:
+        catalog[d.dim.name] = d.dim
+        arms.append(ArmSpec(d.dim.name, d.fk_col, d.pk_col,
+                            tuple(d.feature_cols)))
+    if not aggregates and model is not None:
+        aggregates = (Aggregate(PREDICTION, "sum", "prediction"),)
+    return catalog, PredictiveQuery(
+        fact=fact_name, arms=tuple(arms), model=model,
+        group_keys=tuple(group_keys), aggregates=tuple(aggregates),
+        num_groups=num_groups)

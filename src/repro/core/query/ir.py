@@ -1,0 +1,110 @@
+"""Declarative IR for predictive queries (selection ⋈ star ⋈ model ⋈ γ).
+
+A ``PredictiveQuery`` is the logical plan the compiler lowers; every node is
+data (frozen dataclasses + tuples) so plans are cheap to build, inspect and
+cache.  Value expressions over fact columns are tiny s-expressions::
+
+    "lo_revenue"                          # a column
+    ("mul", "lo_extendedprice", "lo_discount")
+    ("sub", "lo_revenue", "lo_supplycost")
+
+and the sentinel ``PREDICTION`` aggregates the model's output matrix instead
+of a fact column.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from ..fusion.operators import DecisionTreeGEMM, LinearOperator
+from ..laq.selection import Pred
+from ..laq.table import Table
+
+Model = Union[LinearOperator, DecisionTreeGEMM]
+
+#: Aggregate.value sentinel: aggregate the (n, l) model prediction matrix.
+PREDICTION = "@prediction"
+
+_BINOPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmSpec:
+    """One arm of the star: ``fact.fk_col = <table>.pk_col`` (paper §3.1).
+
+    ``preds`` are dimension-side predicates, pushed below the join: they are
+    evaluated once on the dimension table and folded into the factored
+    matching matrix's validity (selection-as-filter-vector, §2.2, composed
+    with the join instead of multiplied through).
+    """
+
+    table: str                            # catalog name of the dimension
+    fk_col: str
+    pk_col: str
+    feature_cols: Tuple[str, ...] = ()
+    preds: Tuple[Pred, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupKey:
+    """One GROUP BY key column, drawn from the fact table or a joined arm.
+
+    ``bound`` is an exclusive upper bound on ``col - offset`` — the radix of
+    this digit in the composite group code (§2.4.2).
+    """
+
+    table: str                            # "fact" or an ArmSpec.table name
+    col: str
+    bound: int
+    offset: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """SUM(value) [GROUP BY ...]; ``value`` is an expr or ``PREDICTION``."""
+
+    value: Union[str, tuple]
+    op: str = "sum"
+    name: str = "agg"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PredictiveQuery:
+    """The whole predictive pipeline as one logical plan.
+
+    σ(fact preds) ∧ ⋈(arms, with dim preds) → model → γ(group_keys, aggs).
+    ``model=None`` gives a pure relational query (the 13 SSB queries);
+    ``group_keys=()`` gives a scalar aggregate (SSB QG1).
+    """
+
+    fact: str                             # catalog name of the fact table
+    arms: Tuple[ArmSpec, ...]
+    fact_preds: Tuple[Pred, ...] = ()
+    model: Optional[Model] = None
+    group_keys: Tuple[GroupKey, ...] = ()
+    aggregates: Tuple[Aggregate, ...] = (Aggregate("lo_revenue"),)
+    num_groups: int = 8192
+
+    @property
+    def feature_width(self) -> int:
+        return sum(len(a.feature_cols) for a in self.arms)
+
+
+def eval_value(fact: Table, expr) -> jnp.ndarray:
+    """Evaluate a fact-column value expression to a (capacity,) float array."""
+    if isinstance(expr, str):
+        return fact.col(expr)
+    op, *args = expr
+    if op == "col":
+        return fact.col(args[0])
+    vals = [eval_value(fact, a) for a in args]
+    if op not in _BINOPS or len(vals) != 2:
+        raise ValueError(f"bad value expression {expr!r}")
+    return _BINOPS[op](vals[0], vals[1])

@@ -1,0 +1,102 @@
+"""Whole-query cost model: fusion × join backend × aggregation backend.
+
+Extends the paper's Eq. 2/4 fusion boundary (``repro.core.fusion.plan_fusion``)
+to the full predictive query:
+
+* **Selection selectivity** shrinks every online term — selection is folded
+  into the factored-join validity before prediction, so only surviving rows
+  flow through the model and the aggregation (§2.2 composed with §3).
+* **Join backend** — factored gathers by default; the paper-faithful dense
+  one-hot matmul (Alg. 1) only ever wins on tiny inputs where the MXU matmul
+  amortizes gather latency, mirroring the paper's MM-Join-vs-hash-join
+  crossover (§4.2).
+* **Aggregation backend** — Fig. 4's one-hot matmul costs ~2·i·G·l FLOPs vs
+  the segment-sum scatter's ~i·l; the matmul only pays when the group count G
+  is small enough that MXU throughput covers the extra work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from ..fusion.planner import FusionDecision, plan_fusion
+from .ir import Model
+
+# Dense one-hot row-matching matrices are only viable when the (fact × dim)
+# matrix is small (paper §4.2: MM-Join loses to pointer joins at scale).
+DENSE_JOIN_ELEMS = 1 << 14
+
+# MXU matmul throughput advantage over scatter-based segment_sum: the matmul
+# aggregation is picked when its FLOP overcount (≈2·G) stays under this.
+# Calibrated on bench_predictive_queries (G=8,l=4 matmul 4× faster; G=8192
+# matmul 300× slower — any value in [13, ~1000) separates the two regimes).
+MXU_SEGMENT_ADVANTAGE = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AggDecision:
+    backend: str            # "segment" | "matmul"
+    matmul_flops: float
+    segment_flops: float
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    backend: str            # "fused" | "nonfused"
+    join_backend: str       # "gather" | "matmul"
+    agg: Optional[AggDecision]
+    fusion: Optional[FusionDecision]
+    selectivity: float
+    reason: str
+
+
+def plan_aggregation(online_rows: float, num_groups: int,
+                     out_width: int) -> AggDecision:
+    """Fig. 4 matmul vs segment-sum for Σ values per group."""
+    i = max(online_rows, 1.0)
+    g = max(num_groups, 1)
+    l = max(out_width, 1)
+    matmul = 2.0 * i * g * l          # onehot(gid)ᵀ @ values
+    segment = i * l + i               # scatter-add + id gather
+    if matmul <= segment * MXU_SEGMENT_ADVANTAGE:
+        return AggDecision("matmul", matmul, segment,
+                           f"G={g} small: MXU matmul beats scatter")
+    return AggDecision("segment", matmul, segment,
+                       f"G={g}: segment_sum ({segment:.0f} flops) beats "
+                       f"one-hot matmul ({matmul:.0f} flops)")
+
+
+def plan_query(model: Optional[Model], fact_rows: int,
+               dim_rows: Sequence[int], *, selectivity: float = 1.0,
+               num_groups: int = 0, out_width: int = 1,
+               batches_per_update: float = 1000.0,
+               memory_budget_bytes: Optional[int] = None) -> QueryPlan:
+    """Pick fused/nonfused + join/aggregation backends for one query."""
+    sel = min(max(float(selectivity), 0.0), 1.0)
+    online_rows = float(fact_rows) * sel
+
+    fusion = None
+    backend = "fused"
+    if model is not None:
+        fusion = plan_fusion(model, fact_rows, dim_rows,
+                             batches_per_update=batches_per_update,
+                             memory_budget_bytes=memory_budget_bytes,
+                             selectivity=sel)
+        backend = "fused" if fusion.fuse else "nonfused"
+
+    dense_elems = float(fact_rows) * float(max(dim_rows, default=1))
+    join_backend = "matmul" if dense_elems <= DENSE_JOIN_ELEMS else "gather"
+
+    agg = None
+    if num_groups > 0:
+        agg = plan_aggregation(online_rows, num_groups, out_width)
+
+    parts = [f"sel={sel:.3f}", f"join={join_backend}"]
+    if fusion is not None:
+        parts.append(f"{backend} ({fusion.reason})")
+    if agg is not None:
+        parts.append(f"agg={agg.backend}")
+    return QueryPlan(backend=backend, join_backend=join_backend, agg=agg,
+                     fusion=fusion, selectivity=sel,
+                     reason="; ".join(parts))

@@ -34,7 +34,7 @@ N_BRANDS = 1000         # 40 per category
 DATE_DAYS = 7 * 365
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)   # identity hash: used as a plan-cache key
 class SSBData:
     lineorder: Table
     part: Table

@@ -34,6 +34,19 @@ DTYPE_BYTES = {
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    jax ≤ 0.4.x returns a list with one properties-dict per partition (often
+    ``[{...}]``); newer versions return the dict directly.  Returns a single
+    flat dict (first partition), ``{}`` when unavailable.
+    """
+    costs = compiled.cost_analysis()
+    if isinstance(costs, (list, tuple)):
+        costs = costs[0] if costs else {}
+    return dict(costs) if costs else {}
+
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 
 

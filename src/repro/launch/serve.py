@@ -25,15 +25,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.fusion import (LinearOperator, plan_fusion, predict_fused,
-                               predict_nonfused, prefuse)
-from repro.core.laq import star_join
+from repro.core.fusion import LinearOperator
+from repro.core.query import compile_query, query_from_star
 from repro.data import generate_star
 from repro.models import LM
 
 
 class FusedFeatureServer:
-    """The paper's pipeline as a serving component."""
+    """The paper's pipeline as a serving component.
+
+    Holds two compiled predictive-query plans (fused and non-fused reference)
+    over a synthetic star schema; requests are batches of fact row ids served
+    through ``CompiledQuery.predict_rows`` — on the fused plan that is |dims|
+    gathers into the prefused partials + adds per batch (paper Eq. 1).
+    """
 
     def __init__(self, setting: int, sf: float, k: int, l: int,
                  scale: float = 1.0, seed: int = 0):
@@ -41,19 +46,21 @@ class FusedFeatureServer:
         self.syn = generate_star(setting, sf, k, seed=seed, scale=scale)
         self.model = LinearOperator(
             jnp.asarray(rng.normal(size=(k, l)).astype(np.float32)))
-        self.decision = plan_fusion(self.model, self.syn.n_fact,
-                                    self.syn.dim_rows)
-        self.prefused = prefuse(self.syn.star, self.model)
-        self._fused = jax.jit(lambda: predict_fused(self.syn.star,
-                                                    self.prefused))
-        self._nonfused = jax.jit(lambda: predict_nonfused(self.syn.star,
-                                                          self.model))
+        catalog, query = query_from_star(self.syn.star, model=self.model)
+        self.plan_fused = compile_query(catalog, query, backend="fused")
+        self.plan_nonfused = compile_query(catalog, query, backend="nonfused")
+        self.decision = self.plan_fused.plan.fusion
 
     def features_fused(self):
-        return self._fused()
+        return self.plan_fused.predictions()
 
     def features_nonfused(self):
-        return self._nonfused()
+        return self.plan_nonfused.predictions()
+
+    def serve_batch(self, row_ids, fused: bool = True):
+        """Predictions for a request batch of fact row ids."""
+        plan = self.plan_fused if fused else self.plan_nonfused
+        return plan.predict_rows(row_ids)
 
 
 def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
@@ -73,11 +80,12 @@ def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
 
     decode = jax.jit(lm.decode_step)
 
+    row_ids = jnp.arange(batch, dtype=jnp.int32)   # the request batch
+
     def serve_batch(fused: bool):
         t0 = time.perf_counter()
-        feats = (server.features_fused() if fused
-                 else server.features_nonfused())
-        cond = (feats[:batch] @ proj)                     # (batch, d_model)
+        feats = server.serve_batch(row_ids, fused=fused)  # (batch, l)
+        cond = (feats @ proj)                             # (batch, d_model)
         state = lm.init_decode_state(params, batch, max_len=decode_steps + 1)
         token = jnp.zeros((batch,), jnp.int32)
         # Soft-prompt injection: add the conditioning vector to the first

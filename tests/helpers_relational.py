@@ -30,6 +30,119 @@ def np_groupby_sum(keys_r, values_r, keys_s, groups_s):
     return out
 
 
+def _np_table_views(t):
+    """(float64 column dict, exact int key dict) of a Table's live rows."""
+    n = int(t.nvalid)
+    m = np.asarray(t.matrix)
+    cols = {c: m[:n, i].astype(np.float64) for i, c in enumerate(t.columns)}
+    keys = {c: np.asarray(v)[:n] for c, v in t.keys.items()}
+    return cols, keys
+
+
+def _np_pred_mask(p, cols, keys):
+    """Mirror of ``Pred.mask`` (keys preferred over float columns)."""
+    src = keys[p.col] if p.col in keys else cols[p.col]
+    if p.op == "between":
+        lo, hi = p.value
+        return (src >= lo) & (src <= hi)
+    if p.op == "in":
+        return np.isin(src, np.asarray(list(p.value)))
+    import operator
+    ops = {"==": operator.eq, "!=": operator.ne, "<": operator.lt,
+           "<=": operator.le, ">": operator.gt, ">=": operator.ge}
+    return ops[p.op](src, p.value)
+
+
+def _np_value(cols, expr):
+    """Mirror of ``repro.core.query.eval_value`` on numpy columns."""
+    if isinstance(expr, str):
+        return cols[expr]
+    op, *args = expr
+    if op == "col":
+        return cols[args[0]]
+    a, b = (_np_value(cols, x) for x in args)
+    return {"add": lambda: a + b, "sub": lambda: a - b,
+            "mul": lambda: a * b, "div": lambda: a / b}[op]()
+
+
+def _np_model_apply(model, x):
+    """Mirror of LinearOperator / DecisionTreeGEMM apply, in float64."""
+    if hasattr(model, "L"):
+        return x @ np.asarray(model.L, np.float64)
+    f = np.asarray(model.F, np.float64)
+    v = np.asarray(model.v, np.float64)
+    h = np.asarray(model.H, np.float64)
+    hh = np.asarray(model.h, np.float64)
+    b = (x @ f > v[None, :]).astype(np.float64)
+    return (b @ h == hh[None, :]).astype(np.float64)
+
+
+def np_predictive_query(q, catalog):
+    """Brute-force oracle for a ``PredictiveQuery`` over Table catalogs.
+
+    Returns ``{"rows": int, "groups": {code: {agg: value}} | None,
+    "scalars": {agg: value} | None, "abs_scale": {agg: float}}`` —
+    ``abs_scale`` is the Σ|contribution| per aggregate, for tolerance
+    scaling of float32-engine comparisons.
+    """
+    fact = catalog[q.fact]
+    fcols, fkeys = _np_table_views(fact)
+    n = len(next(iter(fcols.values()))) if fcols else int(fact.nvalid)
+    valid = np.ones(n, bool)
+    for p in q.fact_preds:
+        valid &= _np_pred_mask(p, fcols, fkeys)
+
+    arm_ptr, arm_keys = {}, {}
+    feat_parts = []
+    for arm in q.arms:
+        dcols, dkeys = _np_table_views(catalog[arm.table])
+        pkmap = {int(k): i for i, k in enumerate(dkeys[arm.pk_col])}
+        ptr = np.asarray([pkmap.get(int(k), -1) for k in fkeys[arm.fk_col]])
+        ok = ptr >= 0
+        if arm.preds:
+            dmask = np.ones(len(dkeys[arm.pk_col]), bool)
+            for p in arm.preds:
+                dmask &= _np_pred_mask(p, dcols, dkeys)
+            ok = ok & dmask[np.clip(ptr, 0, None)]
+        valid &= ok
+        arm_ptr[arm.table] = ptr
+        arm_keys[arm.table] = dkeys
+        for c in arm.feature_cols:
+            feat_parts.append(dcols[c][np.clip(ptr, 0, None)])
+
+    pred = None
+    if q.model is not None:
+        x = np.stack(feat_parts, axis=1) if feat_parts else np.zeros((n, 0))
+        pred = _np_model_apply(q.model, x)
+
+    codes = None
+    if q.group_keys:
+        codes = np.zeros(n, np.int64)
+        for gk in q.group_keys:
+            col = (fkeys[gk.col] if gk.table == "fact"
+                   else arm_keys[gk.table][gk.col][
+                       np.clip(arm_ptr[gk.table], 0, None)])
+            codes = codes * int(gk.bound) + (col.astype(np.int64) - gk.offset)
+
+    groups = {} if q.group_keys else None
+    scalars = None if q.group_keys else {}
+    abs_scale = {}
+    for agg in q.aggregates:
+        vals = (pred if agg.value == "@prediction"     # query.ir.PREDICTION
+                else _np_value(fcols, agg.value))
+        v2 = vals if vals.ndim > 1 else vals[:, None]
+        abs_scale[agg.name] = float(np.abs(v2[valid]).sum())
+        if q.group_keys:
+            for i in np.nonzero(valid)[0]:
+                g = groups.setdefault(int(codes[i]), {})
+                cur = g.get(agg.name)
+                g[agg.name] = v2[i] if cur is None else cur + v2[i]
+        else:
+            scalars[agg.name] = v2[valid].sum(axis=0)
+    return {"rows": int(valid.sum()), "groups": groups, "scalars": scalars,
+            "abs_scale": abs_scale}
+
+
 def np_star_join(fact_keys: list, dims: list):
     """Oracle star join.
 

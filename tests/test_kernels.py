@@ -2,6 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (fused_star_gather, fused_star_gather_ref,

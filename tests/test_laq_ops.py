@@ -2,15 +2,20 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.laq import (PAD_KEY, DimSpec, Pred, Table, composite_code,
-                            groupby_reduce, groupby_sum_matmul, join_factored,
-                            key_domain, mapping_matrix, materialize_gather,
-                            materialize_matmul, matching_pairs, mmjoin_bcoo,
+from repro.core.laq import (PAD_GROUP, PAD_KEY, DimSpec, Pred, Table,
+                            composite_code, groupby_codes, groupby_reduce,
+                            groupby_sum_matmul, groupby_sum_segment,
+                            join_factored, key_domain, mapping_matrix,
+                            materialize_gather, materialize_matmul,
+                            matching_pairs, matmul_aggregate, mmjoin_bcoo,
                             mmjoin_dense, order_by, positions, project_gather,
-                            project_matmul, select, selection_vector,
-                            star_join)
+                            project_matmul, segment_aggregate, select,
+                            selection_vector, star_join)
 from helpers_relational import np_equijoin_pairs, np_groupby_sum, np_star_join
 
 
@@ -151,6 +156,7 @@ def test_factored_apply_is_I_times_matrix():
 
 
 # ----------------------------------------------------------- materialization
+@pytest.mark.slow
 def test_materialization_matmul_equals_gather():
     rng = np.random.default_rng(5)
     r = make_table(rng, "r", 15, 2, key_names=("k",), key_max=8)
@@ -264,3 +270,92 @@ def test_star_join_matches_oracle(seed):
         np.testing.assert_allclose(t_gather[rows], feats, rtol=1e-5)
     # Invalid rows are zero.
     assert np.all(t_gather[~valid] == 0)
+
+
+# --------------------------------------- factored vs dense join equivalence
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 30), st.integers(1, 12),
+       st.sampled_from(["mix", "all_miss", "dup_fk"]))
+def test_join_factored_equals_mmjoin_dense_and_bcoo(seed, n_fact, n_dim,
+                                                    regime):
+    """I = onehot(ptr) (factored) == MAT_R MAT_Sᵀ (dense/BCOO) under
+    duplicate FKs, all-miss FKs, and PAD_KEY padding on both sides."""
+    rng = np.random.default_rng(seed)
+    pk = rng.permutation(n_dim * 3)[:n_dim].astype(np.int32)
+    if regime == "all_miss":
+        fk = rng.integers(n_dim * 3, n_dim * 3 + 7,
+                          size=n_fact).astype(np.int32)
+    elif regime == "dup_fk":
+        fk = np.full(n_fact, pk[rng.integers(0, n_dim)], np.int32)
+    else:
+        pool = np.concatenate([pk, pk, [n_dim * 3 + 1]])  # dups + a miss
+        fk = rng.choice(pool, size=n_fact).astype(np.int32)
+    # Table padding on both sides.
+    fk_p = jnp.asarray(np.concatenate([fk, [PAD_KEY, PAD_KEY]]).astype(
+        np.int32))
+    pk_p = jnp.asarray(np.concatenate([pk, [PAD_KEY]]).astype(np.int32))
+
+    fj = join_factored(fk_p, pk_p)
+    dense_factored = np.asarray(fj.dense(pk_p.shape[0]))
+    dom = n_dim * 3 + 10
+    dense_mm = np.asarray(mmjoin_dense(fk_p, pk_p, dom))
+    np.testing.assert_array_equal(dense_factored, dense_mm)
+    dense_bcoo = np.asarray(mmjoin_bcoo(fk_p, pk_p, dom))
+    np.testing.assert_array_equal(dense_mm, dense_bcoo)
+    # PAD rows never match, in either representation.
+    assert np.all(dense_factored[-2:] == 0)
+    assert np.all(dense_factored[:, -1] == 0)
+    if regime == "all_miss":
+        assert not np.asarray(fj.found).any()
+
+
+# --------------------------------------- groupby segment ≡ matmul (Fig. 4)
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 30), st.integers(1, 10),
+       st.booleans())
+def test_groupby_sum_segment_equals_matmul(seed, nr, ns, pad_rows):
+    """segment_sum group-by == Fig. 4 one-hot matmul group-by, including
+    PAD_KEY rows on both relations and missing-key fact rows."""
+    rng = np.random.default_rng(seed)
+    key_max = 16
+    kr = rng.integers(0, key_max, size=nr).astype(np.int32)
+    vr = rng.integers(-5, 6, size=nr).astype(np.float32)
+    ks = rng.permutation(key_max)[:ns].astype(np.int32)  # unique S keys
+    gs = rng.integers(0, 4, size=ns).astype(np.int32)
+    if pad_rows:
+        kr = np.concatenate([kr, [PAD_KEY]]).astype(np.int32)
+        vr = np.concatenate([vr, [123.0]]).astype(np.float32)
+        ks = np.concatenate([ks, [PAD_KEY]]).astype(np.int32)
+        gs = np.concatenate([gs, [PAD_GROUP]]).astype(np.int32)
+    args = (jnp.asarray(kr), jnp.asarray(vr), jnp.asarray(ks),
+            jnp.asarray(gs))
+    grp_m, sums_m = groupby_sum_matmul(*args, domain_size=2 * key_max,
+                                       num_groups=6)
+    grp_s, sums_s = groupby_sum_segment(*args, domain_size=2 * key_max,
+                                        num_groups=6)
+    np.testing.assert_array_equal(np.asarray(grp_m), np.asarray(grp_s))
+    np.testing.assert_allclose(np.asarray(sums_m), np.asarray(sums_s),
+                               rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 2), st.integers(1, 40), st.integers(1, 5))
+def test_code_aggregate_segment_equals_matmul(seed, n, width):
+    """The compiler's code-level backends agree on (n,) and (n, l) values,
+    with PAD_GROUP rows dropped by both."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 9, size=n).astype(np.int32)
+    codes[rng.random(n) < 0.2] = PAD_GROUP
+    uniq, gid = groupby_codes(jnp.asarray(codes), num_groups=12)
+    vals1 = jnp.asarray(rng.integers(-4, 5, size=n).astype(np.float32))
+    vals2 = jnp.asarray(rng.integers(-4, 5, size=(n, width)).astype(
+        np.float32))
+    for vals in (vals1, vals2):
+        a = np.asarray(segment_aggregate(gid, vals, 12))
+        b = np.asarray(matmul_aggregate(gid, vals, 12))
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-5)
+    # PAD_GROUP rows contribute to no group.
+    live = codes != PAD_GROUP
+    np.testing.assert_allclose(
+        np.asarray(segment_aggregate(gid, vals1, 12)).sum(),
+        np.asarray(vals1)[live].sum(), rtol=1e-6, atol=1e-4)

@@ -1,0 +1,247 @@
+"""Predictive-query compiler vs brute-force oracles + planner boundaries.
+
+Every registered SSB query (the 13 relational ones and the predict-then-
+aggregate P* variants) is compiled fused and checked against:
+  * the pure-numpy ``np_predictive_query`` oracle,
+  * the paper-faithful reference backends (non-fused / one-hot matmul), and
+tree-head queries must match the non-fused path *bitwise* (the GEMM tree is
+exact integer arithmetic in f32 — paper Eq. 3).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fusion import DecisionTreeGEMM, LinearOperator, plan_fusion
+from repro.core.laq import PAD_GROUP
+from repro.core.query import (PREDICTION, compile_query, plan_aggregation,
+                              plan_query)
+from repro.data import (QUERY_IR, generate_ssb, predictive_query_names,
+                        ssb_catalog)
+from helpers_relational import np_predictive_query
+
+SSB_NAMES = [n for n in QUERY_IR if n.startswith("Q")]
+PRED_NAMES = predictive_query_names()
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_ssb(sf=1, scale=0.0005, seed=5)
+
+
+@pytest.fixture(scope="module")
+def catalog(data):
+    return ssb_catalog(data)
+
+
+def _engine_maps(res, names):
+    """{group code: aggregate row} per aggregate name (live groups only)."""
+    out = {}
+    if "groups" in res:
+        groups = np.asarray(res["groups"])
+        live = groups != PAD_GROUP
+        for name in names:
+            vals = np.asarray(res[name])
+            v2 = vals if vals.ndim > 1 else vals[:, None]
+            out[name] = {int(g): v2[i]
+                         for i, g in enumerate(groups) if live[i]}
+    return out
+
+
+def _assert_matches_oracle(compiled, q, catalog):
+    res = compiled.run()
+    want = np_predictive_query(q, catalog)
+    assert int(res["rows"]) == want["rows"]
+    names = [a.name for a in q.aggregates]
+    if want["groups"] is None:
+        for a in q.aggregates:
+            got = np.atleast_1d(np.asarray(res[a.name]))
+            tol = 1e-6 * max(want["abs_scale"][a.name], 1.0)
+            np.testing.assert_allclose(got, np.atleast_1d(want["scalars"][
+                a.name]), rtol=1e-4, atol=tol)
+        return
+    got_maps = _engine_maps(res, names)
+    for a in q.aggregates:
+        got = got_maps[a.name]
+        want_g = {c: v[a.name] for c, v in want["groups"].items()}
+        # Engine emits a group for every surviving row; zero-valued groups
+        # may legitimately exist on both sides.
+        assert set(got) == set(want_g), a.name
+        tol = 1e-6 * max(want["abs_scale"][a.name], 1.0)
+        for c, v in want_g.items():
+            np.testing.assert_allclose(got[c], v, rtol=1e-4, atol=tol,
+                                       err_msg=f"{a.name} group {c}")
+
+
+# ----------------------------------------------------- engine vs numpy oracle
+@pytest.mark.parametrize("name", SSB_NAMES)
+def test_ssb_query_fused_matches_oracle(name, data, catalog):
+    q = QUERY_IR[name]()
+    _assert_matches_oracle(compile_query(catalog, q), q, catalog)
+
+
+@pytest.mark.parametrize("name", PRED_NAMES)
+def test_predictive_query_fused_matches_oracle(name, data, catalog):
+    q = QUERY_IR[name]()
+    compiled = compile_query(catalog, q, backend="fused")
+    assert compiled.backend == "fused"
+    _assert_matches_oracle(compiled, q, catalog)
+
+
+# ------------------------------------------- fused vs reference backends
+@pytest.mark.parametrize("name", SSB_NAMES)
+def test_ssb_query_agg_backends_agree(name, data, catalog):
+    q = QUERY_IR[name]()
+    auto = compile_query(catalog, q).run()
+    matmul = compile_query(catalog, q, agg_backend="matmul").run()
+    for a in q.aggregates:
+        np.testing.assert_allclose(np.asarray(auto[a.name]),
+                                   np.asarray(matmul[a.name]),
+                                   rtol=1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("name", PRED_NAMES)
+def test_predictive_fused_equals_nonfused(name, data, catalog):
+    q = QUERY_IR[name]()
+    fused = compile_query(catalog, q, backend="fused")
+    non = compile_query(catalog, q, backend="nonfused")
+    assert non.prefused is None
+    a = np.asarray(fused.predictions())
+    b = np.asarray(non.predictions())
+    if isinstance(q.model, DecisionTreeGEMM):
+        # Eq. 3 is exact small-integer arithmetic in f32: bitwise equal.
+        np.testing.assert_array_equal(a, b)
+    else:
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_tree_query_matmul_join_backend_bitmatches(data, catalog):
+    q = QUERY_IR["P4.tree.select.region"]()
+    gather = compile_query(catalog, q, backend="fused",
+                           join_backend="gather")
+    matmul = compile_query(catalog, q, backend="fused",
+                           join_backend="matmul")
+    np.testing.assert_array_equal(np.asarray(gather.predictions()),
+                                  np.asarray(matmul.predictions()))
+
+
+# --------------------------------------------------------- batched serving
+def test_predict_rows_matches_full_predictions(data, catalog):
+    q = QUERY_IR["P1.linear.year"]()
+    for backend in ("fused", "nonfused"):
+        compiled = compile_query(catalog, q, backend=backend)
+        ids = jnp.asarray([0, 1, 5, 17, 100, 2999], jnp.int32)
+        got = np.asarray(compiled.predict_rows(ids))
+        want = np.asarray(compiled.predictions())[np.asarray(ids)]
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_select_capacity_compaction_equivalent(data, catalog):
+    """mask_select pre-compaction (§2.2) preserves query results."""
+    for name in ("Q1.2", "P2.linear.select.scalar"):
+        q = QUERY_IR[name]()
+        base = compile_query(catalog, q).run()
+        comp = compile_query(catalog, q, select_capacity=1024).run()
+        assert int(base["rows"]) == int(comp["rows"]), name
+        for a in q.aggregates:
+            np.testing.assert_allclose(np.asarray(base[a.name]),
+                                       np.asarray(comp[a.name]),
+                                       rtol=1e-5, atol=1e-3, err_msg=name)
+
+
+def test_compile_query_traceable_under_outer_jit(data, catalog):
+    """Whole-pipeline tracing (joins + codes + reduction in one program)."""
+    import jax
+    q = QUERY_IR["Q1.1"]()
+    traced = jax.jit(lambda: compile_query(catalog, q).run()["revenue"])()
+    eager = compile_query(catalog, q).run()["revenue"]
+    np.testing.assert_allclose(np.asarray(traced), np.asarray(eager),
+                               rtol=1e-6)
+
+
+def test_compiled_plan_cache_respects_kwargs(data):
+    """Different compile options must not hit the same cache entry."""
+    from repro.data import compiled_plan
+    a = compiled_plan("Q2.1", data)
+    b = compiled_plan("Q2.1", data, agg_backend="matmul")
+    assert a.agg_backend == "segment"
+    assert b.agg_backend == "matmul"
+    assert a is not b
+    assert compiled_plan("Q2.1", data) is a
+
+
+def test_plan_cache_not_poisoned_by_outer_trace(data):
+    """A plan compiled under an outer jit must not be cached: the later
+    eager call would hit its leaked tracers (UnexpectedTracerError)."""
+    import jax
+    from repro.data import QUERIES
+    traced = jax.jit(lambda: QUERIES["Q1.3"](data)["revenue"])()
+    eager = QUERIES["Q1.3"](data)["revenue"]   # must not raise
+    np.testing.assert_allclose(np.asarray(traced), np.asarray(eager),
+                               rtol=1e-6)
+
+
+def test_no_model_query_raises_on_predictions(data, catalog):
+    compiled = compile_query(catalog, QUERY_IR["Q1.1"]())
+    with pytest.raises(ValueError):
+        compiled.predictions()
+    with pytest.raises(ValueError):
+        compiled.predict_rows(jnp.arange(4))
+
+
+# --------------------------------------------------------- planner boundaries
+def _toy_model(k=6, l=4):
+    rng = np.random.default_rng(0)
+    return LinearOperator(jnp.asarray(rng.normal(size=(k, l)), jnp.float32))
+
+
+def test_plan_fusion_memory_budget_exceeded():
+    d = plan_fusion(_toy_model(), 10_000, [100, 100, 100],
+                    memory_budget_bytes=1)
+    assert not d.fuse
+    assert "budget" in d.reason
+    assert d.prefused_bytes > 1
+
+
+def test_plan_fusion_amortization_below_one():
+    d = plan_fusion(_toy_model(), 64, [4096, 4096],
+                    batches_per_update=1e-6)
+    assert not d.fuse
+    assert d.amortized_speedup <= 1.0
+    assert "not amortized" in d.reason
+
+
+def test_plan_fusion_selectivity_can_flip_decision():
+    # High-update regime (paper §4.3 Q6/Q8: dims updated faster than one
+    # batch): a selective query leaves too little online work to amortize
+    # pre-fusion, while the same query unselected still fuses.
+    model = _toy_model(k=64, l=2)
+    kw = dict(batches_per_update=0.01)
+    hi = plan_fusion(model, 100_000, [1000], selectivity=1.0, **kw)
+    lo = plan_fusion(model, 100_000, [1000], selectivity=0.001, **kw)
+    assert hi.fuse
+    assert not lo.fuse
+    assert lo.amortized_speedup < hi.amortized_speedup
+
+
+def test_plan_aggregation_backend_crossover():
+    small = plan_aggregation(100_000, num_groups=4, out_width=4)
+    large = plan_aggregation(100_000, num_groups=8192, out_width=1)
+    assert small.backend == "matmul"
+    assert large.backend == "segment"
+    assert large.matmul_flops > large.segment_flops
+
+
+def test_plan_query_join_backend_by_size():
+    tiny = plan_query(None, 64, [16, 16])
+    big = plan_query(None, 1_000_000, [10_000])
+    assert tiny.join_backend == "matmul"
+    assert big.join_backend == "gather"
+    assert tiny.fusion is None and tiny.agg is None
+
+
+def test_compile_respects_memory_budget(data, catalog):
+    q = QUERY_IR["P1.linear.year"]()
+    compiled = compile_query(catalog, q, memory_budget_bytes=1)
+    assert compiled.backend == "nonfused"
+    assert compiled.prefused is None
+    _assert_matches_oracle(compiled, q, catalog)

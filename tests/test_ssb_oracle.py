@@ -22,6 +22,7 @@ def _np_cols(table, *cols):
     return out
 
 
+@pytest.mark.slow
 def test_q11_matches_bruteforce(data):
     lo, date = data.lineorder, data.date
     od, disc, qty, price = _np_cols(lo, "lo_orderdate", "lo_discount",
@@ -37,6 +38,7 @@ def test_q11_matches_bruteforce(data):
     assert float(got["revenue"]) == pytest.approx(want_rev, rel=1e-5)
 
 
+@pytest.mark.slow
 def test_q21_groups_match_bruteforce(data):
     lo, date, part, supp = (data.lineorder, data.date, data.part,
                             data.supplier)
@@ -72,6 +74,7 @@ def test_q21_groups_match_bruteforce(data):
         assert key in want or val == pytest.approx(0.0, abs=1e-3)
 
 
+@pytest.mark.slow
 def test_q41_profit_total_matches_bruteforce(data):
     lo = data.lineorder
     ck, sk, pk, od, rev, cost = _np_cols(
