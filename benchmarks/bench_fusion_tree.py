@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core.fusion import predict_fused, predict_nonfused, prefuse, \
     random_tree

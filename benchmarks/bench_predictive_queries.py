@@ -8,13 +8,16 @@ plan (prefused partials, gathers + segment-sum) and the non-fused reference
 on the *whole* query, aggregation included.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_predictive_queries
+      [--sf 1.0] [--scale 0.003] [--json BENCH_predictive_queries.json]
 """
 from __future__ import annotations
+
+import argparse
 
 from repro.core.query import compile_query
 from repro.data import QUERY_IR, generate_ssb, ssb_catalog
 
-from .common import bench, emit
+from .common import bench, emit, write_json
 
 SCALE = 0.003   # shrink factor vs true SSB (CPU-sized)
 
@@ -45,5 +48,19 @@ def run(sf: float = 1.0, scale: float = SCALE):
              "Fig.4 one-hot matmul aggregation")
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=1.0)
+    ap.add_argument("--scale", type=float, default=SCALE,
+                    help="shrink factor vs true SSB (CI smoke uses ~0.001)")
+    ap.add_argument("--json", default=None,
+                    help="write rows to this JSON artifact path")
+    args = ap.parse_args()
+    run(sf=args.sf, scale=args.scale)
+    if args.json:
+        write_json(args.json, {"bench": "predictive_queries",
+                               "sf": args.sf, "scale": args.scale})
+
+
 if __name__ == "__main__":
-    run()
+    main()

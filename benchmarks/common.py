@@ -1,8 +1,9 @@
-"""Benchmark harness utilities: timing, CSV output."""
+"""Benchmark harness utilities: timing, CSV/JSON output."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -19,6 +20,25 @@ def emit(name: str, us: float, derived: str = ""):
 
 def rows():
     return list(_rows)
+
+
+def write_json(path: str, meta: Optional[dict] = None):
+    """Dump every row emitted so far as a JSON benchmark artifact.
+
+    The CI bench-smoke job uploads these (``BENCH_*.json``) on every PR —
+    a crash gate plus a perf trajectory, not a regression gate.
+    """
+    recs = []
+    for row in _rows:
+        name, us, derived = row.split(",", 2)
+        recs.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    payload = {"backend": jax.default_backend(), "rows": recs}
+    if meta:
+        payload.update(meta)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[bench] wrote {path} ({len(recs)} rows)", flush=True)
 
 
 def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -6,7 +6,6 @@ Eq. 1) and shows fused == non-fused with far less online work.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,7 +7,6 @@ configs are only exercised via the AOT dry-run).
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict
 
 _ARCHS = {
     "whisper-tiny": "whisper_tiny",

@@ -1,14 +1,16 @@
 """Operator fusion of ML models into LAQ star joins (paper §3)."""
 from .operators import (LinearOperator, DecisionTreeGEMM, tree_from_arrays,
                         random_tree, reference_tree_eval)
-from .pipeline import (PrefusedStar, prefuse, predict_fused,
-                       predict_fused_matmul, predict_nonfused,
+from .pipeline import (PrefusedStar, prefuse, prefuse_dims, predict_fused,
+                       predict_fused_kernel, predict_fused_matmul,
+                       predict_nonfused, predict_nonfused_kernel,
                        predict_nonfused_matmul)
 from .planner import FusionDecision, plan_fusion
 
 __all__ = [
     "LinearOperator", "DecisionTreeGEMM", "tree_from_arrays", "random_tree",
-    "reference_tree_eval", "PrefusedStar", "prefuse", "predict_fused",
-    "predict_fused_matmul", "predict_nonfused", "predict_nonfused_matmul",
+    "reference_tree_eval", "PrefusedStar", "prefuse", "prefuse_dims",
+    "predict_fused", "predict_fused_kernel", "predict_fused_matmul",
+    "predict_nonfused", "predict_nonfused_kernel", "predict_nonfused_matmul",
     "FusionDecision", "plan_fusion",
 ]

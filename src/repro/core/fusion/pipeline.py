@@ -19,13 +19,11 @@ dimension table, so masking non-owned nodes makes the partial sums exact
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
-from ..laq.projection import mapping_matrix
-from ..laq.star import StarJoin
+from ..laq.star import DimSpec, StarJoin, dim_mapping_matrices
 from .operators import DecisionTreeGEMM, LinearOperator
 
 Model = Union[LinearOperator, DecisionTreeGEMM]
@@ -42,33 +40,43 @@ class PrefusedStar:
         return sum(int(p.size) * p.dtype.itemsize for p in self.partials)
 
 
-def _feature_slices(star: StarJoin):
+def _feature_slices(dims: Sequence[DimSpec]):
     """[start, stop) of each dimension's block in T's k feature columns."""
     out = []
     off = 0
-    for d in star.dims:
+    for d in dims:
         out.append((off, off + len(d.feature_cols)))
         off += len(d.feature_cols)
     return out
 
 
-def prefuse(star: StarJoin, model: Model) -> PrefusedStar:
-    """Push the model's linear prefix into each dimension table (Eq. 1/3)."""
-    mats = star.mapping_matrices()
+def prefuse_dims(dims: Sequence[DimSpec], model: Model) -> PrefusedStar:
+    """Push the model's linear prefix into dimension tables (Eq. 1/3).
+
+    Operates on bare ``DimSpec``s — no fact table or resolved joins needed,
+    which is what lets the serving runtime pre-fuse once and serve arbitrary
+    request batches against the partials.
+    """
+    mats = dim_mapping_matrices(dims)
     parts = []
     if isinstance(model, LinearOperator):
-        for d, m in zip(star.dims, mats):
+        for d, m in zip(dims, mats):
             parts.append(d.dim.matrix @ (m @ model.L))       # B M L
         return PrefusedStar(tuple(parts), None)
     # Decision tree: per-dim node-ownership masks W_j from F's column blocks.
-    slices = _feature_slices(star)
+    slices = _feature_slices(dims)
     f_owner = jnp.argmax(model.F, axis=0)                     # feature per node
-    for d, m, (lo, hi) in zip(star.dims, mats, slices):
+    for d, m, (lo, hi) in zip(dims, mats, slices):
         own = ((f_owner >= lo) & (f_owner < hi)).astype(jnp.float32)  # (p,)
         feats = d.dim.matrix @ (m @ model.F)                  # (r_j, p)
         preds = (feats > model.v[None, :]).astype(jnp.float32) * own[None, :]
         parts.append(preds @ model.H)                         # (r_j, l)
     return PrefusedStar(tuple(parts), model.h)
+
+
+def prefuse(star: StarJoin, model: Model) -> PrefusedStar:
+    """Push the model's linear prefix into each dimension table (Eq. 1/3)."""
+    return prefuse_dims(star.dims, model)
 
 
 def predict_fused(star: StarJoin, pre: PrefusedStar) -> jnp.ndarray:
@@ -107,4 +115,40 @@ def predict_nonfused_matmul(star: StarJoin, model: Model) -> jnp.ndarray:
     """Paper-faithful baseline: dense-I materialization, then the model."""
     t = star.materialize_matmul()
     out = model.apply(t)
+    return out * star.row_valid[:, None].astype(out.dtype)
+
+
+def predict_fused_kernel(star: StarJoin, pre: PrefusedStar, *,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Online phase on the ``fused_star_gather`` Pallas kernel.
+
+    Same contraction as :func:`predict_fused` — Σⱼ Iⱼ Pⱼ (+ ``== h``) — but
+    executed as one scalar-prefetch kernel pass: the FK pointers land in SMEM
+    and each partial's rows are DMA'd HBM→VMEM directly, instead of XLA
+    gathers.  The per-arm liveness masks are applied inside the kernel; the
+    combined row validity is applied after the compare, which matches
+    :func:`predict_fused` bit-exactly in fp32 (identical add order).
+    """
+    from repro.kernels import fused_star_gather
+
+    ptrs = jnp.stack([fj.ptr for fj in star.joins])
+    found = jnp.stack([fj.found for fj in star.joins]).astype(jnp.int32)
+    out = fused_star_gather(ptrs, found, list(pre.partials), pre.h,
+                            interpret=interpret)
+    return out * star.row_valid[:, None].astype(out.dtype)
+
+
+def predict_nonfused_kernel(star: StarJoin, model: Model, *,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Baseline with the model step on the ``tree_predict`` Pallas kernel.
+
+    Only decision trees have a kernel lowering on the non-fused path
+    (``((T F > v) H) == h`` as one fused block); callers must gate on the
+    model type — linear heads stay on the XLA matmul.
+    """
+    from repro.kernels import tree_predict
+
+    t = star.materialize()
+    out = tree_predict(t, model.F, model.v, model.H, model.h,
+                       interpret=interpret)
     return out * star.row_valid[:, None].astype(out.dtype)

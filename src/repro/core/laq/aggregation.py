@@ -26,7 +26,6 @@ import jax
 import jax.numpy as jnp
 
 from .domain import key_domain, positions
-from .table import PAD_KEY
 
 PAD_GROUP = jnp.int32(2**31 - 1)
 

@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from .domain import key_domain, positions
@@ -102,20 +101,37 @@ class FactoredJoin:
         return oh * self.found[:, None].astype(dtype)
 
 
-def join_factored(fk: jnp.ndarray, pk: jnp.ndarray) -> FactoredJoin:
-    """PK-FK equi-join: pointer from each FK row into the PK relation.
+@dataclasses.dataclass(frozen=True)
+class PKIndex:
+    """Sorted primary-key index: the quasi-static half of ``join_factored``.
 
-    ``pk`` must have unique live keys (primary-key side of a star schema);
-    padded entries (PAD_KEY) never match.
+    Building it costs the argsort; probing is a searchsorted + two gathers.
+    The serving runtime builds one per arm at compile time and probes it
+    per request batch — sharing this probe with ``join_factored`` is what
+    keeps serving bit-identical to the compiled-query join.
     """
-    order = jnp.argsort(pk)
-    sorted_pk = jnp.take(pk, order)
-    pos = jnp.searchsorted(sorted_pk, fk).astype(jnp.int32)
-    n = pk.shape[0]
-    pos_c = jnp.clip(pos, 0, n - 1)
-    hit = (jnp.take(sorted_pk, pos_c) == fk) & (fk != PAD_KEY)
-    ptr = jnp.take(order, pos_c).astype(jnp.int32)
-    return FactoredJoin(ptr=jnp.where(hit, ptr, 0), found=hit)
+
+    sorted_pk: jnp.ndarray   # ascending (PAD_KEY sorts last)
+    order: jnp.ndarray       # int32 argsort permutation
+
+    def probe(self, fk: jnp.ndarray) -> FactoredJoin:
+        pos = jnp.searchsorted(self.sorted_pk, fk).astype(jnp.int32)
+        pos_c = jnp.clip(pos, 0, self.sorted_pk.shape[0] - 1)
+        hit = (jnp.take(self.sorted_pk, pos_c) == fk) & (fk != PAD_KEY)
+        ptr = jnp.take(self.order, pos_c).astype(jnp.int32)
+        return FactoredJoin(ptr=jnp.where(hit, ptr, 0), found=hit)
+
+
+def pk_index(pk: jnp.ndarray) -> PKIndex:
+    """Sort the PK side once; ``pk`` must have unique live keys and padded
+    entries (PAD_KEY) never match."""
+    order = jnp.argsort(pk).astype(jnp.int32)
+    return PKIndex(sorted_pk=jnp.take(pk, order), order=order)
+
+
+def join_factored(fk: jnp.ndarray, pk: jnp.ndarray) -> FactoredJoin:
+    """PK-FK equi-join: pointer from each FK row into the PK relation."""
+    return pk_index(pk).probe(fk)
 
 
 # --------------------------------------------------------------------------

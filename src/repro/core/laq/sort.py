@@ -12,7 +12,7 @@ from typing import Sequence
 
 import jax.numpy as jnp
 
-from .table import Table, PAD_KEY
+from .table import Table
 
 
 def order_by(table: Table, cols: Sequence[str],

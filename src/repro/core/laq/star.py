@@ -47,17 +47,7 @@ class StarJoin:
         Each dimension owns a disjoint block of the k target columns, so M_j
         has zero rows outside its block (Eq. 1's `+` composition is exact).
         """
-        k = self.feature_width
-        mats = []
-        offset = 0
-        for d in self.dims:
-            c = d.dim.ncols
-            m = jnp.zeros((c, k), jnp.float32)
-            for t, col in enumerate(d.feature_cols):
-                m = m.at[d.dim.col_index(col), offset + t].set(1.0)
-            mats.append(m)
-            offset += len(d.feature_cols)
-        return tuple(mats)
+        return dim_mapping_matrices(self.dims)
 
     def materialize(self) -> jnp.ndarray:
         """T = Σⱼ Iⱼ (Bⱼ Mⱼ) via gathers — (fact_capacity, k) float32.
@@ -81,6 +71,25 @@ class StarJoin:
             i_dense = fj.dense(d.dim.capacity)          # (r_fact, r_dim)
             out = out + i_dense @ (d.dim.matrix @ m)    # Iⱼ Bⱼ Mⱼ
         return out * self.row_valid[:, None]
+
+
+def dim_mapping_matrices(dims: Sequence[DimSpec]) -> Tuple[jnp.ndarray, ...]:
+    """M_j for a sequence of arms, independent of any fact table.
+
+    The quasi-static half of Eq. 1 only needs the dimension tables, so the
+    serving runtime can pre-fuse partials without ever resolving a join.
+    """
+    k = sum(len(d.feature_cols) for d in dims)
+    mats = []
+    offset = 0
+    for d in dims:
+        c = d.dim.ncols
+        m = jnp.zeros((c, k), jnp.float32)
+        for t, col in enumerate(d.feature_cols):
+            m = m.at[d.dim.col_index(col), offset + t].set(1.0)
+        mats.append(m)
+        offset += len(d.feature_cols)
+    return tuple(mats)
 
 
 def star_join(fact: Table, dims: Sequence[DimSpec]) -> StarJoin:

@@ -26,19 +26,47 @@ IR node                 Paper construct
 ======================  =====================================================
 
 ``plan_query`` extends the paper's Eq. 2/4 fusion boundary with selection
-selectivity and the Fig. 4 aggregation-backend choice; ``compile_query``
-lowers the winning plan into a single jitted XLA program and exposes a
-row-batched serving entry point (``CompiledQuery.predict_rows``).
+selectivity, the Fig. 4 aggregation-backend choice, and the serving-kernel
+choice (``plan_serving_backend``); ``compile_query`` lowers the winning plan
+into a single jitted XLA program and exposes a row-batched serving entry
+point (``CompiledQuery.predict_rows``).
+
+Serving API
+-----------
+``compile_serving(catalog, q, buckets=...)`` compiles the *online phase
+alone* over a ``(batch, fk...)`` request pytree and returns a
+:class:`ServingRuntime` — the production entry point when requests are
+arbitrary incoming key tuples rather than fact rows:
+
+    runtime = compile_serving(catalog, query, buckets=(8, 64, 512))
+    preds = runtime.serve({"lo_partkey": ..., "lo_suppkey": ..., ...})
+
+Bucket policy: each batch is PAD_KEY-padded up to the smallest configured
+bucket and dispatched through that bucket's jitted program (one trace per
+bucket, ever — ``runtime.num_compiles`` proves it); batches above the top
+bucket are served in top-bucket chunks.  Buckets are the latency/memory
+knob: more buckets → tighter padding waste, fewer buckets → fewer compiled
+programs.  ``runtime.latency_stats()`` reports per-bucket percentiles.
+``serve_backend`` lowers the gather-sum onto the Pallas kernels
+(``fused_star_gather`` / ``tree_predict``) when shapes fit; the jnp gather
+path stays the bit-exact fp32 reference.
 """
 from .ir import (PREDICTION, Aggregate, ArmSpec, GroupKey, PredictiveQuery,
                  eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
 from .planner import (AggDecision, QueryPlan, plan_aggregation, plan_query,
-                      DENSE_JOIN_ELEMS, MXU_SEGMENT_ADVANTAGE)
+                      plan_serving_backend, DENSE_JOIN_ELEMS,
+                      MXU_SEGMENT_ADVANTAGE, SERVE_KERNEL_MAX_NODES,
+                      SERVE_KERNEL_MAX_WIDTH)
+from .serving import (DEFAULT_BUCKETS, ServingRuntime, compile_serving,
+                      requests_from_rows)
 
 __all__ = [
     "PREDICTION", "Aggregate", "ArmSpec", "GroupKey", "PredictiveQuery",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",
     "AggDecision", "QueryPlan", "plan_aggregation", "plan_query",
-    "DENSE_JOIN_ELEMS", "MXU_SEGMENT_ADVANTAGE",
+    "plan_serving_backend", "DENSE_JOIN_ELEMS", "MXU_SEGMENT_ADVANTAGE",
+    "SERVE_KERNEL_MAX_NODES", "SERVE_KERNEL_MAX_WIDTH",
+    "DEFAULT_BUCKETS", "ServingRuntime", "compile_serving",
+    "requests_from_rows",
 ]

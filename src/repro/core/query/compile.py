@@ -25,8 +25,10 @@ from typing import Dict, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..fusion.operators import DecisionTreeGEMM
 from ..fusion.pipeline import (PrefusedStar, predict_fused,
-                               predict_fused_matmul, predict_nonfused,
+                               predict_fused_kernel, predict_fused_matmul,
+                               predict_nonfused, predict_nonfused_kernel,
                                predict_nonfused_matmul, prefuse)
 from ..laq.aggregation import (composite_code, groupby_codes,
                                matmul_aggregate, segment_aggregate)
@@ -37,7 +39,7 @@ from ..laq.star import DimSpec, StarJoin
 from ..laq.table import Table
 from .ir import (PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
-from .planner import QueryPlan, plan_query
+from .planner import QueryPlan, effective_serve_backend, plan_query
 
 
 @dataclasses.dataclass
@@ -49,6 +51,7 @@ class CompiledQuery:
     backend: str                    # "fused" | "nonfused"
     join_backend: str               # "gather" | "matmul"
     agg_backend: str                # "segment" | "matmul"
+    serve_backend: str              # "jnp" | "pallas"
     star: StarJoin
     prefused: Optional[PrefusedStar]
     selectivity: float              # measured fraction of surviving fact rows
@@ -151,15 +154,23 @@ def _check_aggregates(q: PredictiveQuery):
 
 def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   backend: str = "auto", join_backend: str = "auto",
-                  agg_backend: str = "auto",
+                  agg_backend: str = "auto", serve_backend: str = "auto",
                   select_capacity: Optional[int] = None,
                   batches_per_update: float = 1000.0,
-                  memory_budget_bytes: Optional[int] = None) -> CompiledQuery:
+                  memory_budget_bytes: Optional[int] = None,
+                  interpret: bool = False) -> CompiledQuery:
     """Plan + lower ``q`` against ``catalog`` into one jitted program.
 
     ``backend`` / ``join_backend`` / ``agg_backend`` override the planner
     ("auto" defers to the cost model); explicit "matmul" backends give the
     paper-faithful reference lowering used by tests and benchmarks.
+    ``serve_backend`` picks the physical kernel for the *serving* paths —
+    ``predict_rows`` always, and ``predictions`` when the join backend is
+    "gather" (the dense "matmul" join is its own paper-faithful lowering):
+    "pallas" lowers the fused gather-sum onto ``fused_star_gather`` and
+    non-fused trees onto ``tree_predict`` ("auto" picks it on TPU when the
+    shapes fit the block specs); ``interpret=True`` runs the kernels in
+    interpret mode so the lowering is testable on CPU.
 
     ``select_capacity`` applies the fact predicates by ``mask_select``
     compaction (§2.2) *before* the joins: surviving rows are packed into a
@@ -169,7 +180,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     """
     for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
                          (join_backend, ("auto", "gather", "matmul")),
-                         (agg_backend, ("auto", "segment", "matmul"))):
+                         (agg_backend, ("auto", "segment", "matmul")),
+                         (serve_backend, ("auto", "jnp", "pallas"))):
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     _check_aggregates(q)
@@ -209,6 +221,12 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     join_backend = plan.join_backend if join_backend == "auto" else join_backend
     agg_backend = ((plan.agg.backend if plan.agg else "segment")
                    if agg_backend == "auto" else agg_backend)
+    serve_backend = effective_serve_backend(plan, serve_backend, backend,
+                                            q.model, len(star.dims))
+    if serve_backend != plan.serve_backend:
+        plan = dataclasses.replace(
+            plan, serve_backend=serve_backend,
+            reason=f"{plan.reason}; serve={serve_backend} (caller override)")
 
     prefused = None
     if q.model is not None and backend == "fused":
@@ -225,10 +243,18 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
 
     def _predictions():
         if backend == "fused":
-            return (predict_fused(star, prefused) if join_backend == "gather"
-                    else predict_fused_matmul(star, prefused))
-        return (predict_nonfused(star, q.model) if join_backend == "gather"
-                else predict_nonfused_matmul(star, q.model))
+            if join_backend != "gather":
+                return predict_fused_matmul(star, prefused)
+            if serve_backend == "pallas":
+                return predict_fused_kernel(star, prefused,
+                                            interpret=interpret)
+            return predict_fused(star, prefused)
+        if join_backend != "gather":
+            return predict_nonfused_matmul(star, q.model)
+        if serve_backend == "pallas":   # resolve_ guarantees a tree model
+            return predict_nonfused_kernel(star, q.model,
+                                           interpret=interpret)
+        return predict_nonfused(star, q.model)
 
     def _online():
         pred = _predictions() if q.model is not None else None
@@ -248,19 +274,34 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     if q.model is not None:
         predict_jit = jax.jit(_predictions)
         predict_rows_jit = jax.jit(
-            _make_predict_rows(star, q.model, prefused, backend))
+            _make_predict_rows(star, q.model, prefused, backend,
+                               serve_backend, interpret))
 
     return CompiledQuery(
         query=q, plan=plan, backend=backend, join_backend=join_backend,
-        agg_backend=agg_backend, star=star, prefused=prefused,
-        selectivity=sel, group_codes=uniq, _gid=gid, _rows=rows,
-        _run=jax.jit(_online), _predict=predict_jit,
+        agg_backend=agg_backend, serve_backend=serve_backend, star=star,
+        prefused=prefused, selectivity=sel, group_codes=uniq, _gid=gid,
+        _rows=rows, _run=jax.jit(_online), _predict=predict_jit,
         _predict_rows=predict_rows_jit)
 
 
 def _make_predict_rows(star: StarJoin, model, prefused: Optional[PrefusedStar],
-                       backend: str):
+                       backend: str, serve_backend: str = "jnp",
+                       interpret: bool = False):
     """Row-batched prediction: the serving path (fact rows as requests)."""
+    if backend == "fused" and serve_backend == "pallas":
+        def fn(row_ids):
+            from repro.kernels import fused_star_gather
+            v = jnp.take(star.row_valid, row_ids)
+            ptrs = jnp.stack([jnp.take(fj.ptr, row_ids)
+                              for fj in star.joins])
+            found = jnp.stack([jnp.take(fj.found, row_ids)
+                               for fj in star.joins]).astype(jnp.int32)
+            out = fused_star_gather(ptrs, found, list(prefused.partials),
+                                    prefused.h, interpret=interpret)
+            return out * v[:, None].astype(out.dtype)
+        return fn
+
     if backend == "fused":
         def fn(row_ids):
             v = jnp.take(star.row_valid, row_ids)
@@ -289,7 +330,12 @@ def _make_predict_rows(star: StarJoin, model, prefused: Optional[PrefusedStar],
             parts.append(jnp.take(proj, ptr, axis=0)
                          * hit[:, None].astype(proj.dtype))
         t = jnp.concatenate(parts, axis=1) * v[:, None].astype(jnp.float32)
-        out = model.apply(t)
+        if serve_backend == "pallas" and isinstance(model, DecisionTreeGEMM):
+            from repro.kernels import tree_predict
+            out = tree_predict(t, model.F, model.v, model.H, model.h,
+                               interpret=interpret)
+        else:
+            out = model.apply(t)
         return out * v[:, None].astype(out.dtype)
     return fn
 

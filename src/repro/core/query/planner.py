@@ -17,8 +17,11 @@ to the full predictive query:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
+import jax
+
+from ..fusion.operators import DecisionTreeGEMM
 from ..fusion.planner import FusionDecision, plan_fusion
 from .ir import Model
 
@@ -31,6 +34,13 @@ DENSE_JOIN_ELEMS = 1 << 14
 # Calibrated on bench_predictive_queries (G=8,l=4 matmul 4× faster; G=8192
 # matmul 300× slower — any value in [13, ~1000) separates the two regimes).
 MXU_SEGMENT_ADVANTAGE = 16.0
+
+# fused_star_gather holds (J+1) lane-padded (1, l) row blocks in VMEM per
+# grid step; tree_predict additionally keeps the (k, p) feature-selection
+# block resident.  Both are far below VMEM at these bounds, which exist to
+# refuse pathological widths rather than to pack VMEM tightly.
+SERVE_KERNEL_MAX_WIDTH = 8192
+SERVE_KERNEL_MAX_NODES = 16384
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +59,72 @@ class QueryPlan:
     fusion: Optional[FusionDecision]
     selectivity: float
     reason: str
+    serve_backend: str = "jnp"   # "jnp" | "pallas" — online gather-sum kernel
+
+
+def plan_serving_backend(model: Optional[Model], num_arms: int, *,
+                         backend: str = "fused",
+                         platform: Optional[str] = None) -> Tuple[str, str]:
+    """Physical backend for the online gather-sum: Pallas kernel or jnp.
+
+    Returns ``(backend, reason)``.  The Pallas lowering only pays off when
+    the shapes fit the kernels' block specs (SystemML's fusion-plan lesson:
+    a fused operator is only a win on the right physical kernel); everything
+    else falls back to the pure-jnp gathers, which XLA lowers well on every
+    platform.  Pallas TPU kernels also run on CPU in interpret mode — tests
+    and the CI kernels-interpret job force ``serve_backend="pallas"`` with
+    ``interpret=True`` there, so the choice here is only the *default*.
+    """
+    if platform is None:
+        platform = jax.default_backend()
+    if model is None:
+        return "jnp", "no model head: nothing to lower onto a kernel"
+    if platform != "tpu":
+        return "jnp", f"platform {platform!r}: Pallas TPU kernels need a TPU"
+    if backend == "fused":
+        if num_arms < 1:
+            return "jnp", "no arms: no gather-sum to lower"
+        if model.l > SERVE_KERNEL_MAX_WIDTH:
+            return "jnp", (f"l={model.l} exceeds fused_star_gather width "
+                           f"bound {SERVE_KERNEL_MAX_WIDTH}")
+        return "pallas", (f"fused_star_gather fits: J={num_arms}, "
+                          f"l={model.l}")
+    if isinstance(model, DecisionTreeGEMM):
+        if (model.p <= SERVE_KERNEL_MAX_NODES
+                and model.l <= SERVE_KERNEL_MAX_WIDTH):
+            return "pallas", (f"tree_predict fits: p={model.p}, l={model.l}")
+        return "jnp", (f"tree p={model.p}/l={model.l} exceeds tree_predict "
+                       "block bounds")
+    return "jnp", "nonfused linear head: XLA matmul already optimal"
+
+
+def resolve_serve_backend(serve_backend: str, backend: str, model) -> str:
+    """Clamp a requested serve backend to one that actually has a kernel.
+
+    A non-fused *linear* head has no Pallas lowering (its online step is a
+    plain matmul), so a "pallas" request degrades to "jnp" there — keeping
+    the recorded serve_backend an honest statement of what executes.
+    """
+    if serve_backend != "pallas" or backend == "fused":
+        return serve_backend
+    return "pallas" if isinstance(model, DecisionTreeGEMM) else "jnp"
+
+
+def effective_serve_backend(plan: "QueryPlan", serve_backend: str,
+                            backend: str, model, num_arms: int) -> str:
+    """The serve backend that will actually execute.
+
+    "auto" must be re-planned against the *resolved* execution backend —
+    the plan's own choice was made for the planner's backend, and e.g. an
+    oversized tree that fits the fused kernel's width bound does not fit
+    ``tree_predict``'s node bound.  Explicit choices are clamped only where
+    no kernel lowering exists (non-fused linear heads).
+    """
+    if serve_backend == "auto":
+        if backend == plan.backend:
+            return plan.serve_backend
+        return plan_serving_backend(model, num_arms, backend=backend)[0]
+    return resolve_serve_backend(serve_backend, backend, model)
 
 
 def plan_aggregation(online_rows: float, num_groups: int,
@@ -71,8 +147,9 @@ def plan_query(model: Optional[Model], fact_rows: int,
                dim_rows: Sequence[int], *, selectivity: float = 1.0,
                num_groups: int = 0, out_width: int = 1,
                batches_per_update: float = 1000.0,
-               memory_budget_bytes: Optional[int] = None) -> QueryPlan:
-    """Pick fused/nonfused + join/aggregation backends for one query."""
+               memory_budget_bytes: Optional[int] = None,
+               platform: Optional[str] = None) -> QueryPlan:
+    """Pick fused/nonfused + join/agg/serving backends for one query."""
     sel = min(max(float(selectivity), 0.0), 1.0)
     online_rows = float(fact_rows) * sel
 
@@ -92,11 +169,15 @@ def plan_query(model: Optional[Model], fact_rows: int,
     if num_groups > 0:
         agg = plan_aggregation(online_rows, num_groups, out_width)
 
+    serve_backend, serve_reason = plan_serving_backend(
+        model, len(dim_rows), backend=backend, platform=platform)
+
     parts = [f"sel={sel:.3f}", f"join={join_backend}"]
     if fusion is not None:
         parts.append(f"{backend} ({fusion.reason})")
     if agg is not None:
         parts.append(f"agg={agg.backend}")
+    parts.append(f"serve={serve_backend} ({serve_reason})")
     return QueryPlan(backend=backend, join_backend=join_backend, agg=agg,
                      fusion=fusion, selectivity=sel,
-                     reason="; ".join(parts))
+                     reason="; ".join(parts), serve_backend=serve_backend)

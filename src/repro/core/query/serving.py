@@ -1,0 +1,380 @@
+"""Dynamic-batch serving: compile the fused online phase once, serve any
+request batch.
+
+``compile_query`` binds a static fact table, so its serving entry point
+(``CompiledQuery.predict_rows``) can only score *fact rows*.  This module
+traces the fused online phase over a ``(batch, fk...)`` request pytree
+instead: a request is one foreign key per star arm, and the compiled program
+is exactly the paper's Eq. 1 online phase — per-arm PK lookups into the
+quasi-static sorted key index, then Σⱼ Pⱼ[ptrⱼ] gathers into the pre-fused
+partials (+ ``== h`` for trees).  One compiled plan therefore serves
+arbitrary incoming batches, not just rows the fact table happened to
+contain.
+
+Bucketed padding policy
+-----------------------
+XLA needs static shapes, so each incoming batch is padded (with ``PAD_KEY``,
+which never matches a live PK) up to the smallest configured *bucket* size
+and dispatched through one jitted program per bucket.  The jit cache is
+keyed on the padded shape, so after at most ``len(buckets)`` traces no
+request ever recompiles; batches larger than the top bucket are served in
+top-bucket chunks.  Request buffers are donated on accelerators so the
+padded int32 staging arrays are recycled across calls.
+
+Physical lowering
+-----------------
+The gather-sum is lowered onto the Pallas kernels when the planner says the
+shapes fit their block specs (``plan_serving_backend``): the fused path onto
+``kernels/fused_star_gather`` (scalar-prefetched FK pointers, one DMA pass),
+the non-fused decision-tree path onto ``kernels/tree_predict``.  Everything
+else uses the pure-jnp gathers, which remain the reference semantics — the
+kernel backends match them bit-exactly in fp32.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fusion.operators import DecisionTreeGEMM
+from ..fusion.pipeline import prefuse_dims
+from ..laq.join import PKIndex, pk_index
+from ..laq.projection import mapping_matrix
+from ..laq.star import DimSpec
+from ..laq.table import PAD_KEY, Table
+from .ir import PredictiveQuery
+from .planner import QueryPlan, effective_serve_backend, plan_query
+
+#: Default padding buckets: small interactive batches, mid-size batches, and
+#: a bulk bucket that also serves as the chunk size for oversized requests.
+DEFAULT_BUCKETS = (8, 64, 512)
+
+#: Per-bucket latency samples kept for the percentile report (a bounded
+#: window, so a long-lived runtime's bookkeeping stays O(1) per bucket).
+LATENCY_WINDOW = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class _ArmIndex:
+    """Quasi-static per-arm lookup state (paper's offline phase, per arm).
+
+    ``index`` factors the PK side of ``join_factored`` out of the online
+    program: the sort runs once at compile time, the online lookup is the
+    shared ``PKIndex.probe`` (searchsorted + two gathers) — the *same*
+    probe the compiled-query join uses, which is what keeps serving
+    bit-identical to ``predict_rows``.  ``dmask`` carries the
+    dimension-side predicates and row liveness, folded into the lookup's
+    validity exactly like the compiler folds them into the join (§2.2).
+    """
+
+    fk_col: str
+    index: PKIndex
+    dmask: jnp.ndarray       # (r,) bool, in dimension-row order
+    table: jnp.ndarray       # (r, w) prefused partial / projected features
+
+
+def _lookup(arm: _ArmIndex, fk: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """PK–FK pointer lookup for a request column, with dim preds folded."""
+    fj = arm.index.probe(fk)
+    hit = fj.found & jnp.take(arm.dmask, fj.ptr)
+    return fj.ptr, hit
+
+
+class ServingRuntime:
+    """One compiled predictive pipeline serving arbitrary request batches.
+
+    Built by :func:`compile_serving`; hold one instance per (query, catalog)
+    and call :meth:`serve` with request batches of any size.  Thread-compat:
+    serving is functional over quasi-static arrays; only the latency/trace
+    bookkeeping is unsynchronized.
+    """
+
+    def __init__(self, query: PredictiveQuery, plan: QueryPlan, backend: str,
+                 serve_backend: str, buckets: Tuple[int, ...],
+                 arms: Tuple[_ArmIndex, ...], model, h: Optional[jnp.ndarray],
+                 interpret: bool, donate: bool, sync_stats: bool = True):
+        self.query = query
+        self.plan = plan
+        self.backend = backend                # "fused" | "nonfused"
+        self.serve_backend = serve_backend    # "jnp" | "pallas"
+        self.buckets = buckets
+        self._arms = arms
+        self._model = model
+        self._h = h
+        self._interpret = interpret
+        self._sync_stats = sync_stats
+        self._trace_count = 0
+        self._lat: Dict[int, Deque[float]] = {}
+        self._compile_s: Dict[int, float] = {}
+        donate_argnums = (0,) if donate else ()
+        self._jit = jax.jit(self._forward, donate_argnums=donate_argnums)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def request_keys(self) -> Tuple[str, ...]:
+        """FK column names a request must provide, in arm order."""
+        return tuple(a.fk_col for a in self._arms)
+
+    @property
+    def out_width(self) -> int:
+        return self._model.l
+
+    @property
+    def num_compiles(self) -> int:
+        """Traces taken so far — bounded by ``len(buckets)`` for life."""
+        return self._trace_count
+
+    def jit_cache_size(self) -> Optional[int]:
+        """The jit executable cache size (None if jax hides it)."""
+        try:
+            return self._jit._cache_size()
+        except AttributeError:
+            return None
+
+    def latency_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-bucket steady-state serve latency percentiles (ms).
+
+        Each bucket's one-time trace+compile call is kept out of the
+        percentiles and reported separately as ``compile_ms``; a bucket
+        that has only ever compiled still appears, with ``count == 0`` and
+        no percentile keys.  Percentiles measure wall time only when the
+        runtime synchronizes per call (``sync_stats``, the default).
+        """
+        out = {}
+        for bucket in sorted(set(self._lat) | set(self._compile_s)):
+            ts = self._lat.get(bucket, ())
+            out[bucket] = {"count": len(ts)}
+            if ts:
+                ms = np.asarray(ts) * 1e3
+                out[bucket].update(
+                    p50=float(np.percentile(ms, 50)),
+                    p95=float(np.percentile(ms, 95)),
+                    p99=float(np.percentile(ms, 99)),
+                )
+            if bucket in self._compile_s:
+                out[bucket]["compile_ms"] = self._compile_s[bucket] * 1e3
+        return out
+
+    # -- the compiled program ------------------------------------------------
+    def _forward(self, fks: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+        # Python side effect: runs once per trace (i.e. once per bucket).
+        self._trace_count += 1
+        ptrs, hits = [], []
+        for arm, fk in zip(self._arms, fks):
+            ptr, hit = _lookup(arm, fk)
+            ptrs.append(ptr)
+            hits.append(hit)
+        valid = hits[0]
+        for hit in hits[1:]:
+            valid = valid & hit
+        if self.backend == "fused":
+            out = self._online_fused(ptrs, hits, valid)
+        else:
+            out = self._online_nonfused(ptrs, hits, valid)
+        return out * valid[:, None].astype(out.dtype)
+
+    def _online_fused(self, ptrs, hits, valid) -> jnp.ndarray:
+        tables = [a.table for a in self._arms]
+        if self.serve_backend == "pallas":
+            from repro.kernels import fused_star_gather
+            return fused_star_gather(
+                jnp.stack(ptrs), jnp.stack(hits).astype(jnp.int32),
+                tables, self._h, interpret=self._interpret)
+        acc = None
+        for ptr, hit, tbl in zip(ptrs, hits, tables):
+            part = jnp.take(tbl, ptr, axis=0) * hit[:, None].astype(tbl.dtype)
+            acc = part if acc is None else acc + part
+        if self._h is None:
+            return acc
+        acc = acc * valid[:, None].astype(acc.dtype)
+        return (acc == self._h[None, :].astype(acc.dtype)).astype(acc.dtype)
+
+    def _online_nonfused(self, ptrs, hits, valid) -> jnp.ndarray:
+        parts = []
+        for arm, ptr, hit in zip(self._arms, ptrs, hits):
+            rows = jnp.take(arm.table, ptr, axis=0)
+            parts.append(rows * hit[:, None].astype(rows.dtype))
+        t = jnp.concatenate(parts, axis=1) * valid[:, None].astype(jnp.float32)
+        if (self.serve_backend == "pallas"
+                and isinstance(self._model, DecisionTreeGEMM)):
+            from repro.kernels import tree_predict
+            m = self._model
+            return tree_predict(t, m.F, m.v, m.H, m.h,
+                                interpret=self._interpret)
+        return self._model.apply(t)
+
+    # -- request entry points ------------------------------------------------
+    def serve(self, requests) -> jnp.ndarray:
+        """Predictions for a request batch — any size, no recompilation.
+
+        ``requests`` is a mapping ``{fk_col: (n,) ints}`` covering
+        :attr:`request_keys`, a sequence of per-arm key arrays in arm order,
+        or a stacked ``(num_arms, n)`` array.  Returns ``(n, l)`` fp32
+        predictions; requests whose keys miss a live (predicate-passing)
+        dimension row score zero, matching inner-join semantics.
+        """
+        fks = self._normalize(requests)
+        n = int(fks[0].shape[0])
+        if n == 0:
+            return jnp.zeros((0, self.out_width), jnp.float32)
+        top = self.buckets[-1]
+        if n > top:
+            chunks = [self._serve_bucketed([f[i:i + top] for f in fks])
+                      for i in range(0, n, top)]
+            return jnp.concatenate(chunks, axis=0)
+        return self._serve_bucketed(fks)
+
+    def _serve_bucketed(self, fks: List[np.ndarray]) -> jnp.ndarray:
+        n = int(fks[0].shape[0])
+        bucket = next(b for b in self.buckets if b >= n)
+        padded = tuple(
+            jnp.asarray(np.pad(f, (0, bucket - n), constant_values=PAD_KEY))
+            for f in fks)
+        traces_before = self._trace_count
+        t0 = time.perf_counter()
+        out = self._jit(padded)
+        if self._sync_stats:
+            # Wall-clock percentiles need a device fence; latency-sensitive
+            # callers pass sync_stats=False to keep async dispatch (stats
+            # then record dispatch time only).
+            jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        if self._trace_count > traces_before:
+            # First call into this bucket: dominated by trace + XLA compile,
+            # which would otherwise masquerade as a p99 outlier.
+            self._compile_s[bucket] = dt
+        else:
+            self._lat.setdefault(
+                bucket, collections.deque(maxlen=LATENCY_WINDOW)).append(dt)
+        return out[:n]
+
+    def _normalize(self, requests) -> List[np.ndarray]:
+        keys = self.request_keys
+        if isinstance(requests, Mapping):
+            missing = [k for k in keys if k not in requests]
+            if missing:
+                raise KeyError(f"request batch missing fk columns {missing}")
+            cols = [requests[k] for k in keys]
+        else:
+            arr = requests
+            if isinstance(arr, (np.ndarray, jnp.ndarray)) and arr.ndim == 1:
+                cols = [arr]
+            else:
+                cols = list(arr)
+        if len(cols) != len(keys):
+            raise ValueError(
+                f"expected {len(keys)} fk columns {keys}, got {len(cols)}")
+        out = [np.asarray(c, np.int32).reshape(-1) for c in cols]
+        n = out[0].shape[0]
+        if any(c.shape[0] != n for c in out):
+            raise ValueError("ragged fk columns in one request batch")
+        return out
+
+
+def requests_from_rows(fact: Table, q: PredictiveQuery, row_ids
+                       ) -> Dict[str, np.ndarray]:
+    """Lift fact-row ids into the equivalent FK request batch.
+
+    Bridges the old serving interface (``predict_rows`` on fact rows) onto
+    the dynamic runtime: the request carries exactly the fact rows' foreign
+    keys, so serving it reproduces ``predict_rows`` for rows that pass the
+    fact-side predicates.
+    """
+    ids = np.asarray(row_ids, np.int64)
+    return {a.fk_col: np.asarray(fact.key(a.fk_col))[ids].astype(np.int32)
+            for a in q.arms}
+
+
+def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
+                    backend: str = "auto", serve_backend: str = "auto",
+                    buckets: Sequence[int] = DEFAULT_BUCKETS,
+                    interpret: bool = False, donate: Optional[bool] = None,
+                    sync_stats: bool = True,
+                    batches_per_update: float = 1000.0,
+                    memory_budget_bytes: Optional[int] = None
+                    ) -> ServingRuntime:
+    """Compile ``q``'s online phase over a (batch, fk...) request pytree.
+
+    The quasi-static phase (PK sort, predicate masks, Eq. 1 pre-fusion) runs
+    here, once; the returned :class:`ServingRuntime` then serves arbitrary
+    request batches through a fixed set of shape buckets with no
+    recompilation beyond one trace per bucket.
+
+    ``backend`` picks fused/nonfused execution ("auto" → cost model, sized
+    at the top bucket); ``serve_backend`` picks the jnp gathers or the
+    Pallas kernel lowering ("auto" → :func:`plan_serving_backend`; pass
+    ``"pallas"`` with ``interpret=True`` to exercise the kernels on CPU).
+    ``donate`` donates the padded request buffers to the compiled program
+    (default: only on accelerators, where donation is supported).
+    ``sync_stats=False`` drops the per-call device fence used for wall-clock
+    latency percentiles, preserving async dispatch on the hot path (stats
+    then record dispatch time only).
+
+    Fact-side state is deliberately absent: requests are *not* fact rows, so
+    ``q.fact_preds`` (predicates over fact measures) cannot apply and are
+    ignored; dimension-side predicates are folded into the lookup validity.
+    """
+    if q.model is None:
+        raise ValueError("compile_serving requires a model head")
+    if not q.arms:
+        raise ValueError("compile_serving requires at least one star arm")
+    for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
+                         (serve_backend, ("auto", "jnp", "pallas"))):
+        if arg not in allowed:
+            raise ValueError(f"backend {arg!r} not one of {allowed}")
+    buckets = tuple(sorted({int(b) for b in buckets}))
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+
+    dims = [DimSpec(catalog[a.table], a.fk_col, a.pk_col, a.feature_cols)
+            for a in q.arms]
+    dim_rows = []
+    for d in dims:
+        try:
+            dim_rows.append(int(d.dim.nvalid))
+        except jax.errors.ConcretizationTypeError:
+            dim_rows.append(d.dim.capacity)
+    plan = plan_query(q.model, buckets[-1], dim_rows,
+                      selectivity=1.0, num_groups=0, out_width=q.model.l,
+                      batches_per_update=batches_per_update,
+                      memory_budget_bytes=memory_budget_bytes)
+    backend = plan.backend if backend == "auto" else backend
+    serve_backend = effective_serve_backend(plan, serve_backend, backend,
+                                            q.model, len(dims))
+    if serve_backend != plan.serve_backend:
+        plan = dataclasses.replace(
+            plan, serve_backend=serve_backend,
+            reason=f"{plan.reason}; serve={serve_backend} (caller override)")
+
+    if backend == "fused":
+        pre = prefuse_dims(dims, q.model)
+        tables = pre.partials
+        h = pre.h
+    else:
+        tables = tuple(
+            d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
+            for d in dims)
+        h = None
+
+    arms = []
+    for arm, d, tbl in zip(q.arms, dims, tables):
+        dmask = d.dim.valid_mask()
+        for p in arm.preds:
+            dmask = dmask & p.mask(d.dim)
+        arms.append(_ArmIndex(fk_col=arm.fk_col,
+                              index=pk_index(d.dim.key(arm.pk_col)),
+                              dmask=dmask, table=tbl))
+
+    if donate is None:
+        donate = jax.default_backend() in ("tpu", "gpu")
+    return ServingRuntime(query=q, plan=plan, backend=backend,
+                          serve_backend=serve_backend, buckets=buckets,
+                          arms=tuple(arms), model=q.model, h=h,
+                          interpret=interpret, donate=donate,
+                          sync_stats=sync_stats)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Iterator, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

@@ -28,6 +28,11 @@ def fused_star_gather(ptrs: jnp.ndarray, found: jnp.ndarray,
       h:      optional (l,) compare vector (decision-tree online phase).
     """
     l = tables[0].shape[1]
+    n = ptrs.shape[1]
+    if n == 0:
+        # Zero-row grid: nothing to DMA, and a (0,)-sized Pallas grid is
+        # rejected by the lowering — short-circuit to an empty result.
+        return jnp.zeros((0, l), jnp.float32)
     pad_l = (-l) % 128
     tabs = []
     for t in tables:

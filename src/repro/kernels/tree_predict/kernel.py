@@ -14,7 +14,6 @@ is ≈ 1.6 MiB.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

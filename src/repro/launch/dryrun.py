@@ -74,7 +74,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
             jitted = jax.jit(step)
         else:  # decode
             step = S.make_decode_step(model, cfg)
-            from jax.sharding import NamedSharding, PartitionSpec as P
+            from jax.sharding import NamedSharding
             from .sharding import safe_spec
             from .mesh import dp_axes
             b = S.SHAPES[shape]["batch"]

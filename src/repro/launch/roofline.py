@@ -19,11 +19,11 @@ redundant-compute waste.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.models import ModelConfig
 
-from .hlo_analysis import Costs, HloAnalyzer
+from .hlo_analysis import HloAnalyzer
 from .steps import SHAPES
 
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -1,19 +1,21 @@
 """Serving driver: the paper's predictive pipeline, end to end.
 
-Batched requests carry foreign keys into a star schema.  The request path:
+Requests carry one foreign key per star arm (they are *not* fact-row ids —
+any incoming key tuple is servable).  The request path:
 
-  1. **LAQ + operator fusion** (the paper's contribution): per-request
-     feature vectors are produced by the *pre-fused* star pipeline —
-     Σⱼ Iⱼ(Bⱼ Mⱼ L) — gathers + adds, no join materialization, no separate
-     ML runtime (paper Eq. 1 / §3.2).
+  1. **Dynamic-batch LAQ + operator fusion** (the paper's contribution):
+     per-request feature vectors are produced by the *pre-fused* star
+     pipeline — Σⱼ Iⱼ(Bⱼ Mⱼ L) — through ``compile_serving``: one compiled
+     plan per padding bucket, PK lookups + gathers + adds, no join
+     materialization, no separate ML runtime (paper Eq. 1 / §3.2).
   2. Optionally, an LM consumes the fused features as a conditioning
      vector (soft-prompt added to the first token embedding) and decodes
      a fixed number of tokens with KV caches.
 
 Runs on a laptop CPU (smoke configs) and lowers/compiles identically on
-the production mesh (decode cells of the dry-run).  Reports per-batch
-latency percentiles for fused vs non-fused execution — the paper's
-speedup, measured end to end.
+the production mesh (decode cells of the dry-run).  Reports per-bucket
+serve-latency percentiles plus per-batch end-to-end percentiles for fused
+vs non-fused execution — the paper's speedup, measured end to end.
 """
 from __future__ import annotations
 
@@ -26,7 +28,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.fusion import LinearOperator
-from repro.core.query import compile_query, query_from_star
+from repro.core.query import (DEFAULT_BUCKETS, compile_serving,
+                              query_from_star, requests_from_rows)
 from repro.data import generate_star
 from repro.models import LM
 
@@ -34,33 +37,69 @@ from repro.models import LM
 class FusedFeatureServer:
     """The paper's pipeline as a serving component.
 
-    Holds two compiled predictive-query plans (fused and non-fused reference)
-    over a synthetic star schema; requests are batches of fact row ids served
-    through ``CompiledQuery.predict_rows`` — on the fused plan that is |dims|
-    gathers into the prefused partials + adds per batch (paper Eq. 1).
+    Holds two dynamic-batch serving runtimes (fused and non-fused
+    reference) compiled from one predictive query over a synthetic star
+    schema.  Requests are batches of per-arm foreign keys served through
+    ``ServingRuntime.serve`` — on the fused plan that is one PK lookup +
+    gather-add per arm per batch (paper Eq. 1), padded into a fixed set of
+    shape buckets so no request ever recompiles.
     """
 
     def __init__(self, setting: int, sf: float, k: int, l: int,
-                 scale: float = 1.0, seed: int = 0):
+                 scale: float = 1.0, seed: int = 0,
+                 buckets=DEFAULT_BUCKETS, serve_backend: str = "auto",
+                 interpret: bool = False):
         rng = np.random.default_rng(seed)
         self.syn = generate_star(setting, sf, k, seed=seed, scale=scale)
         self.model = LinearOperator(
             jnp.asarray(rng.normal(size=(k, l)).astype(np.float32)))
-        catalog, query = query_from_star(self.syn.star, model=self.model)
-        self.plan_fused = compile_query(catalog, query, backend="fused")
-        self.plan_nonfused = compile_query(catalog, query, backend="nonfused")
-        self.decision = self.plan_fused.plan.fusion
+        self.catalog, self.query = query_from_star(self.syn.star,
+                                                   model=self.model)
+        self.runtime_fused = compile_serving(
+            self.catalog, self.query, backend="fused", buckets=buckets,
+            serve_backend=serve_backend, interpret=interpret)
+        self.runtime_nonfused = compile_serving(
+            self.catalog, self.query, backend="nonfused", buckets=buckets,
+            serve_backend=serve_backend, interpret=interpret)
+        self.decision = self.runtime_fused.plan.fusion
 
-    def features_fused(self):
-        return self.plan_fused.predictions()
+    def runtime(self, fused: bool = True):
+        return self.runtime_fused if fused else self.runtime_nonfused
 
-    def features_nonfused(self):
-        return self.plan_nonfused.predictions()
+    def serve_batch(self, requests, fused: bool = True):
+        """Predictions for a batch of per-arm FK requests (any size)."""
+        return self.runtime(fused).serve(requests)
 
-    def serve_batch(self, row_ids, fused: bool = True):
-        """Predictions for a request batch of fact row ids."""
-        plan = self.plan_fused if fused else self.plan_nonfused
-        return plan.predict_rows(row_ids)
+    def serve_rows(self, row_ids, fused: bool = True):
+        """Bridge from the old interface: serve the FKs of fact rows."""
+        reqs = requests_from_rows(self.syn.star.fact, self.query, row_ids)
+        return self.serve_batch(reqs, fused=fused)
+
+    def random_requests(self, n: int, rng: np.random.Generator):
+        """A request batch sampled from the dimension key ranges."""
+        reqs = {}
+        for arm, rows in zip(self.query.arms, self.syn.dim_rows):
+            # ~1/16 of keys miss the dimension: exercises not-found masking.
+            keys = rng.integers(0, max(int(rows * 17 / 16), 1), size=n)
+            reqs[arm.fk_col] = keys.astype(np.int32)
+        return reqs
+
+    def latency_report(self) -> str:
+        lines = []
+        for name, rt in (("fused", self.runtime_fused),
+                         ("nonfused", self.runtime_nonfused)):
+            for bucket, st in rt.latency_stats().items():
+                compile_ms = st.get("compile_ms")
+                extra = (f" compile={compile_ms:.0f}ms"
+                         if compile_ms is not None else "")
+                pcts = (f"p50={st['p50']:.2f}ms p95={st['p95']:.2f}ms "
+                        f"p99={st['p99']:.2f}ms" if st["count"]
+                        else "(no steady-state samples)")
+                lines.append(f"[serve] {name} bucket={bucket} "
+                             f"n={st['count']} {pcts}{extra}")
+            lines.append(f"[serve] {name} compiles={rt.num_compiles} "
+                         f"(buckets={rt.buckets})")
+        return "\n".join(lines)
 
 
 def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
@@ -72,20 +111,28 @@ def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
                                 scale=0.05)
     print(f"[serve] fusion planner: fuse={server.decision.fuse} "
           f"({server.decision.reason})")
+    print(f"[serve] serving plan: backend={server.runtime_fused.backend} "
+          f"serve_backend={server.runtime_fused.serve_backend} "
+          f"buckets={server.runtime_fused.buckets}")
+
+    rng = np.random.default_rng(1)
+    # Ragged warm-up sweep: hit every padding bucket once so the steady
+    # state below never traces (compile-once, serve-any-batch).
+    for n in [1] + [b for b in server.runtime_fused.buckets]:
+        reqs = server.random_requests(n, rng)
+        server.serve_batch(reqs, fused=True)
+        server.serve_batch(reqs, fused=False)
 
     # Conditioning projection: fused features → d_model soft prompt.
-    rng = np.random.default_rng(1)
     proj = jnp.asarray(rng.normal(
         size=(server.model.l, cfg.d_model)).astype(np.float32)) * 0.01
 
     decode = jax.jit(lm.decode_step)
 
-    row_ids = jnp.arange(batch, dtype=jnp.int32)   # the request batch
-
-    def serve_batch(fused: bool):
+    def serve_batch(requests, fused: bool):
         t0 = time.perf_counter()
-        feats = server.serve_batch(row_ids, fused=fused)  # (batch, l)
-        cond = (feats @ proj)                             # (batch, d_model)
+        feats = server.serve_batch(requests, fused=fused)  # (batch, l)
+        cond = (feats @ proj)                              # (batch, d_model)
         state = lm.init_decode_state(params, batch, max_len=decode_steps + 1)
         token = jnp.zeros((batch,), jnp.int32)
         # Soft-prompt injection: add the conditioning vector to the first
@@ -103,13 +150,14 @@ def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
     lat_fused, lat_non = [], []
     tokens_fused = tokens_non = None
     for i in range(repeats):
-        dt, tokens_fused = serve_batch(fused=True)
+        requests = server.random_requests(batch, rng)
+        dt, tokens_fused = serve_batch(requests, fused=True)
         lat_fused.append(dt)
-        dt, tokens_non = serve_batch(fused=False)
+        dt, tokens_non = serve_batch(requests, fused=False)
         lat_non.append(dt)
-    # Identical predictions either way (fusion is exact — paper Eq. 1).
-    np.testing.assert_array_equal(np.asarray(tokens_fused),
-                                  np.asarray(tokens_non))
+        # Identical tokens either way (fusion is exact — paper Eq. 1).
+        np.testing.assert_array_equal(np.asarray(tokens_fused),
+                                      np.asarray(tokens_non))
 
     def pct(a, p):
         return float(np.percentile(np.asarray(a[2:]) * 1e3, p))
@@ -118,6 +166,7 @@ def run_serving(arch: str, batch: int, decode_steps: int, k: int, l: int,
           f"fused p50={pct(lat_fused,50):.1f}ms p99={pct(lat_fused,99):.1f}ms"
           f" | non-fused p50={pct(lat_non,50):.1f}ms "
           f"p99={pct(lat_non,99):.1f}ms")
+    print(server.latency_report())
     return lat_fused, lat_non
 
 

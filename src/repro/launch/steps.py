@@ -12,9 +12,8 @@ These close over (model, cfg) and are what both the real drivers
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from repro.models import LM, ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 from .mesh import dp_axes
-from .sharding import batch_pspec, cache_pspec, param_shardings
+from .sharding import batch_pspec, param_shardings
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

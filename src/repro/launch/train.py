@@ -16,12 +16,11 @@ Usage (CPU example scale):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config

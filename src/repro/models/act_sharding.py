@@ -11,7 +11,7 @@ smollm train_4k dry-run cell (EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -9,7 +9,7 @@ restructuring, which is what makes 32k-token prefill fit in HBM.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

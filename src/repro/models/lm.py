@@ -10,7 +10,6 @@ precomputed patch/frame embeddings (per the assignment).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from .act_sharding import constrain
 from .common import act_fn, dense_init
-from .config import ModelConfig, MoESpec, round_up
+from .config import ModelConfig, round_up
 from .mlp import init_mlp, mlp
 
 

@@ -47,7 +47,8 @@ def clip_by_global_norm(grads, max_norm: float):
 
 def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
     dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else jnp.float32
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

@@ -60,8 +60,9 @@ def compress_tree(grads, residuals):
     fed = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, residuals)
     comp_res = jax.tree.map(compress, fed,
                             is_leaf=lambda x: isinstance(x, jnp.ndarray))
-    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
-        x[0], Compressed)
+    def is_pair(x):
+        return (isinstance(x, tuple) and len(x) == 2
+                and isinstance(x[0], Compressed))
     ghat = jax.tree.map(lambda cr: decompress(cr[0]), comp_res,
                         is_leaf=is_pair)
     new_res = jax.tree.map(lambda cr: cr[1], comp_res, is_leaf=is_pair)

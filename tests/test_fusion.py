@@ -7,7 +7,7 @@ pytest.importorskip("hypothesis",
                     reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.fusion import (DecisionTreeGEMM, LinearOperator, plan_fusion,
+from repro.core.fusion import (LinearOperator, plan_fusion,
                                predict_fused, predict_fused_matmul,
                                predict_nonfused, predict_nonfused_matmul,
                                prefuse, random_tree, reference_tree_eval,

@@ -1,7 +1,6 @@
 """HLO analyzer: trip-count-aware FLOPs/collective accounting vs ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import HloAnalyzer, xla_cost_analysis

@@ -3,14 +3,16 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="property tests need hypothesis (requirements-dev)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:   # degrade the property test to a skip, not an error
+    HAS_HYPOTHESIS = False
 
 from repro.kernels import (fused_star_gather, fused_star_gather_ref,
                            onehot_matmul, onehot_matmul_ref, tree_predict,
                            tree_predict_ref)
-from repro.core.fusion import random_tree, tree_from_arrays
+from repro.core.fusion import random_tree
 
 
 # ------------------------------------------------------------ onehot_matmul
@@ -32,17 +34,23 @@ def test_onehot_matmul_shapes(n, r, d, dtype):
     np.testing.assert_allclose(got, want, rtol=rtol, atol=1e-5)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 2), st.integers(1, 70), st.integers(1, 90),
-       st.integers(1, 50))
-def test_onehot_matmul_property(seed, n, r, d):
-    rng = np.random.default_rng(seed)
-    idx = rng.integers(0, r, size=n).astype(np.int32)
-    tbl = rng.normal(size=(r, d)).astype(np.float32)
-    got = np.asarray(onehot_matmul(jnp.asarray(idx), jnp.asarray(tbl),
-                                   block_n=8, block_r=8, block_d=128,
-                                   interpret=True))
-    np.testing.assert_allclose(got, tbl[idx], rtol=1e-6, atol=1e-6)
+if HAS_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 2), st.integers(1, 70), st.integers(1, 90),
+           st.integers(1, 50))
+    def test_onehot_matmul_property(seed, n, r, d):
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, r, size=n).astype(np.int32)
+        tbl = rng.normal(size=(r, d)).astype(np.float32)
+        got = np.asarray(onehot_matmul(jnp.asarray(idx), jnp.asarray(tbl),
+                                       block_n=8, block_r=8, block_d=128,
+                                       interpret=True))
+        np.testing.assert_allclose(got, tbl[idx], rtol=1e-6, atol=1e-6)
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(requirements-dev)")
+    def test_onehot_matmul_property():
+        pass
 
 
 # --------------------------------------------------------- fused_star_gather
@@ -78,6 +86,46 @@ def test_fused_star_gather_tree_compare():
     assert set(np.unique(got)) <= {0.0, 1.0}
 
 
+@pytest.mark.parametrize("l", [1, 5, 127, 130])
+def test_fused_star_gather_nan_padded_columns_never_leak(l):
+    """Regression: the wrapper NaN-pads ``h`` to the 128-lane multiple for
+    the compare path; for every l % 128 != 0 the padded columns must not
+    leak into the sliced result (no NaNs, no spurious leaf hits)."""
+    rng = np.random.default_rng(l)
+    n, rows = 33, (9, 6)
+    # Integer-valued partials: rows summing to 0 would match a zero-padded
+    # h in the pad columns — the NaN padding is what keeps them False.
+    tables = [jnp.asarray(rng.integers(0, 2, size=(r, l)).astype(np.float32))
+              for r in rows]
+    h = jnp.asarray(rng.integers(0, 3, size=l).astype(np.float32))
+    ptrs = jnp.asarray(
+        np.stack([rng.integers(0, r, size=n) for r in rows]).astype(np.int32))
+    found = jnp.asarray(rng.integers(0, 2, size=(2, n)).astype(np.int32))
+    got = np.asarray(fused_star_gather(ptrs, found, tables, h, interpret=True))
+    assert got.shape == (n, l)
+    assert np.isfinite(got).all()
+    assert set(np.unique(got)) <= {0.0, 1.0}
+    want = np.asarray(fused_star_gather_ref(ptrs, found, tables, h))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_star_gather_empty_batch():
+    """Regression: n == 0 must short-circuit (a zero-size Pallas grid is
+    rejected) and preserve the (0, l) result shape, compare path or not."""
+    rng = np.random.default_rng(0)
+    l, rows = 5, (7, 3)
+    tables = [jnp.asarray(rng.normal(size=(r, l)).astype(np.float32))
+              for r in rows]
+    ptrs = jnp.zeros((2, 0), jnp.int32)
+    found = jnp.zeros((2, 0), jnp.int32)
+    out = fused_star_gather(ptrs, found, tables, interpret=True)
+    assert out.shape == (0, l)
+    h = jnp.zeros((l,), jnp.float32)
+    out = fused_star_gather(ptrs, found, tables, h, interpret=True)
+    assert out.shape == (0, l)
+    assert out.dtype == jnp.float32
+
+
 # --------------------------------------------------------------- tree_predict
 @pytest.mark.parametrize("n,k,depth", [(8, 4, 2), (130, 16, 4), (64, 256, 6),
                                        (17, 3, 1)])
@@ -96,7 +144,6 @@ def test_tree_predict_kernel_vs_ref(n, k, depth):
 
 
 def test_tree_predict_kernel_equals_model_apply():
-    from repro.core.fusion import DecisionTreeGEMM
     rng = np.random.default_rng(5)
     tree = random_tree(rng, 12, 3)
     x = jnp.asarray(rng.normal(size=(40, 12)).astype(np.float32))

@@ -12,7 +12,7 @@ from repro.core.laq import (PAD_GROUP, PAD_KEY, DimSpec, Pred, Table,
                             groupby_sum_matmul, groupby_sum_segment,
                             join_factored, key_domain, mapping_matrix,
                             materialize_gather, materialize_matmul,
-                            matching_pairs, matmul_aggregate, mmjoin_bcoo,
+                            matmul_aggregate, mmjoin_bcoo,
                             mmjoin_dense, order_by, positions, project_gather,
                             project_matmul, segment_aggregate, select,
                             selection_vector, star_join)

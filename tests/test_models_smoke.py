@@ -121,9 +121,12 @@ def test_flash_attention_custom_vjp_grads_match_naive():
     v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(h * hd,)), jnp.float32)
     for causal in (True, False):
-        f1 = lambda *a: jnp.sum(flash_attention(
-            *a, causal=causal, q_block=32, kv_block=16) * w)
-        f2 = lambda *a: jnp.sum(naive_attention(*a, causal=causal) * w)
+        def f1(*a):
+            return jnp.sum(flash_attention(
+                *a, causal=causal, q_block=32, kv_block=16) * w)
+
+        def f2(*a):
+            return jnp.sum(naive_attention(*a, causal=causal) * w)
         g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
         g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
         for a, b_ in zip(g1, g2):

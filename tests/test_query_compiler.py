@@ -13,7 +13,7 @@ import pytest
 
 from repro.core.fusion import DecisionTreeGEMM, LinearOperator, plan_fusion
 from repro.core.laq import PAD_GROUP
-from repro.core.query import (PREDICTION, compile_query, plan_aggregation,
+from repro.core.query import (compile_query, plan_aggregation,
                               plan_query)
 from repro.data import (QUERY_IR, generate_ssb, predictive_query_names,
                         ssb_catalog)

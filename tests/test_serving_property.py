@@ -1,0 +1,81 @@
+"""Property test: ``compile_serving`` on random request batches is
+equivalent to ``CompiledQuery.predict_rows`` on the corresponding fact rows,
+across fused/nonfused × gather/kernel backends and ragged batch sizes that
+hit every padding bucket (including chunked oversize batches).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (requirements-dev)",
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.core.query import compile_query, compile_serving, requests_from_rows
+from repro.data import QUERY_IR, generate_ssb, predictive_query_names, ssb_catalog
+
+BUCKETS = (4, 16, 64)
+BACKENDS = [
+    ("fused", "jnp"),
+    ("fused", "pallas"),
+    ("nonfused", "jnp"),
+    ("nonfused", "pallas"),
+]
+
+_data = None
+_catalog = None
+_cache = {}
+
+
+def _setup():
+    global _data, _catalog
+    if _catalog is None:
+        _data = generate_ssb(sf=1, scale=0.0005, seed=5)
+        _catalog = ssb_catalog(_data)
+    return _catalog
+
+
+def _pair(name, backend, serve_backend):
+    key = (name, backend, serve_backend)
+    if key not in _cache:
+        catalog = _setup()
+        q = QUERY_IR[name]()
+        compiled = compile_query(catalog, q, backend=backend)
+        runtime = compile_serving(
+            catalog,
+            q,
+            backend=backend,
+            serve_backend=serve_backend,
+            buckets=BUCKETS,
+            interpret=serve_backend == "pallas",
+        )
+        fact = catalog[q.fact]
+        ok = np.asarray(fact.valid_mask())
+        for p in q.fact_preds:
+            ok = ok & np.asarray(p.mask(fact))
+        _cache[key] = (q, compiled, runtime, np.nonzero(ok)[0])
+    return _cache[key]
+
+
+@pytest.mark.parametrize("name", predictive_query_names())
+@settings(max_examples=12, deadline=None)
+@given(
+    combo=st.sampled_from(BACKENDS),
+    seed=st.integers(0, 2**31 - 2),
+    size=st.integers(1, 80),
+)
+def test_serving_equivalent_to_predict_rows(name, combo, seed, size):
+    backend, serve_backend = combo
+    q, compiled, runtime, passing = _pair(name, backend, serve_backend)
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(passing, size=size)
+    catalog = _setup()
+    got = np.asarray(runtime.serve(requests_from_rows(catalog[q.fact], q, ids)))
+    want = np.asarray(compiled.predict_rows(jnp.asarray(ids, jnp.int32)))
+    np.testing.assert_array_equal(got, want)
+    # Bucketing never leaks padding and never recompiles past the bucket set.
+    assert got.shape == (size, runtime.out_width)
+    assert runtime.num_compiles <= len(BUCKETS)

@@ -10,8 +10,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data import (QUERIES, TokenPipeline, TokenPipelineConfig,
                         generate_ssb, generate_star)
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress,
-                         compress_tree, decompress, global_norm,
-                         warmup_cosine)
+                         compress_tree, decompress, warmup_cosine)
 from repro.runtime import (HeartbeatMonitor, SimulatedCluster,
                            StragglerMonitor, elastic_remesh)
 
