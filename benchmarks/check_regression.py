@@ -1,0 +1,156 @@
+"""Bench-regression gate: compare BENCH_*.json against committed baselines.
+
+The CI ``bench-smoke`` job used to be a crash gate only — benches ran, their
+JSON uploaded, and a 100x slowdown sailed through green.  This script turns
+the artifacts into a gate: every row of a current ``BENCH_*.json`` is
+compared against the same-named row in ``benchmarks/baselines/<file>`` and
+the run fails when ``current > baseline * tolerance``.
+
+Cross-machine noise policy:
+
+* ``--tolerance`` (default 1.5x) is the headline knob.
+* ``--min-us`` skips rows where *both* sides are below the floor — µs-scale
+  rows on shared CI runners are dominated by scheduler noise.
+* ``--normalize`` divides every current value by the run's median
+  current/baseline ratio first, gating *relative* regressions (one bench
+  slowing down vs. its siblings) while absorbing a uniformly slower or
+  faster machine.  CI uses this: baselines are seeded from a developer
+  box, not the runner fleet.  The trade-off — a uniform slowdown of every
+  row is absorbed too — is deliberate; the matching absolute check runs on
+  machines that match the baselines (``--tolerance`` without
+  ``--normalize``).
+
+Rows present only in the current run are reported as new (not a failure);
+rows that vanished are reported (not a failure — renames happen); zero
+comparable rows *is* a failure, so an empty/renamed baseline can't produce
+a vacuous pass.  ``--update`` rewrites the baselines from the current files
+instead of checking (run it when a speedup or an intentional change moves
+the floor).
+
+Usage (the exact CI invocation):
+    python -m benchmarks.check_regression BENCH_predictive_queries.json \
+        BENCH_serving.json --baseline-dir benchmarks/baselines \
+        --tolerance 1.5 --min-us 200 --normalize
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    """name -> us_per_call for one BENCH_*.json artifact."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def compare(current: Dict[str, float], baseline: Dict[str, float], *,
+            tolerance: float = 1.5, min_us: float = 0.0,
+            normalize: bool = False
+            ) -> Tuple[List[str], int, List[str]]:
+    """Gate one artifact against its baseline.
+
+    Returns ``(regressions, compared_count, notes)``; ``regressions`` is
+    empty when the gate passes.  Pure function — the unit tests drive it
+    directly with injected slowdowns.
+    """
+    common = sorted(set(current) & set(baseline))
+    notes = [f"new row (no baseline): {n}" for n in sorted(
+        set(current) - set(baseline))]
+    notes += [f"baseline row missing from run: {n}" for n in sorted(
+        set(baseline) - set(current))]
+    scale = 1.0
+    if normalize and common:
+        # Median over the rows actually gated: sub-floor rows are scheduler
+        # noise and must not set the scale the real rows are judged by.  With
+        # fewer than 3 gated rows the median is degenerate (a single row
+        # would normalize away its own regression), so fall back to absolute.
+        ratios = sorted(
+            current[n] / baseline[n] for n in common
+            if baseline[n] > 0
+            and not (current[n] <= min_us and baseline[n] <= min_us))
+        if len(ratios) >= 3:
+            scale = max(ratios[len(ratios) // 2], 1e-12)
+            notes.append(f"normalize: median current/baseline = {scale:.3f}x")
+        else:
+            notes.append(f"normalize: only {len(ratios)} gated rows — "
+                         "too few for a median, using absolute comparison")
+    regressions = []
+    compared = 0
+    for name in common:
+        cur, base = current[name], baseline[name]
+        if cur <= min_us and base <= min_us:
+            notes.append(f"below --min-us floor ({min_us}us), skipped: "
+                         f"{name} ({cur:.1f} vs {base:.1f})")
+            continue
+        compared += 1
+        adjusted = cur / scale
+        if base > 0 and adjusted > base * tolerance:
+            regressions.append(
+                f"{name}: {cur:.1f}us vs baseline {base:.1f}us "
+                f"({cur / base:.2f}x raw, {adjusted / base:.2f}x normalized, "
+                f"tolerance {tolerance}x)")
+    return regressions, compared, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when BENCH_*.json regress vs committed baselines")
+    ap.add_argument("current", nargs="+",
+                    help="BENCH_*.json files from this run")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="fail when current > baseline * tolerance")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="skip rows where both sides are below this")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide by the median current/baseline ratio "
+                         "(gates relative regressions across machines)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current files")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for path in args.current:
+            dst = os.path.join(args.baseline_dir, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"[bench-gate] baseline updated: {dst}")
+        return 0
+
+    failed = False
+    total_compared = 0
+    for path in args.current:
+        base_path = os.path.join(args.baseline_dir, os.path.basename(path))
+        if not os.path.exists(base_path):
+            print(f"[bench-gate] FAIL {path}: no baseline at {base_path} "
+                  "(seed it with --update)")
+            failed = True
+            continue
+        regressions, compared, notes = compare(
+            load_rows(path), load_rows(base_path), tolerance=args.tolerance,
+            min_us=args.min_us, normalize=args.normalize)
+        total_compared += compared
+        for n in notes:
+            print(f"[bench-gate] {path}: {n}")
+        if regressions:
+            failed = True
+            for r in regressions:
+                print(f"[bench-gate] REGRESSION {path}: {r}")
+        else:
+            print(f"[bench-gate] OK {path}: {compared} rows within "
+                  f"{args.tolerance}x of baseline")
+    if total_compared == 0:
+        print("[bench-gate] FAIL: no comparable rows — baselines empty or "
+              "bench names diverged; refusing a vacuous pass")
+        failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

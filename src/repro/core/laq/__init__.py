@@ -3,7 +3,8 @@ from .table import Table, PAD_KEY
 from .projection import mapping_matrix, project_matmul, project_gather
 from .selection import Pred, select, selection_vector
 from .domain import key_domain, positions, DomainCache, default_domain_cache
-from .join import (FactoredJoin, PKIndex, join_factored, pk_index,
+from .join import (FactoredJoin, PKIndex, ShardedPKIndex, join_factored,
+                   pk_index, shard_pk_index,
                    mmjoin_dense, mmjoin_bcoo,
                    onehot_keys, matching_pairs, row_mapping_matrices,
                    materialize_matmul, materialize_gather)
@@ -12,18 +13,19 @@ from .aggregation import (groupby_sum_matmul, groupby_sum_segment,
                           matmul_aggregate, composite_code, decode_composite,
                           PAD_GROUP)
 from .sort import order_by, sorted_domain_order
-from .star import DimSpec, StarJoin, dim_mapping_matrices, star_join
+from .star import (DimSpec, StarJoin, dim_mapping_matrices, shard_rows,
+                   star_join)
 
 __all__ = [
     "Table", "PAD_KEY", "mapping_matrix", "project_matmul", "project_gather",
     "Pred", "select", "selection_vector", "key_domain", "positions",
     "DomainCache", "default_domain_cache", "FactoredJoin", "PKIndex",
-    "join_factored", "pk_index",
+    "ShardedPKIndex", "join_factored", "pk_index", "shard_pk_index",
     "mmjoin_dense", "mmjoin_bcoo", "onehot_keys", "matching_pairs",
     "row_mapping_matrices", "materialize_matmul", "materialize_gather",
     "groupby_sum_matmul", "groupby_sum_segment", "groupby_reduce",
     "groupby_codes", "segment_aggregate", "matmul_aggregate",
     "composite_code", "decode_composite", "PAD_GROUP",
     "order_by", "sorted_domain_order",
-    "DimSpec", "StarJoin", "dim_mapping_matrices", "star_join",
+    "DimSpec", "StarJoin", "dim_mapping_matrices", "shard_rows", "star_join",
 ]

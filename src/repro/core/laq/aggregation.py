@@ -24,6 +24,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .domain import key_domain, positions
 
@@ -160,8 +161,26 @@ def groupby_codes(codes: jnp.ndarray, num_groups: int
 
     Padded codes (PAD_GROUP) map to the overflow segment ``num_groups``; both
     ``segment_aggregate`` and ``matmul_aggregate`` drop it.  The resolution is
-    quasi-static for a fixed fact table, so the compiler runs it once offline.
+    quasi-static for a fixed fact table, so the compiler runs it once offline
+    — and on that concrete-array path the distinct live codes are *counted*:
+    more than ``num_groups`` of them would silently collapse the overflow
+    groups into the padded tail of ``unique(size=...)`` and drop them from
+    every aggregate, so it raises instead.  Under an outer trace the count is
+    abstract and the check is skipped (the caller owns sizing there).
     """
+    try:
+        concrete = np.asarray(codes)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        concrete = None
+    if concrete is not None:
+        n_live = np.unique(concrete[concrete != int(PAD_GROUP)]).size
+        if n_live > num_groups:
+            raise ValueError(
+                f"group-by overflow: {n_live} distinct live group codes "
+                f"exceed num_groups={num_groups}; the excess groups would "
+                "silently vanish from every aggregate. Raise num_groups "
+                f"(>= {n_live}) or coarsen the group keys.")
     uniq = jnp.unique(codes, size=num_groups, fill_value=PAD_GROUP)
     gid = jnp.searchsorted(uniq, codes).astype(jnp.int32)
     gid = jnp.where(codes != PAD_GROUP,

@@ -129,6 +129,53 @@ def pk_index(pk: jnp.ndarray) -> PKIndex:
     return PKIndex(sorted_pk=jnp.take(pk, order), order=order)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedPKIndex:
+    """Row-sharded ``PKIndex``: one independent index slice per shard.
+
+    Shard ``s`` owns the contiguous dimension rows ``[s·rps, (s+1)·rps)``
+    and indexes *only* those: ``order`` holds shard-local row offsets, so a
+    probe against one slice resolves to device-local rows with no global
+    renumbering.  A key owned by another shard simply misses — combining the
+    per-shard ``found`` masks (at most one shard can hit, live PKs being
+    globally unique) reconstructs the global probe exactly.  This is what
+    lets a row-sharded prefused partial be served by device-local
+    searchsorted + gathers under ``shard_map``.
+    """
+
+    sorted_pk: jnp.ndarray   # (num_shards, rows_per_shard), ascending per row
+    order: jnp.ndarray       # (num_shards, rows_per_shard) int32, shard-local
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.sorted_pk.shape[0])
+
+    @property
+    def rows_per_shard(self) -> int:
+        return int(self.sorted_pk.shape[1])
+
+    def shard(self, s: int) -> PKIndex:
+        """The shard-local ``PKIndex`` slice (tests / host-side probes)."""
+        return PKIndex(sorted_pk=self.sorted_pk[s], order=self.order[s])
+
+
+def shard_pk_index(pk: jnp.ndarray, num_shards: int) -> ShardedPKIndex:
+    """Build per-shard ``PKIndex`` slices over equal contiguous row blocks.
+
+    The row count must divide ``num_shards`` — the placement planner's
+    ``safe_spec`` fallback replicates non-divisible dimensions instead of
+    ever calling this with ragged shards.
+    """
+    r = int(pk.shape[0])
+    if num_shards < 1 or r % num_shards:
+        raise ValueError(
+            f"cannot shard {r} PK rows into {num_shards} equal slices")
+    blocks = pk.reshape(num_shards, r // num_shards)
+    order = jnp.argsort(blocks, axis=1).astype(jnp.int32)
+    return ShardedPKIndex(
+        sorted_pk=jnp.take_along_axis(blocks, order, axis=1), order=order)
+
+
 def join_factored(fk: jnp.ndarray, pk: jnp.ndarray) -> FactoredJoin:
     """PK-FK equi-join: pointer from each FK row into the PK relation."""
     return pk_index(pk).probe(fk)

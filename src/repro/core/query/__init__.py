@@ -54,19 +54,25 @@ path stays the bit-exact fp32 reference.
 from .ir import (PREDICTION, Aggregate, ArmSpec, GroupKey, PredictiveQuery,
                  eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
-from .planner import (AggDecision, QueryPlan, plan_aggregation, plan_query,
+from .planner import (AggDecision, QueryPlan, plan_aggregation,
+                      plan_partition_spec, plan_placements, plan_query,
                       plan_serving_backend, DENSE_JOIN_ELEMS,
                       MXU_SEGMENT_ADVANTAGE, SERVE_KERNEL_MAX_NODES,
-                      SERVE_KERNEL_MAX_WIDTH)
+                      SERVE_KERNEL_MAX_WIDTH, SHARD_PARTIAL_BYTES)
 from .serving import (DEFAULT_BUCKETS, ServingRuntime, compile_serving,
                       requests_from_rows)
+from .sharding import (ShardedArm, ShardedPrefusedPartials,
+                       shard_prefused_partials)
 
 __all__ = [
     "PREDICTION", "Aggregate", "ArmSpec", "GroupKey", "PredictiveQuery",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",
-    "AggDecision", "QueryPlan", "plan_aggregation", "plan_query",
-    "plan_serving_backend", "DENSE_JOIN_ELEMS", "MXU_SEGMENT_ADVANTAGE",
-    "SERVE_KERNEL_MAX_NODES", "SERVE_KERNEL_MAX_WIDTH",
+    "AggDecision", "QueryPlan", "plan_aggregation", "plan_partition_spec",
+    "plan_placements", "plan_query", "plan_serving_backend",
+    "DENSE_JOIN_ELEMS",
+    "MXU_SEGMENT_ADVANTAGE", "SERVE_KERNEL_MAX_NODES",
+    "SERVE_KERNEL_MAX_WIDTH", "SHARD_PARTIAL_BYTES",
     "DEFAULT_BUCKETS", "ServingRuntime", "compile_serving",
     "requests_from_rows",
+    "ShardedArm", "ShardedPrefusedPartials", "shard_prefused_partials",
 ]

@@ -39,7 +39,9 @@ from ..laq.star import DimSpec, StarJoin
 from ..laq.table import Table
 from .ir import (PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
-from .planner import QueryPlan, effective_serve_backend, plan_query
+from .planner import (QueryPlan, effective_serve_backend, place_tables,
+                      plan_query, resolve_mesh_serve_backend)
+from .sharding import make_predict_rows_forward, shard_prefused_partials
 
 
 @dataclasses.dataclass
@@ -158,7 +160,10 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   select_capacity: Optional[int] = None,
                   batches_per_update: float = 1000.0,
                   memory_budget_bytes: Optional[int] = None,
-                  interpret: bool = False) -> CompiledQuery:
+                  interpret: bool = False, mesh=None,
+                  shard_axis: str = "model",
+                  shard_threshold_bytes: Optional[int] = None
+                  ) -> CompiledQuery:
     """Plan + lower ``q`` against ``catalog`` into one jitted program.
 
     ``backend`` / ``join_backend`` / ``agg_backend`` override the planner
@@ -177,6 +182,14 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     fixed buffer of that many rows, shrinking every online shape — the right
     call for very selective queries.  Row ids seen by ``predict_rows`` then
     index the compacted table.
+
+    ``mesh`` shards the *serving* path: each arm's quasi-static row table
+    (prefused partial / projected features) is placed per
+    ``plan_partition_spec`` and ``predict_rows`` becomes one ``shard_map``
+    of device-local gathers + a psum (``core.query.sharding``), bit-exact
+    vs the single-device program.  The whole-query aggregate program
+    (``run``/``predictions``) stays single-device — it is fact-sized, not
+    partial-sized.  ``mesh`` is incompatible with ``serve_backend="pallas"``.
     """
     for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
                          (join_backend, ("auto", "gather", "matmul")),
@@ -184,6 +197,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                          (serve_backend, ("auto", "jnp", "pallas"))):
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
+    serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
     _check_aggregates(q)
     if select_capacity is not None:
         fact = select(catalog[q.fact], q.fact_preds,
@@ -273,9 +287,15 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     predict_jit = predict_rows_jit = None
     if q.model is not None:
         predict_jit = jax.jit(_predictions)
-        predict_rows_jit = jax.jit(
-            _make_predict_rows(star, q.model, prefused, backend,
-                               serve_backend, interpret))
+        if mesh is not None:
+            fn, plan = _make_predict_rows_sharded(
+                star, q.model, prefused, backend, plan, mesh, shard_axis,
+                shard_threshold_bytes)
+            predict_rows_jit = jax.jit(fn)
+        else:
+            predict_rows_jit = jax.jit(
+                _make_predict_rows(star, q.model, prefused, backend,
+                                   serve_backend, interpret))
 
     return CompiledQuery(
         query=q, plan=plan, backend=backend, join_backend=join_backend,
@@ -283,6 +303,37 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         prefused=prefused, selectivity=sel, group_codes=uniq, _gid=gid,
         _rows=rows, _run=jax.jit(_online), _predict=predict_jit,
         _predict_rows=predict_rows_jit)
+
+
+def _make_predict_rows_sharded(star: StarJoin, model,
+                               prefused: Optional[PrefusedStar],
+                               backend: str, plan: QueryPlan, mesh,
+                               shard_axis: str,
+                               shard_threshold_bytes: Optional[int]):
+    """Sharded serving path: row tables placed on the mesh, one shard_map.
+
+    Returns ``(predict_rows_fn, plan)`` with the per-arm placement recorded
+    on the plan.  The FK→row pointers were resolved offline
+    (``join_factored``), so the forward uses global-pointer device-local
+    gathers (see ``make_predict_rows_forward``).
+    """
+    if backend == "fused":
+        tables = list(prefused.partials)
+        h = prefused.h
+    else:
+        tables = [d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
+                  for d in star.dims]
+        h = None
+    specs, plan = place_tables(mesh, tables, plan, axis=shard_axis,
+                               threshold_bytes=shard_threshold_bytes)
+    sp = shard_prefused_partials(
+        mesh, [(d.fk_col, None, None, tbl)
+               for d, tbl in zip(star.dims, tables)],
+        h, specs, shard_axis=shard_axis)
+    fn = make_predict_rows_forward(
+        sp, model, backend, [fj.ptr for fj in star.joins],
+        [fj.found for fj in star.joins], star.row_valid)
+    return fn, plan
 
 
 def _make_predict_rows(star: StarJoin, model, prefused: Optional[PrefusedStar],

@@ -20,7 +20,9 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
+from jax.sharding import PartitionSpec as P
 
+from ...launch.sharding import safe_spec
 from ..fusion.operators import DecisionTreeGEMM
 from ..fusion.planner import FusionDecision, plan_fusion
 from .ir import Model
@@ -42,6 +44,13 @@ MXU_SEGMENT_ADVANTAGE = 16.0
 SERVE_KERNEL_MAX_WIDTH = 8192
 SERVE_KERNEL_MAX_NODES = 16384
 
+# Below this size a prefused partial is replicated rather than row-sharded:
+# the partial fits every device comfortably and replication keeps the online
+# gather collective-free.  CPU-bench calibrated (bench_sharded_serving: the
+# psum overhead only amortizes once per-device slices clear the cache-resident
+# regime); re-measure on TPU alongside MXU_SEGMENT_ADVANTAGE.
+SHARD_PARTIAL_BYTES = 1 << 20
+
 
 @dataclasses.dataclass(frozen=True)
 class AggDecision:
@@ -60,6 +69,96 @@ class QueryPlan:
     selectivity: float
     reason: str
     serve_backend: str = "jnp"   # "jnp" | "pallas" — online gather-sum kernel
+    # Per-arm placement of the quasi-static row tables (prefused partials /
+    # projected features) over the serving mesh; None when planned meshless.
+    partition_specs: Optional[Tuple[P, ...]] = None
+
+
+def plan_partition_spec(mesh, shape: Sequence[int], *, itemsize: int = 4,
+                        axis: str = "model",
+                        threshold: int = SHARD_PARTIAL_BYTES
+                        ) -> Tuple[P, str]:
+    """Placement for one quasi-static row table: replicate or row-shard.
+
+    Small tables replicate (the online gather stays collective-free); tables
+    past ``threshold`` bytes row-shard over the mesh's ``axis`` — through
+    ``safe_spec``, so a row count that doesn't divide the axis degrades to
+    replication instead of failing (the 15-heads-on-16-way rule, applied to
+    prefused partials).  Returns ``(spec, reason)``.
+    """
+    replicated = P(*([None] * len(shape)))
+    if mesh is None:
+        return replicated, "no mesh: replicate"
+    nbytes = itemsize
+    for d in shape:
+        nbytes *= int(d)
+    if nbytes < threshold:
+        return replicated, (f"{nbytes}B < {threshold}B: replicate small "
+                            "partial")
+    spec = safe_spec(mesh, shape, axis, *([None] * (len(shape) - 1)))
+    if spec[0] is None:
+        return spec, (f"rows={shape[0]} does not divide mesh[{axis!r}]: "
+                      "replicate (safe_spec fallback)")
+    return spec, f"row-shard {shape[0]} rows over {axis}={mesh.shape[axis]}"
+
+
+def plan_placements(mesh, shapes: Sequence[Sequence[int]], *,
+                    itemsize: int = 4, axis: str = "model",
+                    threshold: int = SHARD_PARTIAL_BYTES
+                    ) -> Tuple[Tuple[P, ...], str]:
+    """Per-arm placement over the arms' row-table shapes.
+
+    The single implementation behind ``plan_query(mesh=...)`` and the
+    compile/serving paths (which re-derive from *actual* table shapes) —
+    returns ``(specs, reason)`` with the reason in the plan's
+    ``place=[...]`` format.
+    """
+    specs, whys = [], []
+    for shape in shapes:
+        spec, why = plan_partition_spec(mesh, shape, itemsize=itemsize,
+                                        axis=axis, threshold=threshold)
+        specs.append(spec)
+        whys.append(why)
+    return tuple(specs), "place=[" + "; ".join(whys) + "]"
+
+
+def place_tables(mesh, tables, plan: "QueryPlan", *, axis: str = "model",
+                 threshold_bytes: Optional[int] = None
+                 ) -> Tuple[Tuple[P, ...], "QueryPlan"]:
+    """Placement for *actual* arm row tables, recorded on the plan.
+
+    The one mesh-path setup shared by ``compile_query(mesh=)`` and
+    ``compile_serving(mesh=)``: fused partial widths differ from non-fused
+    feature widths, so placement is re-derived from the real table shapes
+    and the plan's ``partition_specs``/reason updated to match what
+    executes.
+    """
+    threshold = (SHARD_PARTIAL_BYTES if threshold_bytes is None
+                 else threshold_bytes)
+    specs, place = plan_placements(
+        mesh, [t.shape for t in tables], itemsize=tables[0].dtype.itemsize,
+        axis=axis, threshold=threshold)
+    plan = dataclasses.replace(plan, partition_specs=specs,
+                               reason=plan.reason + "; " + place)
+    return specs, plan
+
+
+def resolve_mesh_serve_backend(serve_backend: str, mesh) -> str:
+    """Clamp the serve backend for mesh serving (jnp-only today).
+
+    The Pallas kernels are not composed with ``shard_map`` yet (the sharded
+    block kernels are the TPU calibration follow-up), so an explicit
+    ``"pallas"`` request alongside a mesh is an error rather than a silent
+    downgrade; "auto"/"jnp" resolve to the jnp gathers.
+    """
+    if mesh is None:
+        return serve_backend
+    if serve_backend == "pallas":
+        raise ValueError(
+            "serve_backend='pallas' does not compose with mesh serving "
+            "yet (sharded block kernels are the TPU follow-up); use "
+            "serve_backend='jnp' or 'auto'")
+    return "jnp"
 
 
 def plan_serving_backend(model: Optional[Model], num_arms: int, *,
@@ -148,8 +247,16 @@ def plan_query(model: Optional[Model], fact_rows: int,
                num_groups: int = 0, out_width: int = 1,
                batches_per_update: float = 1000.0,
                memory_budget_bytes: Optional[int] = None,
-               platform: Optional[str] = None) -> QueryPlan:
-    """Pick fused/nonfused + join/agg/serving backends for one query."""
+               platform: Optional[str] = None, mesh=None,
+               shard_axis: str = "model",
+               shard_threshold_bytes: int = SHARD_PARTIAL_BYTES) -> QueryPlan:
+    """Pick fused/nonfused + join/agg/serving backends for one query.
+
+    With a ``mesh``, the plan also decides per-arm *placement* of the
+    quasi-static row tables (``partition_specs``): each arm's prefused
+    partial is sized as (dim rows × out_width) fp32 and either replicated or
+    row-sharded over ``shard_axis`` (see :func:`plan_partition_spec`).
+    """
     sel = min(max(float(selectivity), 0.0), 1.0)
     online_rows = float(fact_rows) * sel
 
@@ -172,12 +279,21 @@ def plan_query(model: Optional[Model], fact_rows: int,
     serve_backend, serve_reason = plan_serving_backend(
         model, len(dim_rows), backend=backend, platform=platform)
 
+    partition_specs = place_reason = None
+    if mesh is not None:
+        partition_specs, place_reason = plan_placements(
+            mesh, [(int(r), out_width) for r in dim_rows], axis=shard_axis,
+            threshold=shard_threshold_bytes)
+
     parts = [f"sel={sel:.3f}", f"join={join_backend}"]
     if fusion is not None:
         parts.append(f"{backend} ({fusion.reason})")
     if agg is not None:
         parts.append(f"agg={agg.backend}")
     parts.append(f"serve={serve_backend} ({serve_reason})")
+    if place_reason is not None:
+        parts.append(place_reason)
     return QueryPlan(backend=backend, join_backend=join_backend, agg=agg,
                      fusion=fusion, selectivity=sel,
-                     reason="; ".join(parts), serve_backend=serve_backend)
+                     reason="; ".join(parts), serve_backend=serve_backend,
+                     partition_specs=partition_specs)

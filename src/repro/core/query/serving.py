@@ -29,6 +29,18 @@ shapes fit their block specs (``plan_serving_backend``): the fused path onto
 the non-fused decision-tree path onto ``kernels/tree_predict``.  Everything
 else uses the pure-jnp gathers, which remain the reference semantics — the
 kernel backends match them bit-exactly in fp32.
+
+Sharded serving
+---------------
+``compile_serving(..., mesh=...)`` partitions the quasi-static state across
+a device mesh (``core.query.sharding``): large partials row-shard over the
+mesh's model axis with per-shard ``PKIndex`` slices, small ones replicate
+(``plan_partition_spec``), and the padded FK batch shards over the DP axes.
+Each bucket's program becomes one ``shard_map``-jitted device-local
+probe + gather + psum, bit-exact vs the single-device jnp path.  Buckets
+are rounded up to multiples of the DP size so every padded batch divides
+the mesh.  The Pallas lowering is mutually exclusive with ``mesh`` (the
+sharded block kernels are the TPU calibration follow-up).
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...launch.mesh import dp_size
 from ..fusion.operators import DecisionTreeGEMM
 from ..fusion.pipeline import prefuse_dims
 from ..laq.join import PKIndex, pk_index
@@ -48,7 +61,10 @@ from ..laq.projection import mapping_matrix
 from ..laq.star import DimSpec
 from ..laq.table import PAD_KEY, Table
 from .ir import PredictiveQuery
-from .planner import QueryPlan, effective_serve_backend, plan_query
+from .planner import (QueryPlan, effective_serve_backend, place_tables,
+                      plan_query, resolve_mesh_serve_backend)
+from .sharding import (ShardedPrefusedPartials, make_serving_forward,
+                       shard_prefused_partials)
 
 #: Default padding buckets: small interactive batches, mid-size batches, and
 #: a bulk bucket that also serves as the chunk size for oversized requests.
@@ -73,9 +89,9 @@ class _ArmIndex:
     """
 
     fk_col: str
-    index: PKIndex
-    dmask: jnp.ndarray       # (r,) bool, in dimension-row order
-    table: jnp.ndarray       # (r, w) prefused partial / projected features
+    index: Optional[PKIndex]  # None on the mesh path (per-shard slices rule)
+    dmask: jnp.ndarray        # (r,) bool, in dimension-row order
+    table: Optional[jnp.ndarray]  # (r, w) partial; None on the mesh path
 
 
 def _lookup(arm: _ArmIndex, fk: jnp.ndarray
@@ -98,7 +114,8 @@ class ServingRuntime:
     def __init__(self, query: PredictiveQuery, plan: QueryPlan, backend: str,
                  serve_backend: str, buckets: Tuple[int, ...],
                  arms: Tuple[_ArmIndex, ...], model, h: Optional[jnp.ndarray],
-                 interpret: bool, donate: bool, sync_stats: bool = True):
+                 interpret: bool, donate: bool, sync_stats: bool = True,
+                 sharded: Optional[ShardedPrefusedPartials] = None):
         self.query = query
         self.plan = plan
         self.backend = backend                # "fused" | "nonfused"
@@ -112,8 +129,18 @@ class ServingRuntime:
         self._trace_count = 0
         self._lat: Dict[int, Deque[float]] = {}
         self._compile_s: Dict[int, float] = {}
+        self.sharded = sharded
+        self._forward_impl = (
+            make_serving_forward(sharded, model, backend)
+            if sharded is not None else None)
         donate_argnums = (0,) if donate else ()
         self._jit = jax.jit(self._forward, donate_argnums=donate_argnums)
+
+    # -- sharding introspection ----------------------------------------------
+    @property
+    def mesh(self):
+        """The serving mesh, or None on the single-device path."""
+        return self.sharded.mesh if self.sharded is not None else None
 
     # -- introspection -------------------------------------------------------
     @property
@@ -165,6 +192,8 @@ class ServingRuntime:
     def _forward(self, fks: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
         # Python side effect: runs once per trace (i.e. once per bucket).
         self._trace_count += 1
+        if self._forward_impl is not None:   # sharded shard_map program
+            return self._forward_impl(fks)
         ptrs, hits = [], []
         for arm, fk in zip(self._arms, fks):
             ptr, hit = _lookup(arm, fk)
@@ -227,6 +256,12 @@ class ServingRuntime:
         if n > top:
             chunks = [self._serve_bucketed([f[i:i + top] for f in fks])
                       for i in range(0, n, top)]
+            if self.sharded is not None:
+                # Eagerly concatenating mesh-sharded chunks miscompiles on
+                # some jax versions (observed: values scaled by the model
+                # axis size) — assemble oversized batches on host instead.
+                return jnp.asarray(np.concatenate(
+                    [np.asarray(c) for c in chunks], axis=0))
             return jnp.concatenate(chunks, axis=0)
         return self._serve_bucketed(fks)
 
@@ -297,7 +332,9 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                     interpret: bool = False, donate: Optional[bool] = None,
                     sync_stats: bool = True,
                     batches_per_update: float = 1000.0,
-                    memory_budget_bytes: Optional[int] = None
+                    memory_budget_bytes: Optional[int] = None,
+                    mesh=None, shard_axis: str = "model",
+                    shard_threshold_bytes: Optional[int] = None
                     ) -> ServingRuntime:
     """Compile ``q``'s online phase over a (batch, fk...) request pytree.
 
@@ -319,6 +356,14 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     Fact-side state is deliberately absent: requests are *not* fact rows, so
     ``q.fact_preds`` (predicates over fact measures) cannot apply and are
     ignored; dimension-side predicates are folded into the lookup validity.
+
+    ``mesh`` switches on sharded serving: per-arm placement is decided by
+    :func:`plan_partition_spec` (replicate below ``shard_threshold_bytes``,
+    row-shard over ``shard_axis`` with the ``safe_spec`` divisibility
+    fallback above it), buckets round up to multiples of the mesh's DP size
+    and each bucket's program runs as one ``shard_map`` of device-local
+    probes + gathers.  ``mesh`` is incompatible with
+    ``serve_backend="pallas"``.
     """
     if q.model is None:
         raise ValueError("compile_serving requires a model head")
@@ -328,9 +373,13 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                          (serve_backend, ("auto", "jnp", "pallas"))):
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
+    serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
     buckets = tuple(sorted({int(b) for b in buckets}))
     if not buckets or buckets[0] < 1:
         raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+    if mesh is not None:
+        dp = dp_size(mesh)
+        buckets = tuple(sorted({-(-b // dp) * dp for b in buckets}))
 
     dims = [DimSpec(catalog[a.table], a.fk_col, a.pk_col, a.feature_cols)
             for a in q.arms]
@@ -363,18 +412,38 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         h = None
 
     arms = []
+    masks = []
     for arm, d, tbl in zip(q.arms, dims, tables):
         dmask = d.dim.valid_mask()
         for p in arm.preds:
             dmask = dmask & p.mask(d.dim)
-        arms.append(_ArmIndex(fk_col=arm.fk_col,
-                              index=pk_index(d.dim.key(arm.pk_col)),
-                              dmask=dmask, table=tbl))
+        masks.append(dmask)
+        # On the mesh path the global index/table are dead weight: the
+        # shard_map forward probes the per-shard slices instead.
+        arms.append(_ArmIndex(
+            fk_col=arm.fk_col,
+            index=None if mesh is not None
+            else pk_index(d.dim.key(arm.pk_col)),
+            dmask=dmask,
+            table=None if mesh is not None else tbl))
+
+    sharded = None
+    if mesh is not None:
+        specs, plan = place_tables(mesh, tables, plan, axis=shard_axis,
+                                   threshold_bytes=shard_threshold_bytes)
+        sharded = shard_prefused_partials(
+            mesh,
+            [(arm.fk_col, d.dim.key(arm.pk_col), dmask, tbl)
+             for arm, d, dmask, tbl in zip(q.arms, dims, masks, tables)],
+            h, specs, shard_axis=shard_axis)
+        if h is not None:
+            h = sharded.h
 
     if donate is None:
-        donate = jax.default_backend() in ("tpu", "gpu")
+        donate = (mesh is None
+                  and jax.default_backend() in ("tpu", "gpu"))
     return ServingRuntime(query=q, plan=plan, backend=backend,
                           serve_backend=serve_backend, buckets=buckets,
                           arms=tuple(arms), model=q.model, h=h,
                           interpret=interpret, donate=donate,
-                          sync_stats=sync_stats)
+                          sync_stats=sync_stats, sharded=sharded)

@@ -23,7 +23,32 @@ def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     mp = min(model_parallel, n)
-    return jax.make_mesh((n // mp, mp), ("data", "model"))
+    return make_serving_mesh((n // mp, mp))
+
+
+def make_serving_mesh(shape, axes=("data", "model")):
+    """A (data, model) serving mesh of any shape, on any jax version.
+
+    ``jax.make_mesh`` only exists on newer releases; older ones build a
+    ``Mesh`` from an explicit device array.  The sharded serving runtime
+    shards prefused partials over ``"model"`` and request batches over
+    ``"data"``, so this is the mesh constructor the serving tests and
+    benchmarks use (on CPU, force devices first with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    import numpy as np
+
+    n = 1
+    for s in shape:
+        n *= int(s)
+    devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(f"mesh shape {tuple(shape)} needs {n} devices, "
+                         f"have {len(devices)}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(tuple(shape)), tuple(axes))
 
 
 def dp_axes(mesh) -> tuple:

@@ -48,19 +48,22 @@ class FusedFeatureServer:
     def __init__(self, setting: int, sf: float, k: int, l: int,
                  scale: float = 1.0, seed: int = 0,
                  buckets=DEFAULT_BUCKETS, serve_backend: str = "auto",
-                 interpret: bool = False):
+                 interpret: bool = False, mesh=None,
+                 shard_threshold_bytes=None):
         rng = np.random.default_rng(seed)
         self.syn = generate_star(setting, sf, k, seed=seed, scale=scale)
         self.model = LinearOperator(
             jnp.asarray(rng.normal(size=(k, l)).astype(np.float32)))
         self.catalog, self.query = query_from_star(self.syn.star,
                                                    model=self.model)
+        self.mesh = mesh
+        shard_kw = dict(mesh=mesh, shard_threshold_bytes=shard_threshold_bytes)
         self.runtime_fused = compile_serving(
             self.catalog, self.query, backend="fused", buckets=buckets,
-            serve_backend=serve_backend, interpret=interpret)
+            serve_backend=serve_backend, interpret=interpret, **shard_kw)
         self.runtime_nonfused = compile_serving(
             self.catalog, self.query, backend="nonfused", buckets=buckets,
-            serve_backend=serve_backend, interpret=interpret)
+            serve_backend=serve_backend, interpret=interpret, **shard_kw)
         self.decision = self.runtime_fused.plan.fusion
 
     def runtime(self, fused: bool = True):

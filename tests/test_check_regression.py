@@ -1,0 +1,132 @@
+"""The bench-regression gate must demonstrably fire on a 10x slowdown.
+
+Drives ``benchmarks.check_regression`` both through its pure ``compare``
+function and through ``main`` on real JSON files (the CI invocation path),
+including the injected-10x-slowdown acceptance case, the normalize mode,
+the min-us noise floor, and the vacuous-pass guard.
+"""
+
+import json
+
+from benchmarks.check_regression import compare, load_rows, main
+
+
+def _write_bench(path, rows):
+    payload = {"backend": "cpu",
+               "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                        for n, us in rows.items()]}
+    path.write_text(json.dumps(payload))
+
+
+BASE = {"serving/fused/n8": 500.0, "serving/fused/n64": 900.0,
+        "serving/nonfused/n8": 800.0, "query/Q1.1": 1200.0}
+
+
+def test_gate_fires_on_injected_10x_slowdown(tmp_path):
+    cur = dict(BASE)
+    cur["serving/fused/n8"] = BASE["serving/fused/n8"] * 10.0
+    regressions, compared, _ = compare(cur, BASE, tolerance=1.5)
+    assert compared == len(BASE)
+    assert len(regressions) == 1 and "serving/fused/n8" in regressions[0]
+    # Through the CLI (the CI invocation): exit code 1.
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write_bench(base_dir / "BENCH_serving.json", BASE)
+    _write_bench(tmp_path / "BENCH_serving.json", cur)
+    rc = main([str(tmp_path / "BENCH_serving.json"),
+               "--baseline-dir", str(base_dir), "--tolerance", "1.5"])
+    assert rc == 1
+
+
+def test_gate_fires_on_10x_even_normalized(tmp_path):
+    """--normalize absorbs machine speed, not a single bench regressing."""
+    cur = {n: us * 1.3 for n, us in BASE.items()}   # uniformly slower runner
+    cur["query/Q1.1"] = BASE["query/Q1.1"] * 10.0   # plus one real regression
+    regressions, _, _ = compare(cur, BASE, tolerance=1.5, normalize=True)
+    assert len(regressions) == 1 and "query/Q1.1" in regressions[0]
+    # The same uniformly-slower run without the injection passes normalized
+    # (and would fail the absolute gate, by design).
+    uniform = {n: us * 1.3 for n, us in BASE.items()}
+    assert compare(uniform, BASE, tolerance=1.5, normalize=True)[0] == []
+    assert compare(uniform, BASE, tolerance=1.2, normalize=False)[0] != []
+
+
+def test_within_tolerance_passes(tmp_path):
+    cur = {n: us * 1.4 for n, us in BASE.items()}
+    regressions, compared, _ = compare(cur, BASE, tolerance=1.5)
+    assert regressions == [] and compared == len(BASE)
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write_bench(base_dir / "BENCH_serving.json", BASE)
+    _write_bench(tmp_path / "BENCH_serving.json", cur)
+    assert main([str(tmp_path / "BENCH_serving.json"),
+                 "--baseline-dir", str(base_dir)]) == 0
+
+
+def test_min_us_floor_skips_noise_rows():
+    base = {"tiny": 40.0, "real": 5000.0}
+    cur = {"tiny": 400.0, "real": 5100.0}           # 10x on a 40us row
+    regressions, compared, _ = compare(cur, base, tolerance=1.5, min_us=500.0)
+    assert regressions == [] and compared == 1
+    # The floor only protects rows small on *both* sides.
+    regressions, _, _ = compare({"real": 50000.0, "tiny": 40.0}, base,
+                                tolerance=1.5, min_us=500.0)
+    assert len(regressions) == 1
+
+
+def test_normalize_scale_ignores_sub_floor_noise_rows():
+    """Noise rows must not set the scale the real rows are judged by."""
+    base = {"tiny/a": 40.0, "tiny/b": 50.0, "tiny/c": 45.0,
+            "real/a": 5000.0, "real/b": 6000.0, "real/c": 7000.0,
+            "real/d": 8000.0}
+    cur = dict(base)
+    for t in ("tiny/a", "tiny/b", "tiny/c"):
+        cur[t] = base[t] * 3.0                  # 3x scheduler jitter
+    cur["real/d"] = base["real/d"] * 4.0        # one genuine 4x regression
+    regressions, compared, _ = compare(cur, base, tolerance=1.5,
+                                       min_us=500.0, normalize=True)
+    # Were the 3x noise rows allowed into the median, the scale would be 3
+    # and the 4x regression would normalize to 1.33x — under tolerance.
+    assert compared == 4
+    assert len(regressions) == 1 and "real/d" in regressions[0]
+
+
+def test_normalize_degenerate_row_count_falls_back_to_absolute():
+    """A single gated row must not normalize away its own regression."""
+    base = {"tiny": 40.0, "real": 5000.0}
+    cur = {"tiny": 40.0, "real": 10000.0}
+    regressions, compared, notes = compare(cur, base, tolerance=1.5,
+                                           min_us=500.0, normalize=True)
+    assert compared == 1
+    assert len(regressions) == 1 and "real" in regressions[0]
+    assert any("too few" in n for n in notes)
+
+
+def test_new_and_missing_rows_are_notes_not_failures():
+    cur = {"brand/new": 100.0, "query/Q1.1": 1200.0}
+    regressions, compared, notes = compare(cur, BASE, tolerance=1.5)
+    assert regressions == [] and compared == 1
+    assert any("new row" in n for n in notes)
+    assert any("missing" in n for n in notes)
+
+
+def test_vacuous_pass_refused(tmp_path):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write_bench(base_dir / "BENCH_serving.json", {"renamed/away": 1.0})
+    _write_bench(tmp_path / "BENCH_serving.json", {"other/name": 1.0})
+    assert main([str(tmp_path / "BENCH_serving.json"),
+                 "--baseline-dir", str(base_dir)]) == 1
+
+
+def test_missing_baseline_fails_and_update_seeds(tmp_path):
+    _write_bench(tmp_path / "BENCH_new.json", BASE)
+    base_dir = tmp_path / "baselines"
+    rc = main([str(tmp_path / "BENCH_new.json"),
+               "--baseline-dir", str(base_dir)])
+    assert rc == 1
+    assert main([str(tmp_path / "BENCH_new.json"),
+                 "--baseline-dir", str(base_dir), "--update"]) == 0
+    assert load_rows(str(base_dir / "BENCH_new.json")) == BASE
+    assert main([str(tmp_path / "BENCH_new.json"),
+                 "--baseline-dir", str(base_dir)]) == 0

@@ -188,6 +188,30 @@ def test_no_model_query_raises_on_predictions(data, catalog):
         compiled.predict_rows(jnp.arange(4))
 
 
+def test_groupby_overflow_raises_instead_of_truncating(data, catalog):
+    """ROADMAP "Group-overflow detection": more distinct live group codes
+    than ``num_groups`` used to silently collapse the overflow groups into
+    unique()'s padded tail, dropping them from every aggregate.  The
+    offline concrete-array resolution now counts and raises."""
+    import dataclasses
+
+    from repro.core.laq import groupby_codes
+
+    codes = jnp.asarray(np.array([1, 2, 3, 4, 5, PAD_GROUP], np.int32))
+    with pytest.raises(ValueError, match="group-by overflow"):
+        groupby_codes(codes, num_groups=3)
+    # Exactly num_groups live codes is fine (PAD_GROUP rows don't count).
+    uniq, gid = groupby_codes(codes, num_groups=5)
+    assert list(np.asarray(uniq)) == [1, 2, 3, 4, 5]
+    assert int(np.asarray(gid)[-1]) == 5  # padded row → overflow segment
+    # End to end: a grouped query sized below its measured group count must
+    # refuse to compile rather than return silently wrong aggregates.
+    q = QUERY_IR["P1.linear.year"]()
+    assert q.group_keys
+    with pytest.raises(ValueError, match="group-by overflow"):
+        compile_query(catalog, dataclasses.replace(q, num_groups=1))
+
+
 # --------------------------------------------------------- planner boundaries
 def _toy_model(k=6, l=4):
     rng = np.random.default_rng(0)
