@@ -1,10 +1,16 @@
-"""Quickstart: LAQ + operator fusion, then sharded serving, in ~100 lines.
+"""Quickstart: the Session query-builder API, end to end, in ~100 lines.
 
-Builds a small star schema, runs a relational query through linear-algebra
-operators, fuses a linear model into the dimension tables (paper Eq. 1),
-shows fused == non-fused with far less online work — then partitions the
-prefused partials across a forced multi-device mesh and serves request
-batches from device-local gathers, bit-identical to the one-device path.
+Builds a small star schema, then drives the paper's whole thesis — the
+predictive pipeline σ ⋈ model γ as ONE linear-algebra program — through the
+single fluent entry point, ``repro.core.query.Session``:
+
+  1. declare the pipeline once (joins, predicates, model head, group-by,
+     *several named aggregates*),
+  2. ``.run()`` the whole-query aggregate program (sum/mean/count fused
+     over shared join+model work, ``num_groups="auto"``),
+  3. ``.rows()`` row predictions, fused == non-fused (paper Eq. 1),
+  4. ``.serve()`` the bucketed dynamic-batch runtime — including sharded
+     across a forced multi-device mesh, bit-identical to one device.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,73 +26,83 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fusion import LinearOperator, plan_fusion, predict_fused, \
-    predict_nonfused, prefuse
-from repro.core.laq import DimSpec, Pred, Table, select, star_join
-from repro.core.query import compile_serving, query_from_star
+from repro.core.fusion import LinearOperator
+from repro.core.laq import Table
+from repro.core.query import PREDICTION, Session
 from repro.launch.mesh import make_serving_mesh
 
 rng = np.random.default_rng(0)
 
 # -- 1. Relations (a fact table + two dimension tables) ---------------------
-customers = Table.from_columns("customers", {
-    "custkey": np.arange(100),
-    "age": rng.integers(18, 80, 100).astype(np.float32),
-    "spend": rng.gamma(2.0, 50.0, 100).astype(np.float32),
-}, key_cols=("custkey",))
+catalog = {
+    "customers": Table.from_columns("customers", {
+        "custkey": np.arange(100),
+        "age": rng.integers(18, 80, 100).astype(np.float32),
+        "spend": rng.gamma(2.0, 50.0, 100).astype(np.float32),
+    }, key_cols=("custkey",)),
+    "products": Table.from_columns("products", {
+        "prodkey": np.arange(40),
+        "price": rng.gamma(2.0, 20.0, 40).astype(np.float32),
+        "rating": rng.uniform(1, 5, 40).astype(np.float32),
+        "category": rng.integers(0, 4, 40),
+    }, key_cols=("prodkey", "category")),
+    "orders": Table.from_columns("orders", {
+        "o_custkey": rng.integers(0, 100, 500),
+        "o_prodkey": rng.integers(0, 40, 500),
+        "quantity": rng.integers(1, 9, 500).astype(np.float32),
+    }, key_cols=("o_custkey", "o_prodkey")),
+}
 
-products = Table.from_columns("products", {
-    "prodkey": np.arange(40),
-    "price": rng.gamma(2.0, 20.0, 40).astype(np.float32),
-    "rating": rng.uniform(1, 5, 40).astype(np.float32),
-}, key_cols=("prodkey",))
-
-orders = Table.from_columns("orders", {
-    "o_custkey": rng.integers(0, 100, 500),
-    "o_prodkey": rng.integers(0, 40, 500),
-    "quantity": rng.integers(1, 9, 500).astype(np.float32),
-}, key_cols=("o_custkey", "o_prodkey"))
-
-# -- 2. Relational ops as linear algebra ------------------------------------
-big_orders = select(orders, [Pred("quantity", ">", 5.0)])
-print(f"selection kept {int(big_orders.nvalid)}/500 rows")
-
-star = star_join(orders, [
-    DimSpec(customers, "o_custkey", "custkey", ("age", "spend")),
-    DimSpec(products, "o_prodkey", "prodkey", ("price", "rating")),
-])
-features = star.materialize()           # T = Σⱼ Iⱼ Bⱼ Mⱼ   (500 × 4)
-print("star-join feature matrix:", features.shape)
-
-# -- 3. Operator fusion (the paper's contribution) ---------------------------
+# -- 2. One fluent pipeline: σ ⋈ model γ -------------------------------------
 model = LinearOperator(jnp.asarray(rng.normal(size=(4, 1)), jnp.float32))
-decision = plan_fusion(model, fact_rows=500, dim_rows=[100, 40])
-print(f"planner: fuse={decision.fuse} — {decision.reason}")
+sess = Session(catalog)
+pipeline = (sess.query("orders")
+            .join("customers", on=("o_custkey", "custkey"),
+                  features=["age", "spend"])
+            .join("products", on=("o_prodkey", "prodkey"),
+                  features=["price", "rating"],
+                  where=[("rating", ">", 1.5)])
+            .where(("quantity", ">", 2.0))
+            .predict(model)
+            .group_by(("products", "category", 4), num_groups="auto")
+            .agg(qty="sum(quantity)",          # several named aggregates,
+                 score=("mean", PREDICTION),   # one compiled program
+                 n="count",
+                 q_max="max(quantity)"))
+print("plan:", pipeline.explain())
 
-pre = prefuse(star, model)              # Bⱼ Mⱼ L pushed into the dims
-fused = predict_fused(star, pre)        # online: 2 gathers + 1 add
-nonfused = predict_nonfused(star, model)
+# -- 3. .run(): the whole-query aggregate program ----------------------------
+res = pipeline.run()
+print(f"groups={np.asarray(res['groups'])} n={np.asarray(res['n'])}")
+print(f"mean prediction per category: {np.asarray(res['score']).ravel()}")
+# The Fig. 4 paper-faithful one-hot matmul backend computes the same thing.
+ref = pipeline.run(agg_backend="matmul")
+np.testing.assert_allclose(np.asarray(res["qty"]), np.asarray(ref["qty"]),
+                           rtol=1e-6)
+assert sess.num_plans == 2, "one plan per backend, cached by structure"
+print("segment == matmul aggregation ✓")
+
+# -- 4. .rows(): row predictions, fused == non-fused (paper Eq. 1) -----------
+ids = np.array([0, 3, 17, 42], np.int32)
+fused = pipeline.rows(ids)                       # prefused partials: gathers
+nonfused = pipeline.rows(ids, backend="nonfused")  # materialize T, then L
 np.testing.assert_allclose(np.asarray(fused), np.asarray(nonfused),
                            rtol=1e-5, atol=1e-5)
-print("fused == non-fused ✓ ; online FLOPs per row:",
-      f"fused={model.l * 2}, non-fused={4 * 2 + 4 * model.l * 2}")
+print("fused == non-fused row predictions ✓", np.asarray(fused).ravel())
 
-# -- 4. Sharded serving: the partials across a device mesh -------------------
-# Requests are per-arm foreign keys (not fact rows); compile_serving compiles
-# the online phase alone.  With a mesh, each partial row-shards over the
-# "model" axis (per-shard PK-index slices → device-local probes + gathers,
-# one psum) and the request batch shards over "data"; partials under the
-# byte threshold — forced to 0 here so the toy tables shard — replicate.
-catalog, query = query_from_star(star, model=model)
-mesh = make_serving_mesh((2, 4))        # 8 forced host devices
-runtime = compile_serving(catalog, query, buckets=(8, 64),
-                          mesh=mesh, shard_threshold_bytes=0)
-reference = compile_serving(catalog, query, buckets=(8, 64))
+# -- 5. .serve(): dynamic batches, sharded across a mesh ---------------------
+# Requests are per-arm foreign keys (not fact rows).  A mesh-bound Session
+# row-shards each prefused partial over the "model" axis (per-shard PK-index
+# slices → device-local probes + gathers, one psum) and shards the request
+# batch over "data"; the threshold is forced to 0 so the toy tables shard.
+mesh_sess = Session(catalog, mesh=make_serving_mesh((2, 4)),
+                    shard_threshold_bytes=0)
+serving = mesh_sess.bind(pipeline.build()).serve(buckets=(8, 64))
+reference = pipeline.serve(buckets=(8, 64))
 requests = {"o_custkey": np.array([3, 7, 999, 42], np.int32),   # 999: miss
             "o_prodkey": np.array([0, 11, 5, 39], np.int32)}
-sharded_preds = runtime.serve(requests)
-np.testing.assert_array_equal(np.asarray(sharded_preds),
+np.testing.assert_array_equal(np.asarray(serving.serve(requests)),
                               np.asarray(reference.serve(requests)))
-print(f"sharded == single-device ✓ on mesh {dict(mesh.shape)}; "
-      f"placement={[str(s) for s in runtime.plan.partition_specs]}; "
-      f"{runtime.sharded.nbytes_per_device()}B of partials per device")
+print(f"sharded == single-device ✓ on mesh {dict(serving.mesh.shape)}; "
+      f"placement={[str(s) for s in serving.plan.partition_specs]}; "
+      f"{serving.sharded.nbytes_per_device()}B of partials per device")

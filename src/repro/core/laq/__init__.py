@@ -10,8 +10,8 @@ from .join import (FactoredJoin, PKIndex, ShardedPKIndex, join_factored,
                    materialize_matmul, materialize_gather)
 from .aggregation import (groupby_sum_matmul, groupby_sum_segment,
                           groupby_reduce, groupby_codes, segment_aggregate,
-                          matmul_aggregate, composite_code, decode_composite,
-                          PAD_GROUP)
+                          segment_reduce, matmul_aggregate, auto_num_groups,
+                          composite_code, decode_composite, PAD_GROUP)
 from .sort import order_by, sorted_domain_order
 from .star import (DimSpec, StarJoin, dim_mapping_matrices, shard_rows,
                    star_join)
@@ -24,7 +24,8 @@ __all__ = [
     "mmjoin_dense", "mmjoin_bcoo", "onehot_keys", "matching_pairs",
     "row_mapping_matrices", "materialize_matmul", "materialize_gather",
     "groupby_sum_matmul", "groupby_sum_segment", "groupby_reduce",
-    "groupby_codes", "segment_aggregate", "matmul_aggregate",
+    "groupby_codes", "segment_aggregate", "segment_reduce",
+    "matmul_aggregate", "auto_num_groups",
     "composite_code", "decode_composite", "PAD_GROUP",
     "order_by", "sorted_domain_order",
     "DimSpec", "StarJoin", "dim_mapping_matrices", "shard_rows", "star_join",

@@ -155,7 +155,18 @@ def groupby_reduce(codes: jnp.ndarray, values: Sequence[jnp.ndarray],
 # --------------------------------------------------------------------------
 # Code-level backends for the predictive-query compiler
 # --------------------------------------------------------------------------
-def groupby_codes(codes: jnp.ndarray, num_groups: int
+def _live_code_count(codes: jnp.ndarray) -> "int | None":
+    """Distinct live (non-PAD_GROUP) codes, or None when codes are traced."""
+    try:
+        concrete = np.asarray(codes)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return None
+    return int(np.unique(concrete[concrete != int(PAD_GROUP)]).size)
+
+
+def groupby_codes(codes: jnp.ndarray, num_groups: int, *,
+                  n_live: "int | None" = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Resolve composite codes to (sorted unique codes, dense group ids).
 
@@ -166,21 +177,18 @@ def groupby_codes(codes: jnp.ndarray, num_groups: int
     more than ``num_groups`` of them would silently collapse the overflow
     groups into the padded tail of ``unique(size=...)`` and drop them from
     every aggregate, so it raises instead.  Under an outer trace the count is
-    abstract and the check is skipped (the caller owns sizing there).
+    abstract and the check is skipped (the caller owns sizing there).  A
+    caller that already measured the domain (``auto_num_groups``) passes
+    ``n_live`` to skip the redundant host-side count.
     """
-    try:
-        concrete = np.asarray(codes)
-    except (jax.errors.ConcretizationTypeError,
-            jax.errors.TracerArrayConversionError):
-        concrete = None
-    if concrete is not None:
-        n_live = np.unique(concrete[concrete != int(PAD_GROUP)]).size
-        if n_live > num_groups:
-            raise ValueError(
-                f"group-by overflow: {n_live} distinct live group codes "
-                f"exceed num_groups={num_groups}; the excess groups would "
-                "silently vanish from every aggregate. Raise num_groups "
-                f"(>= {n_live}) or coarsen the group keys.")
+    if n_live is None:
+        n_live = _live_code_count(codes)
+    if n_live is not None and n_live > num_groups:
+        raise ValueError(
+            f"group-by overflow: {n_live} distinct live group codes "
+            f"exceed num_groups={num_groups}; the excess groups would "
+            "silently vanish from every aggregate. Raise num_groups "
+            f"(>= {n_live}) or coarsen the group keys.")
     uniq = jnp.unique(codes, size=num_groups, fill_value=PAD_GROUP)
     gid = jnp.searchsorted(uniq, codes).astype(jnp.int32)
     gid = jnp.where(codes != PAD_GROUP,
@@ -188,11 +196,54 @@ def groupby_codes(codes: jnp.ndarray, num_groups: int
     return uniq, gid
 
 
+def auto_num_groups(codes: jnp.ndarray) -> int:
+    """Measured group-domain size: distinct live codes on the concrete path.
+
+    The ``num_groups="auto"`` resolution: the offline compiler holds the
+    composite codes as concrete arrays, so the exact live-code count is one
+    host-side ``unique`` away — sizing the group dimension to precisely the
+    measured domain (never overflows, never over-allocates).  Under an outer
+    trace the codes are abstract and no measurement exists; that caller owns
+    sizing and must pass an explicit ``num_groups``.
+    """
+    n_live = _live_code_count(codes)
+    if n_live is None:
+        raise ValueError(
+            "num_groups='auto' requires concrete group codes: under an "
+            "outer trace the code domain is abstract, so pass an explicit "
+            "num_groups instead")
+    return max(n_live, 1)
+
+
 def segment_aggregate(gid: jnp.ndarray, values: jnp.ndarray,
                       num_groups: int) -> jnp.ndarray:
     """Σ values per group via ``segment_sum``; values (n,) or (n, l)."""
-    return jax.ops.segment_sum(values, gid,
-                               num_segments=num_groups + 1)[:num_groups]
+    return segment_reduce(gid, values, num_groups, "sum")
+
+
+_SEGMENT_OPS = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+                "max": jax.ops.segment_max}
+
+
+def segment_reduce(gid: jnp.ndarray, values: jnp.ndarray, num_groups: int,
+                   op: str = "sum") -> jnp.ndarray:
+    """Per-group sum/min/max via segment ops; values (n,) or (n, l).
+
+    The min/max lowering used by the compiler on *both* aggregation backends
+    (one-hot matmuls have no min/max form — Fig. 4 is additive).  Rows whose
+    gid is the overflow segment ``num_groups`` (padding, predicate failures)
+    are dropped; group slots that receive no row come back as the segment
+    identity (±inf for min/max) and are zeroed so downstream consumers never
+    see infinities in dead slots.
+    """
+    if op not in _SEGMENT_OPS:
+        raise ValueError(f"segment_reduce op {op!r} not one of "
+                         f"{sorted(_SEGMENT_OPS)}")
+    out = _SEGMENT_OPS[op](values, gid,
+                           num_segments=num_groups + 1)[:num_groups]
+    if op in ("min", "max"):
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    return out
 
 
 def matmul_aggregate(gid: jnp.ndarray, values: jnp.ndarray,

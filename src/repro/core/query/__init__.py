@@ -3,9 +3,58 @@ lowered to one jitted linear-algebra program.
 
 The paper's thesis (§3) is that relational operators and ML predictions share
 a linear-algebra substrate, so a *whole* predictive query can be planned and
-fused as one program.  This package is that planner/compiler.  IR node →
-paper equation map:
+fused as one program.  This package is that planner/compiler, fronted by one
+declarative surface: the :class:`Session` query builder.
 
+Session API (the single entry point)
+------------------------------------
+A ``Session`` binds a catalog (+ optional device mesh) once; a fluent,
+immutable builder then describes the pipeline and drives all three
+execution modes::
+
+    sess = Session(catalog, mesh=None)
+    q = (sess.query("lineorder")
+         .join("date", on=("lo_orderdate", "datekey"),
+               features=["d_month"], where=[("d_year", "==", 1993)])
+         .where(("lo_discount", "between", (1, 3)))
+         .predict(model)
+         .group_by(("date", "d_year", 8, 1992), num_groups="auto")
+         .agg(revenue="sum(lo_revenue)", preds=("mean", PREDICTION),
+              n="count"))
+
+    q.run()                    # whole-query aggregates — one fused program
+    q.rows(row_ids)            # row predictions for a fact-row batch
+    q.serve(buckets=(8, 64))   # bucketed dynamic-batch ServingRuntime
+
+One compiled program computes *all* named aggregates over the shared
+join/model work: ``sum``/``count``/``mean``/``min``/``max``, with mean
+lowered as a fused sum/count and min/max through segment ops on both
+aggregation backends.  Mesh placement, sharding thresholds, interpret mode
+and plan-cache keys live on the session; plans are cached structurally
+(:func:`~repro.core.query.session.query_key`), so equivalent pipelines —
+fluent, hand-built IR, or registry rebuilds — never re-trace.
+
+Migration from the pre-Session entry points (which remain as thin shims —
+the ``PredictiveQuery`` IR is still the stable compiler contract):
+
+=============================================  =============================
+Old call                                       Session call
+=============================================  =============================
+``compile_query(catalog, q, **kw)``            ``sess.compile(q, **kw)`` or
+                                               ``sess.bind(q).compile(**kw)``
+``compile_query(catalog, q).run()``            ``sess.bind(q).run()``
+``CompiledQuery.predict_rows(ids)``            ``builder.rows(ids)``
+``compile_serving(catalog, q, buckets=b)``     ``builder.serve(buckets=b)``
+``compile_query(..., mesh=m, shard_...=...)``  ``Session(catalog, mesh=m,
+                                               shard_...)`` once, per-call
+                                               plumbing gone
+hand-built ``PredictiveQuery(...)``            ``sess.query(fact).join(...)
+                                               .where(...).predict(...)
+                                               .group_by(...).agg(...)``
+=============================================  =============================
+
+IR node → paper construct
+-------------------------
 ======================  =====================================================
 IR node                 Paper construct
 ======================  =====================================================
@@ -21,58 +70,58 @@ IR node                 Paper construct
                         node-ownership masks Wⱼ
 ``GroupKey``            §2.4.2 composite group codes (sort-unique); the radix
                         ``bound`` is one digit of the code
-``Aggregate``           §2.4/Fig. 4 group-by-sum: one-hot matmul (faithful)
-                        or segment_sum (optimized) — compiler-chosen
+``Aggregate``           §2.4/Fig. 4 group-by: one-hot matmul (faithful) or
+                        segment ops (optimized) — compiler-chosen per the
+                        whole aggregate set (``plan_aggregation``)
 ======================  =====================================================
 
 ``plan_query`` extends the paper's Eq. 2/4 fusion boundary with selection
-selectivity, the Fig. 4 aggregation-backend choice, and the serving-kernel
-choice (``plan_serving_backend``); ``compile_query`` lowers the winning plan
-into a single jitted XLA program and exposes a row-batched serving entry
-point (``CompiledQuery.predict_rows``).
+selectivity, the Fig. 4 aggregation-backend choice costed over the combined
+aggregate set, and the serving-kernel choice (``plan_serving_backend``);
+its thresholds are keyed by ``jax.default_backend()``
+(``planner_threshold`` / ``PLANNER_THRESHOLDS``) with CPU-seeded defaults,
+so TPU calibration is a table entry.  ``num_groups="auto"`` sizes the group
+dimension from the measured code domain on the offline concrete-array path.
 
-Serving API
------------
-``compile_serving(catalog, q, buckets=...)`` compiles the *online phase
-alone* over a ``(batch, fk...)`` request pytree and returns a
+Serving
+-------
+``builder.serve(buckets=...)`` (→ :func:`compile_serving`) compiles the
+*online phase alone* over a ``(batch, fk...)`` request pytree and returns a
 :class:`ServingRuntime` — the production entry point when requests are
-arbitrary incoming key tuples rather than fact rows:
-
-    runtime = compile_serving(catalog, query, buckets=(8, 64, 512))
-    preds = runtime.serve({"lo_partkey": ..., "lo_suppkey": ..., ...})
-
-Bucket policy: each batch is PAD_KEY-padded up to the smallest configured
-bucket and dispatched through that bucket's jitted program (one trace per
-bucket, ever — ``runtime.num_compiles`` proves it); batches above the top
-bucket are served in top-bucket chunks.  Buckets are the latency/memory
-knob: more buckets → tighter padding waste, fewer buckets → fewer compiled
-programs.  ``runtime.latency_stats()`` reports per-bucket percentiles.
-``serve_backend`` lowers the gather-sum onto the Pallas kernels
-(``fused_star_gather`` / ``tree_predict``) when shapes fit; the jnp gather
-path stays the bit-exact fp32 reference.
+arbitrary incoming key tuples rather than fact rows.  Each batch is
+PAD_KEY-padded up to the smallest configured bucket and dispatched through
+that bucket's jitted program (one trace per bucket, ever); a session mesh
+shards the quasi-static partials per ``plan_partition_spec``; the Pallas
+kernels (``fused_star_gather`` / ``tree_predict``) lower the gather-sum when
+shapes fit.
 """
-from .ir import (PREDICTION, Aggregate, ArmSpec, GroupKey, PredictiveQuery,
-                 eval_value)
+from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
+                 GroupKey, PredictiveQuery, eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
 from .planner import (AggDecision, QueryPlan, plan_aggregation,
                       plan_partition_spec, plan_placements, plan_query,
-                      plan_serving_backend, DENSE_JOIN_ELEMS,
-                      MXU_SEGMENT_ADVANTAGE, SERVE_KERNEL_MAX_NODES,
+                      plan_serving_backend, planner_threshold,
+                      DENSE_JOIN_ELEMS, MXU_SEGMENT_ADVANTAGE,
+                      PLANNER_THRESHOLDS, SERVE_KERNEL_MAX_NODES,
                       SERVE_KERNEL_MAX_WIDTH, SHARD_PARTIAL_BYTES)
 from .serving import (DEFAULT_BUCKETS, ServingRuntime, compile_serving,
                       requests_from_rows)
+from .session import QueryBuilder, Session, query, query_key
 from .sharding import (ShardedArm, ShardedPrefusedPartials,
                        shard_prefused_partials)
 
 __all__ = [
-    "PREDICTION", "Aggregate", "ArmSpec", "GroupKey", "PredictiveQuery",
+    "AGG_OPS", "COUNT_STAR", "PREDICTION", "Aggregate", "ArmSpec",
+    "GroupKey", "PredictiveQuery",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",
     "AggDecision", "QueryPlan", "plan_aggregation", "plan_partition_spec",
     "plan_placements", "plan_query", "plan_serving_backend",
+    "planner_threshold", "PLANNER_THRESHOLDS",
     "DENSE_JOIN_ELEMS",
     "MXU_SEGMENT_ADVANTAGE", "SERVE_KERNEL_MAX_NODES",
     "SERVE_KERNEL_MAX_WIDTH", "SHARD_PARTIAL_BYTES",
     "DEFAULT_BUCKETS", "ServingRuntime", "compile_serving",
     "requests_from_rows",
+    "QueryBuilder", "Session", "query", "query_key",
     "ShardedArm", "ShardedPrefusedPartials", "shard_prefused_partials",
 ]

@@ -30,14 +30,15 @@ from ..fusion.pipeline import (PrefusedStar, predict_fused,
                                predict_fused_kernel, predict_fused_matmul,
                                predict_nonfused, predict_nonfused_kernel,
                                predict_nonfused_matmul, prefuse)
-from ..laq.aggregation import (composite_code, groupby_codes,
-                               matmul_aggregate, segment_aggregate)
+from ..laq.aggregation import (auto_num_groups, composite_code,
+                               groupby_codes, matmul_aggregate,
+                               segment_aggregate, segment_reduce)
 from ..laq.join import join_factored
 from ..laq.projection import mapping_matrix
 from ..laq.selection import select
 from ..laq.star import DimSpec, StarJoin
 from ..laq.table import Table
-from .ir import (PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
+from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
@@ -146,10 +147,21 @@ def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
 
 
 def _check_aggregates(q: PredictiveQuery):
+    if not q.aggregates:
+        raise ValueError("query has no aggregates")
+    names = [a.name for a in q.aggregates]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate aggregate names {names}: each "
+                         "aggregate needs a distinct result column name")
+    reserved = {"rows", "groups"} & set(names)
+    if reserved:
+        raise ValueError(f"aggregate names {sorted(reserved)} collide with "
+                         "the reserved result keys 'rows'/'groups'")
     for agg in q.aggregates:
-        if agg.op != "sum":
-            raise NotImplementedError(
-                f"aggregate op {agg.op!r} not supported by the compiler")
+        if agg.op not in AGG_OPS:
+            raise ValueError(
+                f"aggregate op {agg.op!r} (aggregate {agg.name!r}) not one "
+                f"of {list(AGG_OPS)}")
         if agg.value == PREDICTION and q.model is None:
             raise ValueError("PREDICTION aggregate requires a model")
 
@@ -165,6 +177,14 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   shard_threshold_bytes: Optional[int] = None
                   ) -> CompiledQuery:
     """Plan + lower ``q`` against ``catalog`` into one jitted program.
+
+    All of ``q.aggregates`` lower into that one program over the shared
+    join/model work: ``sum``/``count``/``mean``/``min``/``max``, with mean
+    as a fused sum/count (one count reduction shared across every
+    count/mean aggregate) and min/max through segment ops on either
+    aggregation backend.  ``q.num_groups == "auto"`` sizes the group
+    dimension from the measured live code domain (offline concrete path
+    only — see :func:`~repro.core.laq.aggregation.auto_num_groups`).
 
     ``backend`` / ``join_backend`` / ``agg_backend`` override the planner
     ("auto" defers to the cost model); explicit "matmul" backends give the
@@ -216,6 +236,22 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     except jax.errors.ConcretizationTypeError:
         sel = 1.0
 
+    # Group codes resolve before planning so ``num_groups="auto"`` can size
+    # the group dimension from the measured code domain (the codes are
+    # concrete on the offline path) and feed the planner the real G.
+    codes = None
+    n_live = None
+    if q.group_keys:
+        cols, bounds = _group_columns(catalog, q, star)
+        codes = composite_code(cols, bounds, valid)
+        if q.num_groups == "auto":
+            n_live = auto_num_groups(codes)
+            q = dataclasses.replace(q, num_groups=n_live)
+    elif q.num_groups == "auto":
+        q = dataclasses.replace(
+            q, num_groups=PredictiveQuery.__dataclass_fields__[
+                "num_groups"].default)
+
     out_width = q.model.l if q.model is not None else 1
     # The planner's selectivity term models mask_select compaction (§2.2):
     # online shapes only actually shrink when ``select_capacity`` compacted
@@ -229,6 +265,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                       selectivity=1.0,
                       num_groups=q.num_groups if q.group_keys else 0,
                       out_width=out_width,
+                      agg_ops=tuple(a.op for a in q.aggregates),
                       batches_per_update=batches_per_update,
                       memory_budget_bytes=memory_budget_bytes)
     backend = plan.backend if backend == "auto" else backend
@@ -248,9 +285,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
 
     uniq = gid = None
     if q.group_keys:
-        cols, bounds = _group_columns(catalog, q, star)
-        codes = composite_code(cols, bounds, valid)
-        uniq, gid = groupby_codes(codes, q.num_groups)
+        uniq, gid = groupby_codes(codes, q.num_groups, n_live=n_live)
 
     reduce_fn = (matmul_aggregate if agg_backend == "matmul"
                  else segment_aggregate)
@@ -270,16 +305,53 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                                            interpret=interpret)
         return predict_nonfused(star, q.model)
 
+    def _agg_values(agg, pred):
+        """Per-row values for one aggregate (sum-masked for additive ops)."""
+        if agg.value == PREDICTION:
+            return pred                          # already validity-masked
+        vals = eval_value(fact, agg.value,
+                          query=f"{agg.name!r} on {q.fact!r}")
+        if agg.op in ("min", "max"):
+            return vals       # invalid rows are masked by gid / ±inf below
+        return jnp.where(valid, vals, 0.0)
+
     def _online():
         pred = _predictions() if q.model is not None else None
         out = {}
+        # One shared count reduction backs every count/mean aggregate.
+        count = None
+        if any(a.op in ("count", "mean") for a in q.aggregates):
+            ones = valid.astype(jnp.float32)
+            count = (reduce_fn(gid, ones, q.num_groups) if gid is not None
+                     else jnp.sum(ones))
         for agg in q.aggregates:
-            if agg.value == PREDICTION:
-                vals = pred                      # already validity-masked
-            else:
-                vals = jnp.where(valid, eval_value(fact, agg.value), 0.0)
+            if agg.op == "count":
+                out[agg.name] = count
+                continue
+            vals = _agg_values(agg, pred)
             if gid is not None:
-                out[agg.name] = reduce_fn(gid, vals, q.num_groups)
+                if agg.op in ("min", "max"):
+                    # Invalid rows sit in the dropped overflow segment, so
+                    # no value masking is needed; min/max lower through
+                    # segment ops on both aggregation backends (Fig. 4's
+                    # one-hot matmul is additive-only).
+                    out[agg.name] = segment_reduce(gid, vals, q.num_groups,
+                                                   agg.op)
+                elif agg.op == "mean":
+                    s = reduce_fn(gid, vals, q.num_groups)
+                    c = jnp.maximum(count, 1.0)
+                    out[agg.name] = s / (c[:, None] if s.ndim > 1 else c)
+                else:
+                    out[agg.name] = reduce_fn(gid, vals, q.num_groups)
+            elif agg.op in ("min", "max"):
+                fill = jnp.inf if agg.op == "min" else -jnp.inf
+                mask = valid[:, None] if vals.ndim > 1 else valid
+                r = (jnp.min if agg.op == "min" else jnp.max)(
+                    jnp.where(mask, vals, fill), axis=0)
+                out[agg.name] = jnp.where(jnp.isfinite(r), r, 0.0)
+            elif agg.op == "mean":
+                out[agg.name] = (jnp.sum(vals, axis=0)
+                                 / jnp.maximum(count, 1.0))
             else:
                 out[agg.name] = jnp.sum(vals, axis=0)
         return out

@@ -1,4 +1,4 @@
-"""Declarative IR for predictive queries (selection ⋈ star ⋈ model ⋈ γ).
+"""Declarative IR for predictive queries (selection ⋈ model ⋈ γ).
 
 A ``PredictiveQuery`` is the logical plan the compiler lowers; every node is
 data (frozen dataclasses + tuples) so plans are cheap to build, inspect and
@@ -9,7 +9,12 @@ cache.  Value expressions over fact columns are tiny s-expressions::
     ("sub", "lo_revenue", "lo_supplycost")
 
 and the sentinel ``PREDICTION`` aggregates the model's output matrix instead
-of a fact column.
+of a fact column.  ``COUNT_STAR`` is the value placeholder for ``count``
+aggregates, which count surviving rows and never evaluate their value.
+
+The fluent way to build this IR is :mod:`repro.core.query.session`
+(``Session`` / ``query``); the dataclasses below stay the stable compiler
+contract either way.
 """
 from __future__ import annotations
 
@@ -26,6 +31,13 @@ Model = Union[LinearOperator, DecisionTreeGEMM]
 
 #: Aggregate.value sentinel: aggregate the (n, l) model prediction matrix.
 PREDICTION = "@prediction"
+
+#: Aggregate.value placeholder for ``count`` (COUNT(*) — value is ignored).
+COUNT_STAR = "*"
+
+#: Aggregate ops the compiler lowers (mean = fused sum/count; min/max via
+#: segment ops on both aggregation backends).
+AGG_OPS = ("sum", "count", "mean", "min", "max")
 
 _BINOPS = {
     "add": lambda a, b: a + b,
@@ -68,7 +80,13 @@ class GroupKey:
 
 @dataclasses.dataclass(frozen=True)
 class Aggregate:
-    """SUM(value) [GROUP BY ...]; ``value`` is an expr or ``PREDICTION``."""
+    """``op(value) [GROUP BY ...]``; ``value`` is an expr or ``PREDICTION``.
+
+    ``op`` is one of :data:`AGG_OPS`.  ``count`` ignores its value
+    (conventionally :data:`COUNT_STAR`) and counts surviving rows; ``mean``
+    is lowered as a fused sum/count sharing one count reduction across every
+    mean/count aggregate of the query.
+    """
 
     value: Union[str, tuple]
     op: str = "sum"
@@ -81,7 +99,10 @@ class PredictiveQuery:
 
     σ(fact preds) ∧ ⋈(arms, with dim preds) → model → γ(group_keys, aggs).
     ``model=None`` gives a pure relational query (the 13 SSB queries);
-    ``group_keys=()`` gives a scalar aggregate (SSB QG1).
+    ``group_keys=()`` gives a scalar aggregate (SSB QG1).  ``num_groups``
+    may be ``"auto"``: the compiler then sizes it from the measured code
+    domain on the offline concrete-array path (traced callers must pass an
+    explicit int — the domain is abstract under a trace).
     """
 
     fact: str                             # catalog name of the fact table
@@ -90,21 +111,55 @@ class PredictiveQuery:
     model: Optional[Model] = None
     group_keys: Tuple[GroupKey, ...] = ()
     aggregates: Tuple[Aggregate, ...] = (Aggregate("lo_revenue"),)
-    num_groups: int = 8192
+    num_groups: Union[int, str] = 8192
 
     @property
     def feature_width(self) -> int:
         return sum(len(a.feature_cols) for a in self.arms)
 
 
-def eval_value(fact: Table, expr) -> jnp.ndarray:
-    """Evaluate a fact-column value expression to a (capacity,) float array."""
+def eval_value(fact: Table, expr, *, query: Optional[str] = None
+               ) -> jnp.ndarray:
+    """Evaluate a fact-column value expression to a (capacity,) float array.
+
+    Unknown columns and malformed s-expressions raise a ``ValueError``
+    naming the offending expression (and the query, when the caller passes
+    a ``query`` descriptor) instead of leaking a bare KeyError/IndexError
+    from ``Table.col``.
+    """
+    where = f" of query {query}" if query else ""
     if isinstance(expr, str):
-        return fact.col(expr)
+        if expr in (PREDICTION, COUNT_STAR):
+            raise ValueError(
+                f"sentinel {expr!r} is not a fact column{where}: "
+                "PREDICTION/COUNT_STAR are handled by the compiler, not "
+                "eval_value")
+        try:
+            return fact.col(expr)
+        except (KeyError, ValueError, IndexError) as e:
+            raise ValueError(
+                f"unknown column {expr!r} on table {fact.name!r} in value "
+                f"expression{where}; available columns: "
+                f"{list(fact.columns)}") from e
+    if not isinstance(expr, tuple) or not expr or not isinstance(expr[0],
+                                                                 str):
+        raise ValueError(
+            f"malformed value expression {expr!r}{where}: expected a column "
+            "name or an ('op', ...) s-expression tuple")
     op, *args = expr
     if op == "col":
-        return fact.col(args[0])
-    vals = [eval_value(fact, a) for a in args]
-    if op not in _BINOPS or len(vals) != 2:
-        raise ValueError(f"bad value expression {expr!r}")
+        if len(args) != 1 or not isinstance(args[0], str):
+            raise ValueError(
+                f"malformed value expression {expr!r}{where}: "
+                "('col', name) takes exactly one column name")
+        return eval_value(fact, args[0], query=query)
+    if op not in _BINOPS:
+        raise ValueError(
+            f"unknown op {op!r} in value expression {expr!r}{where}; "
+            f"expected one of {sorted(_BINOPS)} or 'col'")
+    if len(args) != 2:
+        raise ValueError(
+            f"malformed value expression {expr!r}{where}: op {op!r} takes "
+            f"2 arguments, got {len(args)}")
+    vals = [eval_value(fact, a, query=query) for a in args]
     return _BINOPS[op](vals[0], vals[1])

@@ -27,15 +27,55 @@ from ..fusion.operators import DecisionTreeGEMM
 from ..fusion.planner import FusionDecision, plan_fusion
 from .ir import Model
 
-# Dense one-hot row-matching matrices are only viable when the (fact × dim)
-# matrix is small (paper §4.2: MM-Join loses to pointer joins at scale).
-DENSE_JOIN_ELEMS = 1 << 14
+# Cost-model thresholds, keyed by ``jax.default_backend()`` with the
+# CPU-bench-seeded values as the default row — making TPU calibration a
+# table entry ("tpu": {...}) rather than a refactor:
+#
+# * DENSE_JOIN_ELEMS — dense one-hot row-matching matrices are only viable
+#   when the (fact × dim) matrix is small (paper §4.2: MM-Join loses to
+#   pointer joins at scale).
+# * MXU_SEGMENT_ADVANTAGE — MXU matmul throughput advantage over
+#   scatter-based segment_sum: the matmul aggregation is picked when its
+#   FLOP overcount (≈2·G) stays under this.  Calibrated on
+#   bench_predictive_queries (G=8,l=4 matmul 4× faster; G=8192 matmul 300×
+#   slower — any value in [13, ~1000) separates the two regimes).
+# * SHARD_PARTIAL_BYTES — below this size a prefused partial is replicated
+#   rather than row-sharded: the partial fits every device comfortably and
+#   replication keeps the online gather collective-free.  CPU-bench
+#   calibrated (bench_sharded_serving: the psum overhead only amortizes once
+#   per-device slices clear the cache-resident regime).
+PLANNER_THRESHOLDS = {
+    "default": {
+        "DENSE_JOIN_ELEMS": 1 << 14,
+        "MXU_SEGMENT_ADVANTAGE": 16.0,
+        "SHARD_PARTIAL_BYTES": 1 << 20,
+    },
+    # "tpu": {...}  ← ROADMAP "Planner calibration": re-measure there and
+    # fill this row in; every decision point below reads through
+    # planner_threshold(), so no other code changes.
+}
 
-# MXU matmul throughput advantage over scatter-based segment_sum: the matmul
-# aggregation is picked when its FLOP overcount (≈2·G) stays under this.
-# Calibrated on bench_predictive_queries (G=8,l=4 matmul 4× faster; G=8192
-# matmul 300× slower — any value in [13, ~1000) separates the two regimes).
-MXU_SEGMENT_ADVANTAGE = 16.0
+# Backward-compatible module-level aliases for the CPU-seeded defaults.
+DENSE_JOIN_ELEMS = PLANNER_THRESHOLDS["default"]["DENSE_JOIN_ELEMS"]
+MXU_SEGMENT_ADVANTAGE = PLANNER_THRESHOLDS["default"]["MXU_SEGMENT_ADVANTAGE"]
+SHARD_PARTIAL_BYTES = PLANNER_THRESHOLDS["default"]["SHARD_PARTIAL_BYTES"]
+
+
+def planner_threshold(name: str, platform: Optional[str] = None):
+    """The calibrated threshold ``name`` for ``platform``.
+
+    ``platform`` defaults to ``jax.default_backend()``; platforms without a
+    calibration row fall back to the CPU-seeded ``"default"`` values.
+    """
+    defaults = PLANNER_THRESHOLDS["default"]
+    if name not in defaults:
+        raise KeyError(f"unknown planner threshold {name!r}; expected one "
+                       f"of {sorted(defaults)}")
+    if platform is None:
+        platform = jax.default_backend()
+    return PLANNER_THRESHOLDS.get(platform, defaults).get(
+        name, defaults[name])
+
 
 # fused_star_gather holds (J+1) lane-padded (1, l) row blocks in VMEM per
 # grid step; tree_predict additionally keeps the (k, p) feature-selection
@@ -43,13 +83,6 @@ MXU_SEGMENT_ADVANTAGE = 16.0
 # refuse pathological widths rather than to pack VMEM tightly.
 SERVE_KERNEL_MAX_WIDTH = 8192
 SERVE_KERNEL_MAX_NODES = 16384
-
-# Below this size a prefused partial is replicated rather than row-sharded:
-# the partial fits every device comfortably and replication keeps the online
-# gather collective-free.  CPU-bench calibrated (bench_sharded_serving: the
-# psum overhead only amortizes once per-device slices clear the cache-resident
-# regime); re-measure on TPU alongside MXU_SEGMENT_ADVANTAGE.
-SHARD_PARTIAL_BYTES = 1 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,16 +109,19 @@ class QueryPlan:
 
 def plan_partition_spec(mesh, shape: Sequence[int], *, itemsize: int = 4,
                         axis: str = "model",
-                        threshold: int = SHARD_PARTIAL_BYTES
+                        threshold: Optional[int] = None
                         ) -> Tuple[P, str]:
     """Placement for one quasi-static row table: replicate or row-shard.
 
     Small tables replicate (the online gather stays collective-free); tables
-    past ``threshold`` bytes row-shard over the mesh's ``axis`` — through
+    past ``threshold`` bytes (default: the backend-keyed
+    ``SHARD_PARTIAL_BYTES``) row-shard over the mesh's ``axis`` — through
     ``safe_spec``, so a row count that doesn't divide the axis degrades to
     replication instead of failing (the 15-heads-on-16-way rule, applied to
     prefused partials).  Returns ``(spec, reason)``.
     """
+    if threshold is None:
+        threshold = planner_threshold("SHARD_PARTIAL_BYTES")
     replicated = P(*([None] * len(shape)))
     if mesh is None:
         return replicated, "no mesh: replicate"
@@ -104,7 +140,7 @@ def plan_partition_spec(mesh, shape: Sequence[int], *, itemsize: int = 4,
 
 def plan_placements(mesh, shapes: Sequence[Sequence[int]], *,
                     itemsize: int = 4, axis: str = "model",
-                    threshold: int = SHARD_PARTIAL_BYTES
+                    threshold: Optional[int] = None
                     ) -> Tuple[Tuple[P, ...], str]:
     """Per-arm placement over the arms' row-table shapes.
 
@@ -133,11 +169,9 @@ def place_tables(mesh, tables, plan: "QueryPlan", *, axis: str = "model",
     and the plan's ``partition_specs``/reason updated to match what
     executes.
     """
-    threshold = (SHARD_PARTIAL_BYTES if threshold_bytes is None
-                 else threshold_bytes)
     specs, place = plan_placements(
         mesh, [t.shape for t in tables], itemsize=tables[0].dtype.itemsize,
-        axis=axis, threshold=threshold)
+        axis=axis, threshold=threshold_bytes)
     plan = dataclasses.replace(plan, partition_specs=specs,
                                reason=plan.reason + "; " + place)
     return specs, plan
@@ -226,36 +260,57 @@ def effective_serve_backend(plan: "QueryPlan", serve_backend: str,
     return resolve_serve_backend(serve_backend, backend, model)
 
 
-def plan_aggregation(online_rows: float, num_groups: int,
-                     out_width: int) -> AggDecision:
-    """Fig. 4 matmul vs segment-sum for Σ values per group."""
+def plan_aggregation(online_rows: float, num_groups: int, out_width: int,
+                     ops: Sequence[str] = ("sum",),
+                     platform: Optional[str] = None) -> AggDecision:
+    """Fig. 4 matmul vs segment-sum, costed over the whole aggregate set.
+
+    Multi-aggregate queries share work: every ``mean``/``count`` aggregate
+    reuses one count reduction (a width-1 one-hot matmul or ones
+    segment-sum), and each ``sum``/``mean`` needs one value reduction of
+    ``out_width``.  ``min``/``max`` have no one-hot matmul form (Fig. 4 is
+    additive) and lower through segment ops on *both* backends, so their
+    cost is shared and only the matmul-able reductions decide the backend.
+    """
     i = max(online_rows, 1.0)
     g = max(num_groups, 1)
     l = max(out_width, 1)
-    matmul = 2.0 * i * g * l          # onehot(gid)ᵀ @ values
-    segment = i * l + i               # scatter-add + id gather
-    if matmul <= segment * MXU_SEGMENT_ADVANTAGE:
-        return AggDecision("matmul", matmul, segment,
+    ops = tuple(ops) or ("sum",)
+    n_sums = sum(1 for op in ops if op in ("sum", "mean"))
+    needs_count = any(op in ("count", "mean") for op in ops)
+    n_minmax = sum(1 for op in ops if op in ("min", "max"))
+    # onehot(gid)ᵀ @ values per sum-like reduction (+ a width-1 count).
+    matmul = 2.0 * i * g * l * n_sums + (2.0 * i * g if needs_count else 0.0)
+    # scatter-add + id gather per reduction.
+    segment = (i * l + i) * n_sums + (2.0 * i if needs_count else 0.0)
+    shared = (i * l + i) * n_minmax            # segment min/max either way
+    advantage = planner_threshold("MXU_SEGMENT_ADVANTAGE", platform)
+    if matmul > 0 and matmul <= segment * advantage:
+        return AggDecision("matmul", matmul + shared, segment + shared,
                            f"G={g} small: MXU matmul beats scatter")
-    return AggDecision("segment", matmul, segment,
-                       f"G={g}: segment_sum ({segment:.0f} flops) beats "
-                       f"one-hot matmul ({matmul:.0f} flops)")
+    return AggDecision("segment", matmul + shared, segment + shared,
+                       f"G={g}: segment ops ({segment + shared:.0f} flops) "
+                       f"beat one-hot matmul ({matmul + shared:.0f} flops)")
 
 
 def plan_query(model: Optional[Model], fact_rows: int,
                dim_rows: Sequence[int], *, selectivity: float = 1.0,
                num_groups: int = 0, out_width: int = 1,
+               agg_ops: Sequence[str] = ("sum",),
                batches_per_update: float = 1000.0,
                memory_budget_bytes: Optional[int] = None,
                platform: Optional[str] = None, mesh=None,
                shard_axis: str = "model",
-               shard_threshold_bytes: int = SHARD_PARTIAL_BYTES) -> QueryPlan:
+               shard_threshold_bytes: Optional[int] = None) -> QueryPlan:
     """Pick fused/nonfused + join/agg/serving backends for one query.
 
-    With a ``mesh``, the plan also decides per-arm *placement* of the
-    quasi-static row tables (``partition_specs``): each arm's prefused
-    partial is sized as (dim rows × out_width) fp32 and either replicated or
-    row-sharded over ``shard_axis`` (see :func:`plan_partition_spec`).
+    ``agg_ops`` is the query's combined aggregate set (one op per
+    aggregate); the aggregation backend is costed over all of them at once
+    (:func:`plan_aggregation`).  With a ``mesh``, the plan also decides
+    per-arm *placement* of the quasi-static row tables
+    (``partition_specs``): each arm's prefused partial is sized as
+    (dim rows × out_width) fp32 and either replicated or row-sharded over
+    ``shard_axis`` (see :func:`plan_partition_spec`).
     """
     sel = min(max(float(selectivity), 0.0), 1.0)
     online_rows = float(fact_rows) * sel
@@ -270,11 +325,13 @@ def plan_query(model: Optional[Model], fact_rows: int,
         backend = "fused" if fusion.fuse else "nonfused"
 
     dense_elems = float(fact_rows) * float(max(dim_rows, default=1))
-    join_backend = "matmul" if dense_elems <= DENSE_JOIN_ELEMS else "gather"
+    join_backend = ("matmul" if dense_elems <= planner_threshold(
+        "DENSE_JOIN_ELEMS", platform) else "gather")
 
     agg = None
     if num_groups > 0:
-        agg = plan_aggregation(online_rows, num_groups, out_width)
+        agg = plan_aggregation(online_rows, num_groups, out_width,
+                               ops=agg_ops, platform=platform)
 
     serve_backend, serve_reason = plan_serving_backend(
         model, len(dim_rows), backend=backend, platform=platform)

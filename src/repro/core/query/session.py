@@ -1,0 +1,424 @@
+"""``Session``: the single fluent entry point for predictive queries.
+
+The paper's thesis is that the *whole* pipeline — σ ⋈ model γ — is one
+linear-algebra program; this module makes it one API.  A :class:`Session`
+binds a catalog (and optionally a device mesh) once, and a fluent immutable
+:class:`QueryBuilder` describes the pipeline declaratively::
+
+    from repro.core.query import Session, PREDICTION
+
+    sess = Session(catalog, mesh=None)
+    q = (sess.query("lineorder")
+         .join("date", on=("lo_orderdate", "datekey"),
+               features=["d_month"], where=[("d_year", "==", 1993)])
+         .where(("lo_discount", "between", (1, 3)))
+         .predict(model)
+         .group_by(("date", "d_year", 8, 1992))
+         .agg(revenue="sum(lo_revenue)", preds=("mean", PREDICTION),
+              n="count"))
+
+    q.run()                      # whole-query aggregates (one fused program)
+    q.rows(batch)                # row predictions (CompiledQuery.predict_rows)
+    q.serve(buckets=(8, 64))     # bucketed ServingRuntime (compile_serving)
+
+Every builder step returns a *new* builder (frozen dataclass), so partial
+pipelines are shareable and cacheable.  The builder lowers to the existing
+:class:`~repro.core.query.ir.PredictiveQuery` IR — the stable compiler
+contract — via :meth:`QueryBuilder.build`; mesh placement, sharding
+thresholds, kernel interpret mode, and plan-cache keys are handled by the
+session instead of being threaded through every call site.
+
+Plan caching is *structural*: :func:`query_key` hashes the IR by content
+(models by array bytes), so a builder-constructed query and an equivalent
+hand-built ``PredictiveQuery`` — or two builds of the same registry entry —
+share one compiled plan and never re-trace.  Plans compiled under an outer
+``jit`` hold tracers and are never cached (same rule as the old per-dataset
+caches).
+
+Module-level :func:`query` starts a *detached* builder (no session) for
+data-independent IR registries: ``.build()`` works, the execution verbs
+require a session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fusion.operators import DecisionTreeGEMM, LinearOperator
+from ..laq.selection import Pred
+from ..laq.table import Table
+from .compile import CompiledQuery, compile_query
+from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
+                 GroupKey, Model, PredictiveQuery)
+from .serving import DEFAULT_BUCKETS, ServingRuntime, compile_serving
+
+_SEXPR_OPS = ("col", "add", "sub", "mul", "div")
+_AGG_CALL = re.compile(r"^(sum|count|mean|min|max)\s*\(\s*(.*?)\s*\)$")
+
+
+# --------------------------------------------------------------------------
+# Structural plan-cache keys
+# --------------------------------------------------------------------------
+def _array_key(a) -> tuple:
+    arr = np.asarray(a)
+    return (arr.shape, arr.dtype.str,
+            hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest())
+
+
+def model_key(model: Optional[Model]):
+    """Content key for a model head; falls back to identity under a trace."""
+    if model is None:
+        return None
+    try:
+        if isinstance(model, LinearOperator):
+            return ("linear", _array_key(model.L))
+        if isinstance(model, DecisionTreeGEMM):
+            return ("tree", _array_key(model.F), _array_key(model.v),
+                    _array_key(model.H), _array_key(model.h))
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        pass
+    return ("id", type(model).__name__, id(model))
+
+
+def query_key(q: PredictiveQuery) -> tuple:
+    """Structural hash key of a ``PredictiveQuery``.
+
+    Two structurally identical queries share one key even when they are
+    distinct objects holding distinct (but value-equal) model arrays — the
+    property the session's plan cache relies on so registry builders that
+    reconstruct their IR per call still hit the cache.
+    """
+    return ("pq", q.fact, q.arms, q.fact_preds, model_key(q.model),
+            q.group_keys, q.aggregates, q.num_groups)
+
+
+def _opts_key(opts: Mapping) -> tuple:
+    """Hashable cache key for compile options (meshes keyed by identity)."""
+    return tuple(sorted(
+        (k, id(v) if k == "mesh" else v) for k, v in opts.items()))
+
+
+# --------------------------------------------------------------------------
+# Spec parsing: preds / group keys / aggregates
+# --------------------------------------------------------------------------
+def _as_pred(spec) -> Pred:
+    if isinstance(spec, Pred):
+        return spec
+    if isinstance(spec, tuple) and len(spec) == 3:
+        return Pred(*spec)
+    raise ValueError(f"unparseable predicate {spec!r}: expected a Pred or a "
+                     "(col, op, value) tuple")
+
+
+def _as_group_key(spec) -> GroupKey:
+    if isinstance(spec, GroupKey):
+        return spec
+    if isinstance(spec, tuple) and len(spec) in (3, 4):
+        return GroupKey(*spec)
+    raise ValueError(
+        f"unparseable group key {spec!r}: expected a GroupKey or a "
+        "(table, col, bound[, offset]) tuple ('fact' names the fact table)")
+
+
+def _as_aggregate(name: str, spec) -> Aggregate:
+    """One ``.agg(name=spec)`` entry → an :class:`Aggregate`.
+
+    Accepted specs::
+
+        "count"                      # COUNT(*) of surviving rows
+        "sum(lo_revenue)"            # op(column) call syntax
+        "mean(lo_quantity)"
+        "lo_revenue"                 # bare column → sum
+        ("mean", PREDICTION)         # (op, value) — value may be a column,
+        ("sum", ("mul", "a", "b"))   #   PREDICTION, or an s-expression
+        ("sub", "a", "b")            # bare s-expression value → sum
+        Aggregate(...)               # passthrough, renamed to the kwarg
+    """
+    if isinstance(spec, Aggregate):
+        return dataclasses.replace(spec, name=name)
+    if isinstance(spec, tuple):
+        if len(spec) == 2 and spec[0] in AGG_OPS:
+            op, value = spec
+            if op == "count":
+                value = COUNT_STAR
+            return Aggregate(value, op, name)
+        if spec and spec[0] in _SEXPR_OPS:
+            return Aggregate(spec, "sum", name)
+        raise ValueError(
+            f"unparseable aggregate {name}={spec!r}: tuple specs are "
+            f"(op, value) with op in {list(AGG_OPS)} or an s-expression "
+            f"starting with one of {list(_SEXPR_OPS)}")
+    if isinstance(spec, str):
+        s = spec.strip()
+        if s in ("count", "count(*)", "count()"):
+            return Aggregate(COUNT_STAR, "count", name)
+        m = _AGG_CALL.match(s)
+        if m:
+            op, col = m.groups()
+            if op == "count":
+                return Aggregate(COUNT_STAR, "count", name)
+            if not col:
+                raise ValueError(
+                    f"aggregate {name}={spec!r}: {op}() needs a column")
+            return Aggregate(col, op, name)
+        return Aggregate(s, "sum", name)
+    raise ValueError(f"unparseable aggregate {name}={spec!r}")
+
+
+# --------------------------------------------------------------------------
+# The fluent builder
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QueryBuilder:
+    """An immutable, fluent description of one predictive pipeline.
+
+    Every method returns a new builder; :meth:`build` lowers to the
+    ``PredictiveQuery`` IR.  The execution verbs (:meth:`run`,
+    :meth:`rows`, :meth:`serve`, :meth:`compile`) go through the bound
+    session's plan cache; a detached builder (module-level :func:`query`)
+    only supports :meth:`build`.
+    """
+
+    session: Optional["Session"]
+    fact: str
+    arms: Tuple[ArmSpec, ...] = ()
+    fact_preds: Tuple[Pred, ...] = ()
+    model: Optional[Model] = None
+    group_keys: Tuple[GroupKey, ...] = ()
+    aggregates: Tuple[Aggregate, ...] = ()
+    num_groups: Union[int, str] = 8192
+
+    # -- pipeline steps ------------------------------------------------------
+    def join(self, table: str, *, on: Tuple[str, str],
+             features: Sequence[str] = (),
+             where: Sequence = ()) -> "QueryBuilder":
+        """Add one star arm: ``fact.<fk> = <table>.<pk>``.
+
+        ``on=(fk_col, pk_col)``; ``features`` are dimension columns fed to
+        the model (in join order); ``where`` holds dimension-side predicates
+        (``Pred`` or ``(col, op, value)``), pushed below the join into the
+        matching matrix's validity.
+        """
+        if not (isinstance(on, tuple) and len(on) == 2):
+            raise ValueError(f"join on={on!r}: expected (fk_col, pk_col)")
+        fk, pk = on
+        arm = ArmSpec(table, fk, pk, tuple(features),
+                      tuple(_as_pred(p) for p in where))
+        if self.session is not None:
+            self.session._check_arm(self.fact, arm)
+        return dataclasses.replace(self, arms=self.arms + (arm,))
+
+    def where(self, *preds) -> "QueryBuilder":
+        """AND fact-side predicates (``Pred`` or ``(col, op, value)``)."""
+        new = tuple(_as_pred(p) for p in preds)
+        return dataclasses.replace(self,
+                                   fact_preds=self.fact_preds + new)
+
+    def predict(self, model: Model) -> "QueryBuilder":
+        """Attach the model head (LinearOperator / DecisionTreeGEMM)."""
+        return dataclasses.replace(self, model=model)
+
+    def group_by(self, *keys,
+                 num_groups: Optional[Union[int, str]] = None
+                 ) -> "QueryBuilder":
+        """Add GROUP BY keys (``GroupKey`` or ``(table, col, bound[, offset])``).
+
+        ``num_groups`` sizes the dense group dimension; ``"auto"`` defers to
+        the compiler, which measures the live code domain offline.
+        """
+        new = tuple(_as_group_key(k) for k in keys)
+        kw: Dict = {"group_keys": self.group_keys + new}
+        if num_groups is not None:
+            kw["num_groups"] = num_groups
+        return dataclasses.replace(self, **kw)
+
+    def agg(self, **named) -> "QueryBuilder":
+        """Add named aggregates; each kwarg is one result column.
+
+        See :func:`_as_aggregate` for the spec grammar — e.g.
+        ``.agg(revenue="sum(lo_revenue)", preds=("mean", PREDICTION),
+        n="count")``.  One compiled program computes all of them over the
+        shared join/model work.
+        """
+        new = tuple(_as_aggregate(n, s) for n, s in named.items())
+        return dataclasses.replace(self,
+                                   aggregates=self.aggregates + new)
+
+    # -- lowering ------------------------------------------------------------
+    def build(self) -> PredictiveQuery:
+        """Lower to the ``PredictiveQuery`` IR (the compiler contract)."""
+        kw = dict(fact=self.fact, arms=self.arms,
+                  fact_preds=self.fact_preds, model=self.model,
+                  group_keys=self.group_keys, num_groups=self.num_groups)
+        if self.aggregates:
+            kw["aggregates"] = self.aggregates
+        elif self.model is not None:
+            # No explicit aggregates on a model query: aggregate the
+            # prediction matrix (matches query_from_star).
+            kw["aggregates"] = (Aggregate(PREDICTION, "sum", "prediction"),)
+        return PredictiveQuery(**kw)
+
+    # -- execution (through the session) -------------------------------------
+    def _bound(self) -> "Session":
+        if self.session is None:
+            raise ValueError(
+                "detached builder: module-level query() only builds IR — "
+                "use Session.query()/Session.bind() for run/rows/serve")
+        return self.session
+
+    def compile(self, **overrides) -> CompiledQuery:
+        """The (cached) compiled plan; overrides are compile_query kwargs."""
+        return self._bound().compile(self.build(), **overrides)
+
+    def run(self, **overrides) -> Dict[str, jnp.ndarray]:
+        """Execute the whole-query aggregate program.
+
+        Returns the named aggregates (+ ``"groups"``/``"rows"``).
+        """
+        return self.compile(**overrides).run()
+
+    def rows(self, batch, **overrides) -> jnp.ndarray:
+        """Row predictions for a batch of fact row ids (serving-by-row)."""
+        return self.compile(**overrides).predict_rows(
+            jnp.asarray(batch, jnp.int32))
+
+    def serve(self, *, buckets: Sequence[int] = DEFAULT_BUCKETS,
+              **overrides) -> ServingRuntime:
+        """The (cached) bucketed dynamic-batch serving runtime."""
+        return self._bound().serving(self.build(), buckets=buckets,
+                                     **overrides)
+
+    def explain(self, **overrides) -> str:
+        """The compiled plan's decision trail (one line per choice)."""
+        return self.compile(**overrides).plan.reason
+
+
+# --------------------------------------------------------------------------
+# The session
+# --------------------------------------------------------------------------
+class Session:
+    """A catalog + execution context with one structural plan cache.
+
+    Holds everything the three execution modes share — the catalog, the
+    (optional) device mesh with its shard axis/threshold, kernel interpret
+    mode — so call sites describe *queries*, not plumbing.  Compiled plans
+    and serving runtimes are cached by :func:`query_key` + options;
+    identical pipelines never re-trace, whether they were built fluently,
+    by hand, or re-built from a registry.
+    """
+
+    def __init__(self, catalog: Mapping[str, Table], *, mesh=None,
+                 shard_axis: str = "model",
+                 shard_threshold_bytes: Optional[int] = None,
+                 interpret: bool = False):
+        self.catalog: Dict[str, Table] = dict(catalog)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.shard_threshold_bytes = shard_threshold_bytes
+        self.interpret = interpret
+        self._plans: Dict[tuple, CompiledQuery] = {}
+        self._runtimes: Dict[tuple, ServingRuntime] = {}
+
+    # -- builders ------------------------------------------------------------
+    def query(self, fact: str) -> QueryBuilder:
+        """Start a fluent pipeline over catalog table ``fact``."""
+        if fact not in self.catalog:
+            raise KeyError(f"unknown fact table {fact!r}; catalog has "
+                           f"{sorted(self.catalog)}")
+        return QueryBuilder(session=self, fact=fact)
+
+    def bind(self, q: PredictiveQuery) -> QueryBuilder:
+        """Wrap an existing IR in a builder bound to this session."""
+        return QueryBuilder(session=self, fact=q.fact, arms=q.arms,
+                            fact_preds=q.fact_preds, model=q.model,
+                            group_keys=q.group_keys,
+                            aggregates=q.aggregates,
+                            num_groups=q.num_groups)
+
+    def _check_arm(self, fact: str, arm: ArmSpec):
+        """Early, named errors for a new join arm (builder ergonomics)."""
+        if arm.table not in self.catalog:
+            raise KeyError(f"unknown dimension table {arm.table!r}; "
+                           f"catalog has {sorted(self.catalog)}")
+        dim = self.catalog[arm.table]
+        if arm.pk_col not in dim.keys:
+            raise ValueError(
+                f"join on {arm.table!r}: {arm.pk_col!r} is not a key column "
+                f"(keys: {sorted(dim.keys)})")
+        fact_t = self.catalog.get(fact)
+        if fact_t is not None and arm.fk_col not in fact_t.keys:
+            raise ValueError(
+                f"join on {arm.table!r}: {arm.fk_col!r} is not a key column "
+                f"of {fact!r} (keys: {sorted(fact_t.keys)})")
+        missing = [c for c in arm.feature_cols if c not in dim.columns]
+        if missing:
+            raise ValueError(
+                f"join on {arm.table!r}: unknown feature columns {missing} "
+                f"(columns: {list(dim.columns)})")
+
+    # -- cached compilation --------------------------------------------------
+    def _mesh_kwargs(self) -> Dict:
+        if self.mesh is None:
+            return {}
+        return dict(mesh=self.mesh, shard_axis=self.shard_axis,
+                    shard_threshold_bytes=self.shard_threshold_bytes)
+
+    def compile(self, q: PredictiveQuery, **overrides) -> CompiledQuery:
+        """The compiled plan for ``q`` (structurally cached).
+
+        ``overrides`` are :func:`compile_query` keyword arguments
+        (``backend``, ``agg_backend``, ...) and participate in the cache
+        key, so requesting a different backend compiles a sibling plan
+        instead of returning the first one.
+        """
+        opts = {"interpret": self.interpret, **self._mesh_kwargs(),
+                **overrides}
+        key = (query_key(q), _opts_key(opts))
+        hit = self._plans.get(key)
+        if hit is not None:
+            return hit
+        compiled = compile_query(self.catalog, q, **opts)
+        if not compiled.is_traced:
+            self._plans[key] = compiled   # traced plans hold tracers
+        return compiled
+
+    def serving(self, q: PredictiveQuery, *,
+                buckets: Sequence[int] = DEFAULT_BUCKETS,
+                **overrides) -> ServingRuntime:
+        """The dynamic-batch serving runtime for ``q`` (cached)."""
+        opts = {"interpret": self.interpret, **self._mesh_kwargs(),
+                **overrides}
+        key = ("serve", query_key(q), tuple(buckets), _opts_key(opts))
+        hit = self._runtimes.get(key)
+        if hit is None:
+            hit = compile_serving(self.catalog, q, buckets=buckets, **opts)
+            self._runtimes[key] = hit
+        return hit
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def num_plans(self) -> int:
+        """Distinct compiled aggregate plans held by the cache."""
+        return len(self._plans)
+
+    @property
+    def num_runtimes(self) -> int:
+        """Distinct serving runtimes held by the cache."""
+        return len(self._runtimes)
+
+
+def query(fact: str) -> QueryBuilder:
+    """A detached fluent builder (IR construction only, no session).
+
+    For data-independent registries: ``query("lineorder").join(...).build()``
+    produces the same IR the equivalent ``Session.query`` chain would, and
+    any session later compiles it with full cache sharing.
+    """
+    return QueryBuilder(session=None, fact=fact)

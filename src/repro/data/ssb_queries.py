@@ -1,17 +1,22 @@
 """The 13 SSB queries (Q1.1–Q4.3) + predict-then-aggregate variants, all
-expressed as ``PredictiveQuery`` IR and executed through the query compiler.
+expressed through the fluent ``Session`` query-builder API and lowered to
+``PredictiveQuery`` IR for the query compiler.
 
 Each query returns (group_codes, aggregates, meta).  Query group structure
 (paper Table 2): QG1 = 1 join + scalar SUM; QG2/3 = 3 joins + group-by-sum +
 sort; QG4 = 4 joins + group-by-sum + sort.  The compiler lowers every query
 onto the factored MM-Join (paper §3.1) with selection folded into the join
-validity, and picks the aggregation backend (Fig. 4 matmul vs segment-sum)
+validity, and picks the aggregation backend (Fig. 4 matmul vs segment ops)
 per query — the paper-faithful dense path stays available as the reference
 backend exercised by tests and the mmjoin benchmarks.
 
-``QUERY_IR`` maps each name to a zero-arg builder of the declarative IR
-(data-independent); ``QUERIES`` keeps the legacy callable(SSBData) → results
-interface on top of a per-dataset compiled-plan cache.
+``QUERY_IR`` maps each name to a zero-arg builder of the declarative IR —
+constructed with the detached fluent builder (``repro.core.query.query``),
+so the registry is the reference migration onto the Session surface.
+``QUERIES`` keeps the legacy callable(SSBData) → results interface on top
+of a per-dataset :class:`~repro.core.query.Session` (``ssb_session``),
+whose structural plan cache replaces the old hand-rolled one;
+``compiled_plan`` remains as a thin shim over ``Session.compile``.
 
 The P* queries are the paper's §3 predictive pipelines on SSB join shapes:
 a model head (``LinearOperator`` / ``DecisionTreeGEMM``) over dimension
@@ -26,9 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fusion import LinearOperator, random_tree
-from repro.core.laq import Pred, Table
-from repro.core.query import (PREDICTION, Aggregate, ArmSpec, GroupKey,
-                              PredictiveQuery, compile_query)
+from repro.core.laq import Table
+from repro.core.query import (PREDICTION, GroupKey, PredictiveQuery, Session,
+                              query)
 from .ssb import SSBData, N_BRANDS, N_NATIONS, N_REGIONS
 
 # Registries: name → zero-arg IR builder, and name → callable(SSBData).
@@ -36,8 +41,9 @@ QUERY_IR: Dict[str, Callable[[], PredictiveQuery]] = {}
 QUERIES: Dict[str, Callable] = {}
 PREDICTIVE_QUERIES: Dict[str, Callable] = {}
 
-#: compiled-plan cache: SSBData → {query name → CompiledQuery}
-_PLANS: "weakref.WeakKeyDictionary[SSBData, dict]" = weakref.WeakKeyDictionary()
+#: per-dataset Session cache: SSBData → Session (structural plan cache)
+_SESSIONS: "weakref.WeakKeyDictionary[SSBData, Session]" = (
+    weakref.WeakKeyDictionary())
 
 
 def ssb_catalog(data: SSBData) -> Dict[str, Table]:
@@ -46,20 +52,28 @@ def ssb_catalog(data: SSBData) -> Dict[str, Table]:
             "date": data.date}
 
 
-def compiled_plan(name: str, data: SSBData, **kwargs):
-    """The (cached) compiled plan for a registered query on ``data``.
+def ssb_session(data: SSBData) -> Session:
+    """The (cached) Session over ``data``'s catalog.
 
-    The cache key includes the compile options, so requesting a different
-    backend recompiles instead of returning the first call's plan.
+    One Session per dataset means one structural plan cache: every
+    registered query — and any ad-hoc fluent pipeline over the same
+    catalog — shares compiled plans across rebuilds of the IR.
     """
-    plans = _PLANS.setdefault(data, {})
-    key = (name, tuple(sorted(kwargs.items())))
-    if key not in plans:
-        plan = compile_query(ssb_catalog(data), QUERY_IR[name](), **kwargs)
-        if plan.is_traced:
-            return plan   # built under an outer jit: holds tracers, no cache
-        plans[key] = plan
-    return plans[key]
+    sess = _SESSIONS.get(data)
+    if sess is None:
+        sess = Session(ssb_catalog(data))
+        _SESSIONS[data] = sess
+    return sess
+
+
+def compiled_plan(name: str, data: SSBData, **kwargs):
+    """Thin shim over ``Session.compile`` (the old entry point).
+
+    The session's cache key includes the compile options, so requesting a
+    different backend recompiles instead of returning the first call's
+    plan; plans built under an outer trace are never cached.
+    """
+    return ssb_session(data).compile(QUERY_IR[name](), **kwargs)
 
 
 def _register(name, registry=None):
@@ -67,7 +81,7 @@ def _register(name, registry=None):
         QUERY_IR[name] = builder
 
         def runner(data: SSBData):
-            return compiled_plan(name, data).run()
+            return ssb_session(data).bind(builder()).run()
 
         QUERIES[name] = runner
         if registry is not None:
@@ -76,91 +90,87 @@ def _register(name, registry=None):
     return deco
 
 
-_REVENUE = Aggregate(("mul", "lo_extendedprice", "lo_discount"), "sum",
-                     "revenue")
+_REVENUE = ("sum", ("mul", "lo_extendedprice", "lo_discount"))
 _YEAR = GroupKey("date", "d_year", 8, offset=1992)
 
 
 # --------------------------------------------------------- query group 1 ---
 def _q1(date_preds, lo_preds):
-    return PredictiveQuery(
-        fact="lineorder",
-        arms=(ArmSpec("date", "lo_orderdate", "datekey",
-                      preds=tuple(date_preds)),),
-        fact_preds=tuple(lo_preds),
-        aggregates=(_REVENUE,))
+    return (query("lineorder")
+            .join("date", on=("lo_orderdate", "datekey"), where=date_preds)
+            .where(*lo_preds)
+            .agg(revenue=_REVENUE)
+            .build())
 
 
 @_register("Q1.1")
 def q11():
-    return _q1([Pred("d_year", "==", 1993)],
-               [Pred("lo_discount", "between", (1, 3)),
-                Pred("lo_quantity", "<", 25)])
+    return _q1([("d_year", "==", 1993)],
+               [("lo_discount", "between", (1, 3)),
+                ("lo_quantity", "<", 25)])
 
 
 @_register("Q1.2")
 def q12():
-    return _q1([Pred("d_yearmonthnum", "==", 199401)],
-               [Pred("lo_discount", "between", (4, 6)),
-                Pred("lo_quantity", "between", (26, 35))])
+    return _q1([("d_yearmonthnum", "==", 199401)],
+               [("lo_discount", "between", (4, 6)),
+                ("lo_quantity", "between", (26, 35))])
 
 
 @_register("Q1.3")
 def q13():
-    return _q1([Pred("d_weeknuminyear", "==", 6), Pred("d_year", "==", 1994)],
-               [Pred("lo_discount", "between", (5, 7)),
-                Pred("lo_quantity", "between", (26, 35))])
+    return _q1([("d_weeknuminyear", "==", 6), ("d_year", "==", 1994)],
+               [("lo_discount", "between", (5, 7)),
+                ("lo_quantity", "between", (26, 35))])
 
 
 # --------------------------------------------------------- query group 2 ---
 def _q2(part_preds, supp_preds):
-    return PredictiveQuery(
-        fact="lineorder",
-        arms=(ArmSpec("part", "lo_partkey", "partkey",
-                      preds=tuple(part_preds)),
-              ArmSpec("supplier", "lo_suppkey", "suppkey",
-                      preds=tuple(supp_preds)),
-              ArmSpec("date", "lo_orderdate", "datekey")),
-        group_keys=(_YEAR, GroupKey("part", "p_brand1", N_BRANDS)),
-        aggregates=(Aggregate("lo_revenue", "sum", "revenue"),))
+    return (query("lineorder")
+            .join("part", on=("lo_partkey", "partkey"), where=part_preds)
+            .join("supplier", on=("lo_suppkey", "suppkey"),
+                  where=supp_preds)
+            .join("date", on=("lo_orderdate", "datekey"))
+            .group_by(_YEAR, ("part", "p_brand1", N_BRANDS))
+            .agg(revenue="sum(lo_revenue)")
+            .build())
 
 
 @_register("Q2.1")
 def q21():
-    return _q2([Pred("p_category", "==", 6)], [Pred("s_region", "==", 1)])
+    return _q2([("p_category", "==", 6)], [("s_region", "==", 1)])
 
 
 @_register("Q2.2")
 def q22():
-    return _q2([Pred("p_brand1", "between", (253, 260))],
-               [Pred("s_region", "==", 2)])
+    return _q2([("p_brand1", "between", (253, 260))],
+               [("s_region", "==", 2)])
 
 
 @_register("Q2.3")
 def q23():
-    return _q2([Pred("p_brand1", "==", 260)], [Pred("s_region", "==", 3)])
+    return _q2([("p_brand1", "==", 260)], [("s_region", "==", 3)])
 
 
 # --------------------------------------------------------- query group 3 ---
 def _q3(cust_preds, supp_preds, date_preds, group_keys):
-    return PredictiveQuery(
-        fact="lineorder",
-        arms=(ArmSpec("customer", "lo_custkey", "custkey",
-                      preds=tuple(cust_preds)),
-              ArmSpec("supplier", "lo_suppkey", "suppkey",
-                      preds=tuple(supp_preds)),
-              ArmSpec("date", "lo_orderdate", "datekey",
-                      preds=tuple(date_preds))),
-        group_keys=tuple(group_keys),
-        aggregates=(Aggregate("lo_revenue", "sum", "revenue"),))
+    return (query("lineorder")
+            .join("customer", on=("lo_custkey", "custkey"),
+                  where=cust_preds)
+            .join("supplier", on=("lo_suppkey", "suppkey"),
+                  where=supp_preds)
+            .join("date", on=("lo_orderdate", "datekey"), where=date_preds)
+            .group_by(*group_keys)
+            .agg(revenue="sum(lo_revenue)")
+            .build())
 
 
-_YEARS_9297 = [Pred("d_year", "between", (1992, 1997))]
+_YEARS_9297 = [("d_year", "between", (1992, 1997))]
 
 
 @_register("Q3.1")
 def q31():
-    return _q3([Pred("c_region", "==", 2)], [Pred("s_region", "==", 2)],
+    return _q3([("c_region", "==", 2)], [("s_region", "==", 2)],
                _YEARS_9297,
                [GroupKey("customer", "c_nation", N_NATIONS),
                 GroupKey("supplier", "s_nation", N_NATIONS), _YEAR])
@@ -168,70 +178,77 @@ def q31():
 
 @_register("Q3.2")
 def q32():
-    return _q3([Pred("c_nation", "==", 14)], [Pred("s_nation", "==", 14)],
+    return _q3([("c_nation", "==", 14)], [("s_nation", "==", 14)],
                _YEARS_9297,
-               [GroupKey("customer", "c_city", 250),
-                GroupKey("supplier", "s_city", 250), _YEAR])
+               [("customer", "c_city", 250),
+                ("supplier", "s_city", 250), _YEAR])
 
 
 @_register("Q3.3")
 def q33():
-    return _q3([Pred("c_city", "in", (141, 145))],
-               [Pred("s_city", "in", (141, 145))],
+    return _q3([("c_city", "in", (141, 145))],
+               [("s_city", "in", (141, 145))],
                _YEARS_9297,
-               [GroupKey("customer", "c_city", 250),
-                GroupKey("supplier", "s_city", 250), _YEAR])
+               [("customer", "c_city", 250),
+                ("supplier", "s_city", 250), _YEAR])
 
 
 # --------------------------------------------------------- query group 4 ---
 def _q4(cust_preds, supp_preds, part_preds, group_keys):
-    return PredictiveQuery(
-        fact="lineorder",
-        arms=(ArmSpec("customer", "lo_custkey", "custkey",
-                      preds=tuple(cust_preds)),
-              ArmSpec("supplier", "lo_suppkey", "suppkey",
-                      preds=tuple(supp_preds)),
-              ArmSpec("part", "lo_partkey", "partkey",
-                      preds=tuple(part_preds)),
-              ArmSpec("date", "lo_orderdate", "datekey")),
-        group_keys=tuple(group_keys),
-        aggregates=(Aggregate(("sub", "lo_revenue", "lo_supplycost"),
-                              "sum", "profit"),))
+    return (query("lineorder")
+            .join("customer", on=("lo_custkey", "custkey"),
+                  where=cust_preds)
+            .join("supplier", on=("lo_suppkey", "suppkey"),
+                  where=supp_preds)
+            .join("part", on=("lo_partkey", "partkey"), where=part_preds)
+            .join("date", on=("lo_orderdate", "datekey"))
+            .group_by(*group_keys)
+            .agg(profit=("sum", ("sub", "lo_revenue", "lo_supplycost")))
+            .build())
 
 
 @_register("Q4.1")
 def q41():
-    return _q4([Pred("c_region", "==", 1)], [Pred("s_region", "==", 1)],
-               [Pred("p_mfgr", "in", (0, 1))],
-               [_YEAR, GroupKey("customer", "c_nation", N_NATIONS)])
+    return _q4([("c_region", "==", 1)], [("s_region", "==", 1)],
+               [("p_mfgr", "in", (0, 1))],
+               [_YEAR, ("customer", "c_nation", N_NATIONS)])
 
 
 @_register("Q4.2")
 def q42():
-    return _q4([Pred("c_region", "==", 1)], [Pred("s_region", "==", 1)],
-               [Pred("p_mfgr", "in", (0, 1))],
-               [_YEAR, GroupKey("supplier", "s_nation", N_NATIONS),
-                GroupKey("part", "p_category", 25)])
+    return _q4([("c_region", "==", 1)], [("s_region", "==", 1)],
+               [("p_mfgr", "in", (0, 1))],
+               [_YEAR, ("supplier", "s_nation", N_NATIONS),
+                ("part", "p_category", 25)])
 
 
 @_register("Q4.3")
 def q43():
-    return _q4([Pred("c_region", "==", 1)], [Pred("s_nation", "==", 9)],
-               [Pred("p_category", "==", 8)],
-               [_YEAR, GroupKey("supplier", "s_city", 250),
-                GroupKey("part", "p_brand1", N_BRANDS)])
+    return _q4([("c_region", "==", 1)], [("s_nation", "==", 9)],
+               [("p_category", "==", 8)],
+               [_YEAR, ("supplier", "s_city", 250),
+                ("part", "p_brand1", N_BRANDS)])
 
 
 # ------------------------------------------ predict-then-aggregate (§3) ----
 # SSB join shapes with a fused model head: features come from dimension
 # tables, the model's linear prefix is pre-fused into them (Eq. 1/3), and the
-# prediction matrix is aggregated directly (Fig. 4 / segment-sum).
-_P_ARMS = (ArmSpec("part", "lo_partkey", "partkey", ("p_size", "p_category")),
-           ArmSpec("supplier", "lo_suppkey", "suppkey", ("s_city",)),
-           ArmSpec("date", "lo_orderdate", "datekey",
-                   ("d_month", "d_weeknuminyear")))
-_P_K = sum(len(a.feature_cols) for a in _P_ARMS)   # 6 features
-_PRED_SUM = (Aggregate(PREDICTION, "sum", "prediction"),)
+# prediction matrix is aggregated directly (Fig. 4 / segment ops).
+def _p_star(model, *, num_groups=8):
+    """The shared 3-arm P* shape: part/supplier/date features + a head."""
+    return (query("lineorder")
+            .join("part", on=("lo_partkey", "partkey"),
+                  features=("p_size", "p_category"))
+            .join("supplier", on=("lo_suppkey", "suppkey"),
+                  features=("s_city",))
+            .join("date", on=("lo_orderdate", "datekey"),
+                  features=("d_month", "d_weeknuminyear"))
+            .predict(model)
+            .group_by(_YEAR, num_groups=num_groups)
+            .agg(prediction=("sum", PREDICTION)))
+
+
+_P_K = 5   # feature width of the shared P* shape above (2 + 1 + 2)
 
 
 def _linear_head(k: int, l: int, seed: int = 0) -> LinearOperator:
@@ -247,45 +264,46 @@ def _register_predictive(name):
 @_register_predictive("P1.linear.year")
 def p1():
     """Linear scores over part/supplier/date features, grouped by year."""
-    return PredictiveQuery(
-        fact="lineorder", arms=_P_ARMS, model=_linear_head(_P_K, 4),
-        group_keys=(_YEAR,), aggregates=_PRED_SUM, num_groups=8)
+    return _p_star(_linear_head(_P_K, 4)).build()
 
 
 @_register_predictive("P2.linear.select.scalar")
 def p2():
     """QG1 shape: date-arm features + fact selection, scalar prediction sum."""
-    arms = (ArmSpec("date", "lo_orderdate", "datekey",
-                    ("d_month", "d_weeknuminyear"),
-                    preds=(Pred("d_year", "between", (1993, 1995)),)),)
-    return PredictiveQuery(
-        fact="lineorder", arms=arms, model=_linear_head(2, 3, seed=1),
-        fact_preds=(Pred("lo_discount", "between", (1, 3)),),
-        aggregates=_PRED_SUM)
+    return (query("lineorder")
+            .join("date", on=("lo_orderdate", "datekey"),
+                  features=("d_month", "d_weeknuminyear"),
+                  where=[("d_year", "between", (1993, 1995))])
+            .where(("lo_discount", "between", (1, 3)))
+            .predict(_linear_head(2, 3, seed=1))
+            .agg(prediction=("sum", PREDICTION))
+            .build())
 
 
 @_register_predictive("P3.tree.year")
 def p3():
     """GEMM decision tree (Fig. 5) fused into the star, leaf histogram/year."""
-    return PredictiveQuery(
-        fact="lineorder", arms=_P_ARMS,
-        model=random_tree(np.random.default_rng(2), _P_K, depth=3),
-        group_keys=(_YEAR,), aggregates=_PRED_SUM, num_groups=8)
+    return _p_star(
+        random_tree(np.random.default_rng(2), _P_K, depth=3)).build()
 
 
 @_register_predictive("P4.tree.select.region")
 def p4():
     """Tree head + selective supplier arm, leaf histogram per customer
     region."""
-    arms = (ArmSpec("customer", "lo_custkey", "custkey", ("c_city",)),
-            ArmSpec("supplier", "lo_suppkey", "suppkey", ("s_city",),
-                    preds=(Pred("s_region", "in", (0, 1, 2)),)),
-            ArmSpec("date", "lo_orderdate", "datekey", ("d_month",)))
-    return PredictiveQuery(
-        fact="lineorder", arms=arms,
-        model=random_tree(np.random.default_rng(3), 3, depth=2),
-        group_keys=(GroupKey("customer", "c_region", N_REGIONS),),
-        aggregates=_PRED_SUM, num_groups=N_REGIONS)
+    return (query("lineorder")
+            .join("customer", on=("lo_custkey", "custkey"),
+                  features=("c_city",))
+            .join("supplier", on=("lo_suppkey", "suppkey"),
+                  features=("s_city",),
+                  where=[("s_region", "in", (0, 1, 2))])
+            .join("date", on=("lo_orderdate", "datekey"),
+                  features=("d_month",))
+            .predict(random_tree(np.random.default_rng(3), 3, depth=2))
+            .group_by(("customer", "c_region", N_REGIONS),
+                      num_groups=N_REGIONS)
+            .agg(prediction=("sum", PREDICTION))
+            .build())
 
 
 def query_groups():

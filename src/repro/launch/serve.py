@@ -28,8 +28,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.fusion import LinearOperator
-from repro.core.query import (DEFAULT_BUCKETS, compile_serving,
-                              query_from_star, requests_from_rows)
+from repro.core.query import (DEFAULT_BUCKETS, Session, query_from_star,
+                              requests_from_rows)
 from repro.data import generate_star
 from repro.models import LM
 
@@ -37,9 +37,10 @@ from repro.models import LM
 class FusedFeatureServer:
     """The paper's pipeline as a serving component.
 
-    Holds two dynamic-batch serving runtimes (fused and non-fused
-    reference) compiled from one predictive query over a synthetic star
-    schema.  Requests are batches of per-arm foreign keys served through
+    One :class:`~repro.core.query.Session` binds the synthetic star
+    catalog (and the optional serving mesh) and hands out two dynamic-batch
+    serving runtimes (fused and non-fused reference) from one fluent
+    pipeline.  Requests are batches of per-arm foreign keys served through
     ``ServingRuntime.serve`` — on the fused plan that is one PK lookup +
     gather-add per arm per batch (paper Eq. 1), padded into a fixed set of
     shape buckets so no request ever recompiles.
@@ -57,13 +58,15 @@ class FusedFeatureServer:
         self.catalog, self.query = query_from_star(self.syn.star,
                                                    model=self.model)
         self.mesh = mesh
-        shard_kw = dict(mesh=mesh, shard_threshold_bytes=shard_threshold_bytes)
-        self.runtime_fused = compile_serving(
-            self.catalog, self.query, backend="fused", buckets=buckets,
-            serve_backend=serve_backend, interpret=interpret, **shard_kw)
-        self.runtime_nonfused = compile_serving(
-            self.catalog, self.query, backend="nonfused", buckets=buckets,
-            serve_backend=serve_backend, interpret=interpret, **shard_kw)
+        self.session = Session(self.catalog, mesh=mesh,
+                               shard_threshold_bytes=shard_threshold_bytes,
+                               interpret=interpret)
+        self.builder = self.session.bind(self.query)
+        self.runtime_fused = self.builder.serve(
+            buckets=buckets, backend="fused", serve_backend=serve_backend)
+        self.runtime_nonfused = self.builder.serve(
+            buckets=buckets, backend="nonfused",
+            serve_backend=serve_backend)
         self.decision = self.runtime_fused.plan.fusion
 
     def runtime(self, fused: bool = True):

@@ -124,21 +124,44 @@ def np_predictive_query(q, catalog):
                        np.clip(arm_ptr[gk.table], 0, None)])
             codes = codes * int(gk.bound) + (col.astype(np.int64) - gk.offset)
 
+    group_rows = None
+    if q.group_keys:
+        group_rows = {}
+        for i in np.nonzero(valid)[0]:
+            group_rows.setdefault(int(codes[i]), []).append(i)
+
+    def _reduce(arr, op):
+        """One aggregate over the (rows, width) slice of one group/scalar."""
+        if op == "count":
+            return np.asarray([float(arr.shape[0])])
+        if op == "mean":
+            return arr.mean(axis=0)
+        if op == "min":
+            return arr.min(axis=0)
+        if op == "max":
+            return arr.max(axis=0)
+        return arr.sum(axis=0)
+
     groups = {} if q.group_keys else None
     scalars = None if q.group_keys else {}
     abs_scale = {}
     for agg in q.aggregates:
-        vals = (pred if agg.value == "@prediction"     # query.ir.PREDICTION
-                else _np_value(fcols, agg.value))
-        v2 = vals if vals.ndim > 1 else vals[:, None]
-        abs_scale[agg.name] = float(np.abs(v2[valid]).sum())
-        if q.group_keys:
-            for i in np.nonzero(valid)[0]:
-                g = groups.setdefault(int(codes[i]), {})
-                cur = g.get(agg.name)
-                g[agg.name] = v2[i] if cur is None else cur + v2[i]
+        op = getattr(agg, "op", "sum")
+        if op == "count":
+            v2 = np.ones((n, 1))
         else:
-            scalars[agg.name] = v2[valid].sum(axis=0)
+            vals = (pred if agg.value == "@prediction"  # query.ir.PREDICTION
+                    else _np_value(fcols, agg.value))
+            v2 = vals if vals.ndim > 1 else vals[:, None]
+        live = np.abs(v2[valid])
+        abs_scale[agg.name] = float(
+            live.mean() if op in ("mean", "min", "max") and live.size
+            else live.sum())
+        if q.group_keys:
+            for code, idx in group_rows.items():
+                groups.setdefault(code, {})[agg.name] = _reduce(v2[idx], op)
+        else:
+            scalars[agg.name] = _reduce(v2[valid], op)
     return {"rows": int(valid.sum()), "groups": groups, "scalars": scalars,
             "abs_scale": abs_scale}
 
