@@ -12,9 +12,10 @@ Cross-machine noise policy:
 * ``--min-us`` skips rows where *both* sides are below the floor — µs-scale
   rows on shared CI runners are dominated by scheduler noise.
 * ``--normalize`` divides every current value by the run's median
-  current/baseline ratio first, gating *relative* regressions (one bench
-  slowing down vs. its siblings) while absorbing a uniformly slower or
-  faster machine.  CI uses this: baselines are seeded from a developer
+  current/baseline ratio first (clamped at 1.0 — a faster machine must not
+  amplify mild raw ratios into failures), gating *relative* regressions
+  (one bench slowing down vs. its siblings) while absorbing a uniformly
+  slower machine.  CI uses this: baselines are seeded from a developer
   box, not the runner fleet.  The trade-off — a uniform slowdown of every
   row is absorbed too — is deliberate; the matching absolute check runs on
   machines that match the baselines (``--tolerance`` without
@@ -75,8 +76,16 @@ def compare(current: Dict[str, float], baseline: Dict[str, float], *,
             if baseline[n] > 0
             and not (current[n] <= min_us and baseline[n] <= min_us))
         if len(ratios) >= 3:
-            scale = max(ratios[len(ratios) // 2], 1e-12)
-            notes.append(f"normalize: median current/baseline = {scale:.3f}x")
+            # Clamped at 1.0: normalization exists to absorb a *slower*
+            # machine.  On a faster-than-baseline run a sub-1 scale would
+            # divide every row upward and flag rows whose raw ratio is well
+            # under tolerance (1.2x raw → 1.6x "normalized") — a faster
+            # machine can only ever make the gate stricter in absolute
+            # terms, never manufacture a regression.
+            scale = max(ratios[len(ratios) // 2], 1.0)
+            notes.append(f"normalize: median current/baseline = "
+                         f"{ratios[len(ratios) // 2]:.3f}x, scale "
+                         f"{scale:.3f}x")
         else:
             notes.append(f"normalize: only {len(ratios)} gated rows — "
                          "too few for a median, using absolute comparison")

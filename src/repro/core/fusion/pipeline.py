@@ -79,6 +79,51 @@ def prefuse(star: StarJoin, model: Model) -> PrefusedStar:
     return prefuse_dims(star.dims, model)
 
 
+def prefuse_rows(dims: Sequence[DimSpec], model: Model, j: int,
+                 row_ids: jnp.ndarray) -> jnp.ndarray:
+    """Partial rows for dimension ``j`` restricted to ``row_ids``.
+
+    The delta half of incremental prefuse maintenance: Eq. 1/3 partials are
+    *row-wise* in the dimension table (row r of ``B (M L)`` reads only row r
+    of B), so an append/update only ever dirties the corresponding partial
+    rows.  This computes exactly those — the same per-row contractions the
+    cold :func:`prefuse_dims` runs over all rows, so scattering the result
+    back (:func:`extend_prefused`) reproduces the cold partial bit-exactly.
+    """
+    mats = dim_mapping_matrices(dims)
+    d, m = dims[j], mats[j]
+    rows = jnp.take(d.dim.matrix, jnp.asarray(row_ids, jnp.int32), axis=0)
+    if isinstance(model, LinearOperator):
+        return rows @ (m @ model.L)
+    slices = _feature_slices(dims)
+    lo, hi = slices[j]
+    f_owner = jnp.argmax(model.F, axis=0)
+    own = ((f_owner >= lo) & (f_owner < hi)).astype(jnp.float32)
+    feats = rows @ (m @ model.F)
+    preds = (feats > model.v[None, :]).astype(jnp.float32) * own[None, :]
+    return preds @ model.H
+
+
+def extend_prefused(pre: PrefusedStar, dims: Sequence[DimSpec],
+                    model: Model,
+                    dirty: Sequence[Optional[jnp.ndarray]]) -> PrefusedStar:
+    """Scatter freshly-computed partial rows into the cached partials.
+
+    ``dirty[j]`` is the array of dimension-j row ids to recompute (appended
+    span ∪ updated rows), or ``None`` for untouched arms, whose partial
+    arrays are reused as-is.  Shapes never change — this is the same-
+    capacity delta path; capacity growth goes through a cold ``prefuse``.
+    """
+    parts = []
+    for j, (p, ids) in enumerate(zip(pre.partials, dirty)):
+        if ids is None or len(ids) == 0:
+            parts.append(p)
+            continue
+        ids = jnp.asarray(ids, jnp.int32)
+        parts.append(p.at[ids].set(prefuse_rows(dims, model, j, ids)))
+    return PrefusedStar(tuple(parts), pre.h)
+
+
 def predict_fused(star: StarJoin, pre: PrefusedStar) -> jnp.ndarray:
     """Online phase: Σⱼ Iⱼ Pⱼ (gathers) and, for trees, `== h`."""
     acc = None

@@ -1,5 +1,7 @@
 """LAQ: relational query processing as linear algebra (paper §2)."""
 from .table import Table, PAD_KEY
+from .catalog import (Catalog, CatalogHistoryError, CatalogReadOnlyError,
+                      TableDelta, changed_spans)
 from .projection import mapping_matrix, project_matmul, project_gather
 from .selection import Pred, select, selection_vector
 from .domain import key_domain, positions, DomainCache, default_domain_cache
@@ -17,7 +19,10 @@ from .star import (DimSpec, StarJoin, dim_mapping_matrices, shard_rows,
                    star_join)
 
 __all__ = [
-    "Table", "PAD_KEY", "mapping_matrix", "project_matmul", "project_gather",
+    "Table", "PAD_KEY",
+    "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "TableDelta",
+    "changed_spans",
+    "mapping_matrix", "project_matmul", "project_gather",
     "Pred", "select", "selection_vector", "key_domain", "positions",
     "DomainCache", "default_domain_cache", "FactoredJoin", "PKIndex",
     "ShardedPKIndex", "join_factored", "pk_index", "shard_pk_index",

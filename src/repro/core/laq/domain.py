@@ -8,9 +8,10 @@ appended (the paper's suggested improvement).
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Mapping, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from .table import PAD_KEY
 
@@ -69,19 +70,60 @@ class DomainCache:
         self._store[k] = dom
         return dom
 
-    def refresh(self, names, new_keys: jnp.ndarray) -> jnp.ndarray:
-        """Merge appended keys into the cached domain (incremental update)."""
+    def refresh(self, names, new_keys: jnp.ndarray, *,
+                grow: bool = True) -> jnp.ndarray:
+        """Merge appended keys into the cached domain (incremental update).
+
+        The merge runs on host (refresh is an offline, concrete operation),
+        so the merged unique count is measured exactly: when it exceeds the
+        cached domain's capacity the domain *grows geometrically* (powers of
+        two of the old capacity) instead of silently truncating the largest
+        keys — the failure mode of a fixed-size ``jnp.unique(..., size=...)``.
+        ``grow=False`` raises a capacity error instead, for callers whose
+        compiled programs bake in the domain shape.
+        """
         k = self._key(names)
         if k not in self._store:
             raise KeyError(f"no cached domain for {k}")
         dom = self._store[k]
-        merged = jnp.unique(
-            jnp.concatenate([dom, new_keys.reshape(-1)]),
-            size=dom.shape[0],
-            fill_value=PAD_KEY,
-        )
-        self._store[k] = merged
-        return merged
+        cap = int(dom.shape[0])
+        merged = np.unique(np.concatenate(
+            [np.asarray(dom).reshape(-1),
+             np.asarray(new_keys).reshape(-1)]))
+        live = merged[merged != PAD_KEY]  # pads sort last; drop, then re-pad
+        if live.shape[0] > cap:
+            if not grow:
+                raise ValueError(
+                    f"domain {k} capacity {cap} exceeded: merged unique key "
+                    f"count is {live.shape[0]} — rebuild with a larger "
+                    "size, or allow grow=True")
+            while cap < live.shape[0]:
+                cap *= 2
+        out = np.full((cap,), PAD_KEY, dom.dtype)
+        out[:live.shape[0]] = live
+        out = jnp.asarray(out)
+        self._store[k] = out
+        return out
+
+    def refresh_table(self, relation: str,
+                      new_keys: Mapping[str, jnp.ndarray], *,
+                      grow: bool = True) -> int:
+        """Refresh every cached domain that references ``relation``.
+
+        ``new_keys`` maps the relation's key columns to their appended
+        values; each cached domain whose identity set contains one of those
+        ``(relation, column)`` pairs is merged in place.  Returns the number
+        of domains refreshed — the Catalog's append hook.
+        """
+        n = 0
+        for key in list(self._store):
+            cols = [c for (rel, c) in key if rel == relation and c in new_keys]
+            if cols:
+                self.refresh(key, jnp.concatenate(
+                    [jnp.asarray(new_keys[c]).reshape(-1) for c in cols]),
+                    grow=grow)
+                n += 1
+        return n
 
 
 # Process-wide default cache (the paper's "domain caching strategies").

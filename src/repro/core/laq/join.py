@@ -28,6 +28,7 @@ import dataclasses
 from typing import Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from .domain import key_domain, positions
 from .table import PAD_KEY, Table
@@ -120,6 +121,68 @@ class PKIndex:
         hit = (jnp.take(self.sorted_pk, pos_c) == fk) & (fk != PAD_KEY)
         ptr = jnp.take(self.order, pos_c).astype(jnp.int32)
         return FactoredJoin(ptr=jnp.where(hit, ptr, 0), found=hit)
+
+    @property
+    def n_live(self) -> int:
+        """Number of live (non-PAD_KEY) keys in the index."""
+        return int(np.searchsorted(np.asarray(self.sorted_pk), PAD_KEY))
+
+    def extend(self, new_keys, new_row_ids) -> "PKIndex":
+        """Sorted-merge appended ``(key, row)`` pairs into the index.
+
+        The incremental half of the Catalog append path: instead of
+        re-argsorting all ``capacity`` rows (O(r log r)), the m appended
+        keys are sorted alone and merged into the live prefix via two
+        searchsorteds (O(r + m log m)).  The result is *array-identical* to
+        ``pk_index`` over the appended table — including the PAD_KEY tail,
+        whose stable-argsort order is the remaining pad row ids ascending —
+        so probes through an extended index are bitwise the cold rebuild's.
+        ``new_row_ids`` must be the table's next contiguous row block (the
+        Catalog append invariant; probe results are unaffected otherwise,
+        but the pad tail would differ from a cold rebuild).  Runs on host:
+        index maintenance is an offline, concrete operation.
+        """
+        sp = np.asarray(self.sorted_pk)
+        od = np.asarray(self.order)
+        cap = sp.shape[0]
+        n_old = int(np.searchsorted(sp, PAD_KEY))
+        nk = np.asarray(new_keys, np.int32).reshape(-1)
+        nr = np.asarray(new_row_ids, np.int32).reshape(-1)
+        if nk.shape[0] != nr.shape[0]:
+            raise ValueError(
+                f"extend: {nk.shape[0]} keys vs {nr.shape[0]} row ids")
+        live = nk != PAD_KEY
+        nk, nr = nk[live], nr[live]
+        m = nk.shape[0]
+        if n_old + m > cap:
+            raise ValueError(
+                f"extend: {n_old} live + {m} appended keys exceed index "
+                f"capacity {cap} — rebuild with pk_index after growing")
+        perm = np.argsort(nk, kind="stable")
+        nk, nr = nk[perm], nr[perm]
+        if np.any(nk[1:] == nk[:-1]):
+            raise ValueError("extend: duplicate keys within the appended "
+                             "block violate PK uniqueness")
+        ins = np.searchsorted(sp[:n_old], nk, side="left")
+        dup = np.take(sp, np.clip(ins, 0, max(n_old - 1, 0))) == nk
+        if n_old and np.any(dup):
+            raise ValueError(
+                f"extend: appended keys {nk[dup][:8].tolist()} already "
+                "exist in the index (PK uniqueness)")
+        n_new = n_old + m
+        out_pk = np.full((cap,), PAD_KEY, np.int32)
+        out_od = np.zeros((cap,), np.int32)
+        new_pos = ins + np.arange(m)
+        old_pos = np.arange(n_old) + np.searchsorted(nk, sp[:n_old],
+                                                     side="left")
+        out_pk[old_pos] = sp[:n_old]
+        out_od[old_pos] = od[:n_old]
+        out_pk[new_pos] = nk
+        out_od[new_pos] = nr
+        # Stable-argsort pad tail: the remaining pad rows, ascending.
+        out_od[n_new:] = np.arange(n_new, cap, dtype=np.int32)
+        return PKIndex(sorted_pk=jnp.asarray(out_pk),
+                       order=jnp.asarray(out_od))
 
 
 def pk_index(pk: jnp.ndarray) -> PKIndex:

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -100,6 +101,105 @@ class Table:
         return dataclasses.replace(
             self, matrix=matrix, columns=tuple(columns or self.columns)
         )
+
+    # -- functional mutation (the Catalog's append/update substrate) ---------
+    def _concrete_nvalid(self, what: str) -> int:
+        try:
+            return int(self.nvalid)
+        except jax.errors.ConcretizationTypeError:
+            raise ValueError(
+                f"cannot {what} table {self.name!r} under a trace: its "
+                "nvalid is abstract — data mutation is an offline (concrete) "
+                "operation") from None
+
+    def append_rows(self, cols: Mapping[str, "np.ndarray | jnp.ndarray"],
+                    *, capacity: int | None = None) -> "Table":
+        """A new Table with ``cols`` appended after the live rows.
+
+        ``cols`` must name every matrix column (key columns update both
+        views).  Rows land in the padding region when they fit; otherwise
+        ``capacity`` (default: geometric growth, ``max(2·cap, n+m)``)
+        reallocates — shape growth, which downstream compiled artifacts
+        handle by recompiling.  Purely functional: ``self`` is unchanged.
+        """
+        n = self._concrete_nvalid("append to")
+        missing = [c for c in self.columns if c not in cols]
+        if missing:
+            raise ValueError(
+                f"append to {self.name!r} missing columns {missing} "
+                f"(need all of {list(self.columns)})")
+        unknown = [c for c in cols if c not in self.columns]
+        if unknown:
+            raise ValueError(
+                f"append to {self.name!r}: unknown columns {unknown} "
+                f"(columns: {list(self.columns)})")
+        vals = {c: np.asarray(cols[c]).reshape(-1) for c in cols}
+        m = vals[self.columns[0]].shape[0]
+        ragged = [c for c, v in vals.items() if v.shape[0] != m]
+        if ragged:
+            raise ValueError(
+                f"append to {self.name!r}: ragged columns {ragged} "
+                f"(expected {m} rows each)")
+        new_n = n + m
+        cap = self.capacity
+        if new_n > cap:
+            cap = capacity if capacity is not None else max(2 * cap, new_n)
+        if new_n > cap:
+            raise ValueError(
+                f"append to {self.name!r}: {new_n} rows exceed requested "
+                f"capacity {cap}")
+        block = np.zeros((m, self.ncols), np.float32)
+        for j, c in enumerate(self.columns):
+            block[:, j] = vals[c].astype(np.float32)
+        if cap == self.capacity:
+            matrix = self.matrix.at[n:new_n].set(jnp.asarray(block))
+            keys = {}
+            for c, k in self.keys.items():
+                keys[c] = k.at[n:new_n].set(
+                    jnp.asarray(vals[c].astype(np.int32)))
+        else:  # grown: reallocate both views (shape change)
+            matrix = np.zeros((cap, self.ncols), np.float32)
+            matrix[:n] = np.asarray(self.matrix)[:n]
+            matrix[n:new_n] = block
+            matrix = jnp.asarray(matrix)
+            keys = {}
+            for c, k in self.keys.items():
+                buf = np.full((cap,), PAD_KEY, np.int32)
+                buf[:n] = np.asarray(k)[:n]
+                buf[n:new_n] = vals[c].astype(np.int32)
+                keys[c] = jnp.asarray(buf)
+        return Table(self.name, self.columns, matrix, keys, new_n)
+
+    def update_column(self, col: str, row_ids, values) -> "Table":
+        """A new Table with ``col`` overwritten at ``row_ids``.
+
+        Key columns cannot be updated in place — changing join keys would
+        silently invalidate every PK index and prefused partial built over
+        them; delete-and-append is the supported path for key churn.
+        """
+        n = self._concrete_nvalid("update")
+        if col in self.keys:
+            raise ValueError(
+                f"update_column on key column {col!r} of {self.name!r} is "
+                "not supported: key updates invalidate join indices — "
+                "append corrected rows instead")
+        if col not in self.columns:
+            raise ValueError(
+                f"unknown column {col!r} on table {self.name!r} "
+                f"(columns: {list(self.columns)})")
+        ids = np.asarray(row_ids, np.int64).reshape(-1)
+        vals = np.asarray(values, np.float32).reshape(-1)
+        if ids.shape[0] != vals.shape[0]:
+            raise ValueError(
+                f"update_column on {self.name!r}: {ids.shape[0]} row ids vs "
+                f"{vals.shape[0]} values")
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise ValueError(
+                f"update_column on {self.name!r}: row ids out of the live "
+                f"range [0, {n})")
+        j = self.col_index(col)
+        matrix = self.matrix.at[jnp.asarray(ids), j].set(jnp.asarray(vals))
+        return dataclasses.replace(self, matrix=matrix)
 
     def to_numpy_valid(self) -> np.ndarray:
         """Materialize the live rows on host (tests / oracles only)."""

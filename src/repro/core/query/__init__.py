@@ -51,7 +51,27 @@ Old call                                       Session call
 hand-built ``PredictiveQuery(...)``            ``sess.query(fact).join(...)
                                                .where(...).predict(...)
                                                .group_by(...).agg(...)``
+frozen ``{name: Table}`` dict + full           ``Session(Catalog({...}))``;
+rebuild after data changes                     ``catalog.append(...)`` /
+                                               ``.update_column(...)``,
+                                               cached plans/runtimes
+                                               refresh *in place* (delta
+                                               path, zero retraces while
+                                               shapes hold)
 =============================================  =============================
+
+Data lifecycle
+--------------
+``Session(catalog)`` accepts a :class:`~repro.core.laq.Catalog` — the
+versioned data surface.  Every table carries a monotone version counter;
+``catalog.append(table, rows)`` / ``catalog.update_column(...)`` bump it
+transactionally and log the delta.  Plan/runtime cache keys include the
+participating tables' versions, so a stale artifact is impossible to serve:
+the next lookup refreshes it in place — ``PKIndex.extend`` sorted merges,
+``prefuse_rows`` over only the new dimension rows, mask scatters — with
+zero retraces while shapes hold (appends within a table's padded capacity).
+Capacity growth recompiles, with the reason on ``explain()``.  Plain dicts
+auto-wrap read-only (the old frozen contract, unchanged).
 
 IR node → paper construct
 -------------------------
@@ -95,6 +115,8 @@ shards the quasi-static partials per ``plan_partition_spec``; the Pallas
 kernels (``fused_star_gather`` / ``tree_predict``) lower the gather-sum when
 shapes fit.
 """
+from ..laq.catalog import (Catalog, CatalogHistoryError,
+                           CatalogReadOnlyError, TableDelta, changed_spans)
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
                  GroupKey, PredictiveQuery, eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
@@ -113,6 +135,8 @@ from .sharding import (ShardedArm, ShardedPrefusedPartials,
 __all__ = [
     "AGG_OPS", "COUNT_STAR", "PREDICTION", "Aggregate", "ArmSpec",
     "GroupKey", "PredictiveQuery",
+    "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "TableDelta",
+    "changed_spans",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",
     "AggDecision", "QueryPlan", "plan_aggregation", "plan_partition_spec",
     "plan_placements", "plan_query", "plan_serving_backend",

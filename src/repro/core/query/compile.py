@@ -1,6 +1,6 @@
 """Lower a ``PredictiveQuery`` to one jitted XLA program.
 
-Offline (quasi-static, runs once per (query, catalog)):
+Offline (quasi-static, runs once per (query, catalog version set)):
   1. selection masks on the fact table and each dimension (``Pred``, §2.2),
   2. factored matching matrices per arm (``join_factored``, Alg. 1 / §3.1),
      with dimension-side predicate masks gathered through the FK pointers —
@@ -16,38 +16,59 @@ Online (the single jitted program): Σⱼ Iⱼ Pⱼ gathers (+ ``== h`` for tree
 value expressions, and the group-by reduction composed directly on the fused
 prediction output — no intermediate table ever materializes on the fused
 path.
+
+Incremental maintenance: every quasi-static array the online programs read
+(matrices, pointers, masks, partials, group ids) is threaded through the
+jitted functions as one *state pytree argument* rather than closed over —
+closure capture would bake the arrays into the jaxpr as constants and force
+a retrace on every append.  :meth:`CompiledQuery.refresh` applies pending
+:class:`~repro.core.laq.catalog.Catalog` deltas to that state (sorted-merge
+``PKIndex.extend``, delta ``prefuse_rows``, mask scatters): same shapes ⇒
+the swapped state hits the same jit cache, no retrace; capacity growth (or
+select-compaction / group overflow) falls back to a recompile with a named
+``explain()`` reason.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..fusion.operators import DecisionTreeGEMM
-from ..fusion.pipeline import (PrefusedStar, predict_fused,
+from ..fusion.pipeline import (PrefusedStar, extend_prefused, predict_fused,
                                predict_fused_kernel, predict_fused_matmul,
                                predict_nonfused, predict_nonfused_kernel,
                                predict_nonfused_matmul, prefuse)
 from ..laq.aggregation import (auto_num_groups, composite_code,
                                groupby_codes, matmul_aggregate,
                                segment_aggregate, segment_reduce)
-from ..laq.join import join_factored
+from ..laq.catalog import Catalog, CatalogHistoryError, changed_spans
+from ..laq.join import FactoredJoin, PKIndex, pk_index
 from ..laq.projection import mapping_matrix
 from ..laq.selection import select
 from ..laq.star import DimSpec, StarJoin
-from ..laq.table import Table
+from ..laq.table import PAD_KEY, Table
 from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
-from .sharding import make_predict_rows_forward, shard_prefused_partials
+from .sharding import (make_predict_rows_forward, predict_rows_state,
+                       shard_prefused_partials)
 
 
 @dataclasses.dataclass
 class CompiledQuery:
-    """An executable plan: one jitted program + its quasi-static artifacts."""
+    """An executable plan: one jitted program + its quasi-static artifacts.
+
+    The artifacts live in ``_state`` (a pytree the jitted programs take as
+    an argument); ``catalog``/``versions`` record the data they were built
+    against, and :meth:`refresh` brings them up to the catalog's current
+    versions in place — by delta when shapes allow, by recompile otherwise.
+    """
 
     query: PredictiveQuery
     plan: QueryPlan
@@ -64,6 +85,17 @@ class CompiledQuery:
     _run: callable
     _predict: Optional[callable]
     _predict_rows: Optional[callable]
+    _state: Dict = dataclasses.field(default_factory=dict)
+    catalog: Optional[Catalog] = None
+    versions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    _indices: Tuple[PKIndex, ...] = ()   # per-arm PK indices (extendable)
+    _source: Optional[PredictiveQuery] = None  # q as originally passed
+    _opts: Dict = dataclasses.field(default_factory=dict)
+    _sp: Optional[object] = None         # ShardedPrefusedPartials (mesh path)
+    # Bounded refresh-decision trail appended to plan.reason: a long-lived
+    # streaming plan must not grow its explain() string without limit.
+    _refresh_notes: "collections.deque" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=8))
 
     @property
     def is_traced(self) -> bool:
@@ -73,7 +105,7 @@ class CompiledQuery:
 
     def run(self) -> Dict[str, jnp.ndarray]:
         """Execute the query; returns aggregates (+ "groups", "rows")."""
-        out = dict(self._run())
+        out = dict(self._run(self._state))
         if self.group_codes is not None:
             out["groups"] = self.group_codes
         out["rows"] = self._rows
@@ -83,7 +115,7 @@ class CompiledQuery:
         """The (fact_capacity, l) prediction matrix (model queries only)."""
         if self._predict is None:
             raise ValueError("query has no model")
-        return self._predict()
+        return self._predict(self._state)
 
     def predict_rows(self, row_ids: jnp.ndarray) -> jnp.ndarray:
         """Batched serving: predictions for a batch of fact row ids.
@@ -95,7 +127,160 @@ class CompiledQuery:
         """
         if self._predict_rows is None:
             raise ValueError("query has no model")
-        return self._predict_rows(row_ids)
+        return self._predict_rows(row_ids, self._state)
+
+    # -- incremental maintenance --------------------------------------------
+    def _participating(self) -> Tuple[str, ...]:
+        names = {self.query.fact} | {a.table for a in self.query.arms}
+        return tuple(sorted(names))
+
+    def refresh(self) -> str:
+        """Apply pending catalog deltas to the compiled artifacts, in place.
+
+        Appends that fit the tables' existing capacity (and non-key column
+        updates) take the delta path: per-arm ``PKIndex.extend`` sorted
+        merges, probes of only the appended keys/rows, ``prefuse_rows``
+        over only the new dimension rows, and in-place mask/group-id
+        rebuilds — all shape-preserving, so the already-compiled programs
+        keep serving from the jit cache with zero retraces.  Capacity
+        growth, select-compaction, or group-code overflow fall back to a
+        full recompile; either way the decision is appended to
+        ``plan.reason`` (visible via ``explain``) and returned.
+        """
+        if self.catalog is None:
+            return self._note("refresh=no-op(detached: no catalog)")
+        if self.is_traced:
+            raise ValueError("cannot refresh a traced plan: it holds "
+                             "tracers from an outer jit")
+        cat = self.catalog
+        try:
+            changed = {n: cat.deltas_since(n, self.versions.get(n, 0))
+                       for n in self._participating()}
+        except CatalogHistoryError:
+            return self._recompile("history-compacted: plan staler than "
+                                   "the delta log")
+        changed = {n: d for n, d in changed.items() if d}
+        if not changed:
+            return self._note("refresh=no-op(versions unchanged)")
+        if self._opts.get("select_capacity") is not None:
+            return self._recompile("select-compaction rebinds the fact")
+        if any(changed_spans(d)[2] for d in changed.values()):
+            grown = sorted(n for n, d in changed.items()
+                           if changed_spans(d)[2])
+            return self._recompile(f"capacity-growth:{','.join(grown)}")
+        try:
+            return self._refresh_delta(changed)
+        except _GroupOverflow:
+            return self._recompile("group-overflow: live codes exceed the "
+                                   "compiled num_groups")
+
+    def _note(self, line: str) -> str:
+        if not self._refresh_notes:
+            self._base_reason = self.plan.reason
+        self._refresh_notes.append(line)
+        self.plan = dataclasses.replace(
+            self.plan, reason="; ".join([self._base_reason,
+                                         *self._refresh_notes]))
+        return line
+
+    def _recompile(self, why: str) -> str:
+        fresh = compile_query(self.catalog, self._source, **self._opts)
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
+        return self._note(f"refresh=recompile({why})")
+
+    def _refresh_delta(self, changed) -> str:
+        q = self.query
+        cat = self.catalog
+        fact = cat[q.fact]
+        fspan, _, _ = (changed_spans(changed[q.fact])
+                       if q.fact in changed else (None, (), False))
+
+        ptrs = [np.array(p) for p in self._state["ptrs"]]
+        founds = [np.array(f) for f in self._state["founds"]]
+        indices = list(self._indices)
+        dirty_rows = []
+        for j, arm in enumerate(q.arms):
+            dim = cat[arm.table]
+            span, dirty, _ = (changed_spans(changed[arm.table])
+                              if arm.table in changed else (None, (), False))
+            ids = set(dirty)
+            if span is not None:
+                lo, hi = span
+                ids.update(range(lo, hi))
+                indices[j] = indices[j].extend(
+                    dim.key(arm.pk_col)[lo:hi], np.arange(lo, hi))
+                # Fact rows whose FK now hits an appended PK: probe only the
+                # appended key block (O(n log m)), scatter into ptr/found.
+                nk = np.asarray(dim.key(arm.pk_col))[lo:hi]
+                order = np.argsort(nk, kind="stable")
+                snk, srow = nk[order], (lo + order).astype(np.int32)
+                fk = np.asarray(fact.key(arm.fk_col))
+                pos = np.searchsorted(snk, fk)
+                posc = np.clip(pos, 0, len(snk) - 1)
+                hit = (snk[posc] == fk) & (fk != PAD_KEY)
+                ptrs[j] = np.where(hit, srow[posc], ptrs[j]).astype(np.int32)
+                founds[j] = founds[j] | hit
+            if fspan is not None:
+                # Appended fact rows: probe their FKs against the (already
+                # extended) full index, scatter into the new row span.
+                flo, fhi = fspan
+                fj = indices[j].probe(fact.key(arm.fk_col)[flo:fhi])
+                ptrs[j][flo:fhi] = np.asarray(fj.ptr)
+                founds[j][flo:fhi] = np.asarray(fj.found)
+            dirty_rows.append(
+                np.asarray(sorted(ids), np.int32) if ids else None)
+
+        # Validity, prefuse partials and group ids rebuild from the updated
+        # pointers — eager element-wise work, never a retrace.  The mask
+        # fold is the same _assemble_star the cold compile runs, so the
+        # refreshed validity is bitwise the cold rebuild's by construction.
+        joins = tuple(FactoredJoin(jnp.asarray(p), jnp.asarray(f))
+                      for p, f in zip(ptrs, founds))
+        star, valid = _assemble_star(cat, q, joins)
+
+        prefused = self.prefused
+        if prefused is not None:
+            prefused = extend_prefused(prefused, star.dims, q.model,
+                                       dirty_rows)
+
+        codes = uniq = gid = None
+        if q.group_keys:
+            cols, bounds = _group_columns(cat, q, star)
+            codes = composite_code(cols, bounds, valid)
+            try:
+                uniq, gid = groupby_codes(codes, q.num_groups)
+            except ValueError as e:
+                raise _GroupOverflow(str(e)) from e
+
+        rows = jnp.sum(valid.astype(jnp.int32))
+        n_fact = _static_int(fact.nvalid, fact.capacity)
+        self.star = star
+        self.prefused = prefused
+        self.group_codes = uniq
+        self._gid = gid
+        self._rows = rows
+        self.selectivity = float(rows) / max(n_fact, 1)
+        self._indices = tuple(indices)
+        state = _query_state(star, prefused, gid)
+        if self._sp is not None:
+            tables = (list(prefused.partials) if self.backend == "fused"
+                      else [d.dim.matrix
+                            @ mapping_matrix(d.dim.columns, d.feature_cols)
+                            for d in star.dims])
+            state["sharded"] = predict_rows_state(
+                self._sp, tables, [fj.ptr for fj in star.joins],
+                [fj.found for fj in star.joins], valid)
+        self._state = state
+        self.versions = {n: cat.version(n) for n in self._participating()}
+        touched = ",".join(f"{n}+{len(changed[n])}"
+                           for n in sorted(changed))
+        return self._note(f"refresh=delta({touched}; shapes kept, "
+                          "jit cache reused)")
+
+
+class _GroupOverflow(ValueError):
+    """Internal: live group codes outgrew the compiled num_groups."""
 
 
 def _static_int(x, default: int) -> int:
@@ -106,29 +291,52 @@ def _static_int(x, default: int) -> int:
         return default
 
 
-def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery
-                  ) -> Tuple[StarJoin, jnp.ndarray]:
-    """Joins + combined validity with every selection mask folded in."""
+def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
+                   joins: Tuple[FactoredJoin, ...]
+                   ) -> Tuple[StarJoin, jnp.ndarray]:
+    """Fold every selection mask into the combined validity, given resolved
+    per-arm joins.
+
+    The single definition of predicate semantics (fact preds AND-fold, dim
+    preds gathered through the FK pointers) shared by the cold compile and
+    the delta refresh — the two must agree bitwise or refresh loses its
+    ≡-cold-rebuild contract.
+    """
     fact = catalog[q.fact]
     valid = fact.valid_mask()
     for p in q.fact_preds:
         valid = valid & p.mask(fact)
-    dims, joins = [], []
-    for arm in q.arms:
+    dims = []
+    for arm, fj in zip(q.arms, joins):
         dim = catalog[arm.table]
         dims.append(DimSpec(dim, arm.fk_col, arm.pk_col, arm.feature_cols))
-        fj = join_factored(fact.key(arm.fk_col), dim.key(arm.pk_col))
         ok = fj.found
         if arm.preds:
             dmask = arm.preds[0].mask(dim)
             for p in arm.preds[1:]:
                 dmask = dmask & p.mask(dim)
             ok = ok & jnp.take(dmask, fj.ptr)
-        joins.append(fj)
         valid = valid & ok
     star = StarJoin(fact=fact, dims=tuple(dims), joins=tuple(joins),
                     row_valid=valid)
     return star, valid
+
+
+def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery
+                  ) -> Tuple[StarJoin, jnp.ndarray, Tuple[PKIndex, ...]]:
+    """Joins + combined validity with every selection mask folded in.
+
+    Also returns the per-arm ``PKIndex`` — the quasi-static half of each
+    join, kept for ``refresh`` to extend instead of re-sorting.
+    """
+    fact = catalog[q.fact]
+    joins, indices = [], []
+    for arm in q.arms:
+        idx = pk_index(catalog[arm.table].key(arm.pk_col))
+        joins.append(idx.probe(fact.key(arm.fk_col)))
+        indices.append(idx)
+    star, valid = _assemble_star(catalog, q, tuple(joins))
+    return star, valid, tuple(indices)
 
 
 def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
@@ -166,6 +374,60 @@ def _check_aggregates(q: PredictiveQuery):
             raise ValueError("PREDICTION aggregate requires a model")
 
 
+# --------------------------------------------------------------------------
+# Quasi-static state as a pytree (the jitted programs' data argument)
+# --------------------------------------------------------------------------
+def _query_state(star: StarJoin, prefused: Optional[PrefusedStar],
+                 gid: Optional[jnp.ndarray]) -> Dict:
+    """Every array the online programs read, as one swappable pytree.
+
+    ``refresh`` replaces leaves with same-shape updates; because these are
+    jit *arguments* (not closure constants), the swapped state re-dispatches
+    into the already-compiled executables.
+    """
+    return {
+        "fact_matrix": star.fact.matrix,
+        "valid": star.row_valid,
+        "ptrs": tuple(fj.ptr for fj in star.joins),
+        "founds": tuple(fj.found for fj in star.joins),
+        "dim_mats": tuple(d.dim.matrix for d in star.dims),
+        "partials": (tuple(prefused.partials)
+                     if prefused is not None else None),
+        "h": prefused.h if prefused is not None else None,
+        "gid": gid,
+        "sharded": None,
+    }
+
+
+def _star_view(star0: StarJoin, state: Dict) -> StarJoin:
+    """The StarJoin skeleton rebound onto the state pytree's arrays."""
+    fact = dataclasses.replace(star0.fact, matrix=state["fact_matrix"])
+    dims = tuple(
+        dataclasses.replace(d, dim=dataclasses.replace(d.dim, matrix=m))
+        for d, m in zip(star0.dims, state["dim_mats"]))
+    joins = tuple(FactoredJoin(p, f)
+                  for p, f in zip(state["ptrs"], state["founds"]))
+    return StarJoin(fact=fact, dims=dims, joins=joins,
+                    row_valid=state["valid"])
+
+
+def _prefused_view(state: Dict) -> Optional[PrefusedStar]:
+    if state["partials"] is None:
+        return None
+    return PrefusedStar(tuple(state["partials"]), state["h"])
+
+
+def _program_state(state: Dict) -> Dict:
+    """The state subtree the single-device programs take.
+
+    The ``"sharded"`` subtree holds mesh-committed arrays; feeding those
+    into a single-device jit alongside host arrays would raise a device
+    mismatch, so each program crosses the jit boundary with exactly the
+    arrays it reads.
+    """
+    return {k: v for k, v in state.items() if k != "sharded"}
+
+
 def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   backend: str = "auto", join_backend: str = "auto",
                   agg_backend: str = "auto", serve_backend: str = "auto",
@@ -177,6 +439,12 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   shard_threshold_bytes: Optional[int] = None
                   ) -> CompiledQuery:
     """Plan + lower ``q`` against ``catalog`` into one jitted program.
+
+    ``catalog`` may be a :class:`~repro.core.laq.Catalog` — the versioned
+    data surface whose appends the compiled plan can absorb via
+    :meth:`CompiledQuery.refresh` — or any plain ``Mapping[str, Table]``,
+    which is auto-wrapped into a *read-only* Catalog for back-compat (the
+    pre-Catalog frozen-dict contract; such plans never have pending deltas).
 
     All of ``q.aggregates`` lower into that one program over the shared
     join/model work: ``sum``/``count``/``mean``/``min``/``max``, with mean
@@ -219,12 +487,24 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
     _check_aggregates(q)
+    cat0 = Catalog.wrap(catalog)
+    for arm in q.arms:   # teach the catalog the join contract (PK columns)
+        cat0.note_unique(arm.table, arm.pk_col)
+    source_q = q
+    opts = dict(backend=backend, join_backend=join_backend,
+                agg_backend=agg_backend, serve_backend=serve_backend,
+                select_capacity=select_capacity,
+                batches_per_update=batches_per_update,
+                memory_budget_bytes=memory_budget_bytes,
+                interpret=interpret, mesh=mesh, shard_axis=shard_axis,
+                shard_threshold_bytes=shard_threshold_bytes)
+    catalog = cat0
     if select_capacity is not None:
         fact = select(catalog[q.fact], q.fact_preds,
                       capacity=select_capacity)
         catalog = {**catalog, q.fact: fact}
         q = dataclasses.replace(q, fact_preds=())
-    star, valid = _resolve_star(catalog, q)
+    star, valid, indices = _resolve_star(catalog, q)
     fact = star.fact
     rows = jnp.sum(valid.astype(jnp.int32))
     # Offline compilation measures selectivity from the data; when a caller
@@ -289,63 +569,72 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
 
     reduce_fn = (matmul_aggregate if agg_backend == "matmul"
                  else segment_aggregate)
+    model = q.model
+    num_groups = q.num_groups
+    aggregates = q.aggregates
+    fact_desc = q.fact
 
-    def _predictions():
+    def _predictions(state):
+        star_v = _star_view(star, state)
+        pre_v = _prefused_view(state)
         if backend == "fused":
             if join_backend != "gather":
-                return predict_fused_matmul(star, prefused)
+                return predict_fused_matmul(star_v, pre_v)
             if serve_backend == "pallas":
-                return predict_fused_kernel(star, prefused,
+                return predict_fused_kernel(star_v, pre_v,
                                             interpret=interpret)
-            return predict_fused(star, prefused)
+            return predict_fused(star_v, pre_v)
         if join_backend != "gather":
-            return predict_nonfused_matmul(star, q.model)
+            return predict_nonfused_matmul(star_v, model)
         if serve_backend == "pallas":   # resolve_ guarantees a tree model
-            return predict_nonfused_kernel(star, q.model,
+            return predict_nonfused_kernel(star_v, model,
                                            interpret=interpret)
-        return predict_nonfused(star, q.model)
+        return predict_nonfused(star_v, model)
 
-    def _agg_values(agg, pred):
+    def _agg_values(agg, pred, fact_v, valid_v):
         """Per-row values for one aggregate (sum-masked for additive ops)."""
         if agg.value == PREDICTION:
             return pred                          # already validity-masked
-        vals = eval_value(fact, agg.value,
-                          query=f"{agg.name!r} on {q.fact!r}")
+        vals = eval_value(fact_v, agg.value,
+                          query=f"{agg.name!r} on {fact_desc!r}")
         if agg.op in ("min", "max"):
             return vals       # invalid rows are masked by gid / ±inf below
-        return jnp.where(valid, vals, 0.0)
+        return jnp.where(valid_v, vals, 0.0)
 
-    def _online():
-        pred = _predictions() if q.model is not None else None
+    def _online(state):
+        fact_v = dataclasses.replace(fact, matrix=state["fact_matrix"])
+        valid_v = state["valid"]
+        gid_v = state["gid"]
+        pred = _predictions(state) if model is not None else None
         out = {}
         # One shared count reduction backs every count/mean aggregate.
         count = None
-        if any(a.op in ("count", "mean") for a in q.aggregates):
-            ones = valid.astype(jnp.float32)
-            count = (reduce_fn(gid, ones, q.num_groups) if gid is not None
-                     else jnp.sum(ones))
-        for agg in q.aggregates:
+        if any(a.op in ("count", "mean") for a in aggregates):
+            ones = valid_v.astype(jnp.float32)
+            count = (reduce_fn(gid_v, ones, num_groups)
+                     if gid_v is not None else jnp.sum(ones))
+        for agg in aggregates:
             if agg.op == "count":
                 out[agg.name] = count
                 continue
-            vals = _agg_values(agg, pred)
-            if gid is not None:
+            vals = _agg_values(agg, pred, fact_v, valid_v)
+            if gid_v is not None:
                 if agg.op in ("min", "max"):
                     # Invalid rows sit in the dropped overflow segment, so
                     # no value masking is needed; min/max lower through
                     # segment ops on both aggregation backends (Fig. 4's
                     # one-hot matmul is additive-only).
-                    out[agg.name] = segment_reduce(gid, vals, q.num_groups,
+                    out[agg.name] = segment_reduce(gid_v, vals, num_groups,
                                                    agg.op)
                 elif agg.op == "mean":
-                    s = reduce_fn(gid, vals, q.num_groups)
+                    s = reduce_fn(gid_v, vals, num_groups)
                     c = jnp.maximum(count, 1.0)
                     out[agg.name] = s / (c[:, None] if s.ndim > 1 else c)
                 else:
-                    out[agg.name] = reduce_fn(gid, vals, q.num_groups)
+                    out[agg.name] = reduce_fn(gid_v, vals, num_groups)
             elif agg.op in ("min", "max"):
                 fill = jnp.inf if agg.op == "min" else -jnp.inf
-                mask = valid[:, None] if vals.ndim > 1 else valid
+                mask = valid_v[:, None] if vals.ndim > 1 else valid_v
                 r = (jnp.min if agg.op == "min" else jnp.max)(
                     jnp.where(mask, vals, fill), axis=0)
                 out[agg.name] = jnp.where(jnp.isfinite(r), r, 0.0)
@@ -356,25 +645,45 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                 out[agg.name] = jnp.sum(vals, axis=0)
         return out
 
+    state = _query_state(star, prefused, gid)
+    online_jit = jax.jit(_online)
+    pred_jit = jax.jit(_predictions)
+
+    def run_fn(st):
+        return online_jit(_program_state(st))
+
     predict_jit = predict_rows_jit = None
+    sp = None
     if q.model is not None:
-        predict_jit = jax.jit(_predictions)
+        def predict_jit(st):
+            return pred_jit(_program_state(st))
+
         if mesh is not None:
-            fn, plan = _make_predict_rows_sharded(
+            fwd, plan, sharded_state, sp = _make_predict_rows_sharded(
                 star, q.model, prefused, backend, plan, mesh, shard_axis,
                 shard_threshold_bytes)
-            predict_rows_jit = jax.jit(fn)
+            state["sharded"] = sharded_state
+            fwd_jit = jax.jit(fwd)
+
+            def predict_rows_jit(row_ids, st):
+                return fwd_jit(row_ids, st["sharded"])
         else:
-            predict_rows_jit = jax.jit(
-                _make_predict_rows(star, q.model, prefused, backend,
-                                   serve_backend, interpret))
+            rows_jit = jax.jit(
+                _make_predict_rows(star, q.model, backend, serve_backend,
+                                   interpret))
+
+            def predict_rows_jit(row_ids, st):
+                return rows_jit(row_ids, _program_state(st))
 
     return CompiledQuery(
         query=q, plan=plan, backend=backend, join_backend=join_backend,
         agg_backend=agg_backend, serve_backend=serve_backend, star=star,
         prefused=prefused, selectivity=sel, group_codes=uniq, _gid=gid,
-        _rows=rows, _run=jax.jit(_online), _predict=predict_jit,
-        _predict_rows=predict_rows_jit)
+        _rows=rows, _run=run_fn, _predict=predict_jit,
+        _predict_rows=predict_rows_jit, _state=state, catalog=cat0,
+        versions={n: cat0.version(n)
+                  for n in sorted({q.fact} | {a.table for a in q.arms})},
+        _indices=indices, _source=source_q, _opts=opts, _sp=sp)
 
 
 def _make_predict_rows_sharded(star: StarJoin, model,
@@ -384,10 +693,12 @@ def _make_predict_rows_sharded(star: StarJoin, model,
                                shard_threshold_bytes: Optional[int]):
     """Sharded serving path: row tables placed on the mesh, one shard_map.
 
-    Returns ``(predict_rows_fn, plan)`` with the per-arm placement recorded
-    on the plan.  The FK→row pointers were resolved offline
-    (``join_factored``), so the forward uses global-pointer device-local
-    gathers (see ``make_predict_rows_forward``).
+    Returns ``(forward, plan, sharded_state, sp)`` with the per-arm
+    placement recorded on the plan.  The FK→row pointers were resolved
+    offline (``join_factored``), so the forward uses global-pointer
+    device-local gathers (see ``make_predict_rows_forward``); the placed
+    arrays live in ``sharded_state`` so ``refresh`` can re-place updated
+    rows and re-dispatch without retracing.
     """
     if backend == "fused":
         tables = list(prefused.partials)
@@ -402,54 +713,61 @@ def _make_predict_rows_sharded(star: StarJoin, model,
         mesh, [(d.fk_col, None, None, tbl)
                for d, tbl in zip(star.dims, tables)],
         h, specs, shard_axis=shard_axis)
-    fn = make_predict_rows_forward(
-        sp, model, backend, [fj.ptr for fj in star.joins],
+    fn = make_predict_rows_forward(sp, model, backend)
+    sharded_state = predict_rows_state(
+        sp, tables, [fj.ptr for fj in star.joins],
         [fj.found for fj in star.joins], star.row_valid)
-    return fn, plan
+    return fn, plan, sharded_state, sp
 
 
-def _make_predict_rows(star: StarJoin, model, prefused: Optional[PrefusedStar],
-                       backend: str, serve_backend: str = "jnp",
+def _make_predict_rows(star: StarJoin, model, backend: str,
+                       serve_backend: str = "jnp",
                        interpret: bool = False):
-    """Row-batched prediction: the serving path (fact rows as requests)."""
+    """Row-batched prediction: the serving path (fact rows as requests).
+
+    The returned function takes ``(row_ids, state)`` — the quasi-static
+    pointers/partials flow from the state pytree so a refresh re-dispatches
+    into the same compiled program.
+    """
     if backend == "fused" and serve_backend == "pallas":
-        def fn(row_ids):
+        def fn(row_ids, state):
             from repro.kernels import fused_star_gather
-            v = jnp.take(star.row_valid, row_ids)
-            ptrs = jnp.stack([jnp.take(fj.ptr, row_ids)
-                              for fj in star.joins])
-            found = jnp.stack([jnp.take(fj.found, row_ids)
-                               for fj in star.joins]).astype(jnp.int32)
-            out = fused_star_gather(ptrs, found, list(prefused.partials),
-                                    prefused.h, interpret=interpret)
+            v = jnp.take(state["valid"], row_ids)
+            ptrs = jnp.stack([jnp.take(p, row_ids)
+                              for p in state["ptrs"]])
+            found = jnp.stack([jnp.take(f, row_ids)
+                               for f in state["founds"]]).astype(jnp.int32)
+            out = fused_star_gather(ptrs, found, list(state["partials"]),
+                                    state["h"], interpret=interpret)
             return out * v[:, None].astype(out.dtype)
         return fn
 
     if backend == "fused":
-        def fn(row_ids):
-            v = jnp.take(star.row_valid, row_ids)
+        def fn(row_ids, state):
+            v = jnp.take(state["valid"], row_ids)
             acc = None
-            for fj, part in zip(star.joins, prefused.partials):
-                ptr = jnp.take(fj.ptr, row_ids)
-                hit = jnp.take(fj.found, row_ids)
+            for ptr0, found0, part in zip(state["ptrs"], state["founds"],
+                                          state["partials"]):
+                ptr = jnp.take(ptr0, row_ids)
+                hit = jnp.take(found0, row_ids)
                 p = jnp.take(part, ptr, axis=0) * hit[:, None].astype(
                     part.dtype)
                 acc = p if acc is None else acc + p
             acc = acc * v[:, None].astype(acc.dtype)
-            if prefused.h is None:
+            if state["h"] is None:
                 return acc
-            eq = (acc == prefused.h[None, :].astype(acc.dtype))
+            eq = (acc == state["h"][None, :].astype(acc.dtype))
             return eq.astype(acc.dtype) * v[:, None].astype(acc.dtype)
         return fn
 
-    def fn(row_ids):
-        v = jnp.take(star.row_valid, row_ids)
+    def fn(row_ids, state):
+        v = jnp.take(state["valid"], row_ids)
         parts = []
-        for d, fj in zip(star.dims, star.joins):
-            proj = d.dim.matrix @ mapping_matrix(d.dim.columns,
-                                                 d.feature_cols)
-            ptr = jnp.take(fj.ptr, row_ids)
-            hit = jnp.take(fj.found, row_ids)
+        for d, mat, ptr0, found0 in zip(star.dims, state["dim_mats"],
+                                        state["ptrs"], state["founds"]):
+            proj = mat @ mapping_matrix(d.dim.columns, d.feature_cols)
+            ptr = jnp.take(ptr0, row_ids)
+            hit = jnp.take(found0, row_ids)
             parts.append(jnp.take(proj, ptr, axis=0)
                          * hit[:, None].astype(proj.dtype))
         t = jnp.concatenate(parts, axis=1) * v[:, None].astype(jnp.float32)

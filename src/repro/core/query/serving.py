@@ -41,6 +41,20 @@ probe + gather + psum, bit-exact vs the single-device jnp path.  Buckets
 are rounded up to multiples of the DP size so every padded batch divides
 the mesh.  The Pallas lowering is mutually exclusive with ``mesh`` (the
 sharded block kernels are the TPU calibration follow-up).
+
+Incremental maintenance
+-----------------------
+The quasi-static state (PK indices, predicate masks, prefused partials) is
+a *call-time pytree argument* of the bucket programs, not a closure
+constant, and the runtime records the :class:`~repro.core.laq.Catalog`
+versions it was built against.  :meth:`ServingRuntime.refresh` applies
+pending dimension appends/updates by delta — sorted-merge
+``PKIndex.extend``, ``prefuse_rows`` over only the new rows, in-place mask
+scatters, and (sharded) re-indexing of only the shard blocks that own the
+appended tail — so the already-traced bucket programs keep serving with
+zero recompiles.  Capacity growth changes shapes and falls back to a full
+rebuild + replan (divisibility boundaries re-checked), with the decision
+recorded on ``plan.reason``.
 """
 from __future__ import annotations
 
@@ -55,7 +69,8 @@ import numpy as np
 
 from ...launch.mesh import dp_size
 from ..fusion.operators import DecisionTreeGEMM
-from ..fusion.pipeline import prefuse_dims
+from ..fusion.pipeline import prefuse_dims, prefuse_rows
+from ..laq.catalog import Catalog, CatalogHistoryError, changed_spans
 from ..laq.join import PKIndex, pk_index
 from ..laq.projection import mapping_matrix
 from ..laq.star import DimSpec
@@ -63,7 +78,8 @@ from ..laq.table import PAD_KEY, Table
 from .ir import PredictiveQuery
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
-from .sharding import (ShardedPrefusedPartials, make_serving_forward,
+from .sharding import (ShardedPrefusedPartials, extend_sharded_arm,
+                       make_serving_forward, serving_arm_state,
                        shard_prefused_partials)
 
 #: Default padding buckets: small interactive batches, mid-size batches, and
@@ -94,12 +110,17 @@ class _ArmIndex:
     table: Optional[jnp.ndarray]  # (r, w) partial; None on the mesh path
 
 
-def _lookup(arm: _ArmIndex, fk: jnp.ndarray
-            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """PK–FK pointer lookup for a request column, with dim preds folded."""
-    fj = arm.index.probe(fk)
-    hit = fj.found & jnp.take(arm.dmask, fj.ptr)
-    return fj.ptr, hit
+def _mask_rows(dim: Table, preds, ids: np.ndarray) -> jnp.ndarray:
+    """The dim-predicate mask evaluated on just the (live) rows ``ids``."""
+    sub = Table(dim.name, dim.columns,
+                jnp.take(dim.matrix, jnp.asarray(ids), axis=0),
+                {c: jnp.take(v, jnp.asarray(ids))
+                 for c, v in dim.keys.items()},
+                int(ids.shape[0]))
+    m = jnp.ones((int(ids.shape[0]),), bool)
+    for p in preds:
+        m = m & p.mask(sub)
+    return m
 
 
 class ServingRuntime:
@@ -115,26 +136,59 @@ class ServingRuntime:
                  serve_backend: str, buckets: Tuple[int, ...],
                  arms: Tuple[_ArmIndex, ...], model, h: Optional[jnp.ndarray],
                  interpret: bool, donate: bool, sync_stats: bool = True,
-                 sharded: Optional[ShardedPrefusedPartials] = None):
+                 sharded: Optional[ShardedPrefusedPartials] = None,
+                 catalog: Optional[Catalog] = None,
+                 mesh=None, shard_axis: str = "model",
+                 shard_threshold_bytes: Optional[int] = None):
         self.query = query
         self.plan = plan
         self.backend = backend                # "fused" | "nonfused"
         self.serve_backend = serve_backend    # "jnp" | "pallas"
         self.buckets = buckets
-        self._arms = arms
         self._model = model
-        self._h = h
         self._interpret = interpret
         self._sync_stats = sync_stats
         self._trace_count = 0
         self._lat: Dict[int, Deque[float]] = {}
         self._compile_s: Dict[int, float] = {}
+        self._donate = donate
+        self.catalog = catalog
+        self.versions: Dict[str, int] = (
+            {a.table: catalog.version(a.table) for a in query.arms}
+            if catalog is not None else {})
+        self._mesh = mesh
+        self._shard_axis = shard_axis
+        self._shard_threshold_bytes = shard_threshold_bytes
+        self._install(arms, h, sharded)
+
+    def _install(self, arms: Tuple[_ArmIndex, ...],
+                 h: Optional[jnp.ndarray],
+                 sharded: Optional[ShardedPrefusedPartials]):
+        """Bind quasi-static state + a fresh jit cache (build and rebuild).
+
+        The per-arm state is passed into the traced program as an argument
+        (see ``_forward``), so a same-shape refresh swaps ``_state`` and
+        re-dispatches into the existing executables; ``_install`` itself is
+        only called when the program *must* be rebuilt (first build, or a
+        shape-changing refresh), which is why it resets the trace count.
+        """
+        self._arms = arms
+        self._h = h
         self.sharded = sharded
         self._forward_impl = (
-            make_serving_forward(sharded, model, backend)
+            make_serving_forward(sharded, self._model, self.backend)
             if sharded is not None else None)
-        donate_argnums = (0,) if donate else ()
+        self._state = {"arms": self._arm_state(), "h": self._h}
+        self._trace_count = 0
+        donate_argnums = (0,) if self._donate else ()
         self._jit = jax.jit(self._forward, donate_argnums=donate_argnums)
+
+    def _arm_state(self) -> Tuple:
+        if self.sharded is not None:
+            return serving_arm_state(self.sharded)
+        return tuple((a.index.sorted_pk, a.index.order,
+                      a.dmask.astype(jnp.bool_), a.table)
+                     for a in self._arms)
 
     # -- sharding introspection ----------------------------------------------
     @property
@@ -154,7 +208,12 @@ class ServingRuntime:
 
     @property
     def num_compiles(self) -> int:
-        """Traces taken so far — bounded by ``len(buckets)`` for life."""
+        """Traces taken since the jit cache was (re)built.
+
+        Bounded by ``len(buckets)`` per cache generation: a delta
+        ``refresh`` swaps same-shape state and never adds a trace; only a
+        shape-changing rebuild starts a fresh cache (count restarts at 0).
+        """
         return self._trace_count
 
     def jit_cache_size(self) -> Optional[int]:
@@ -189,45 +248,47 @@ class ServingRuntime:
         return out
 
     # -- the compiled program ------------------------------------------------
-    def _forward(self, fks: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
-        # Python side effect: runs once per trace (i.e. once per bucket).
+    def _forward(self, fks: Tuple[jnp.ndarray, ...], state) -> jnp.ndarray:
+        # Python side effect: runs once per trace (i.e. once per bucket;
+        # the quasi-static state is an argument, so a same-shape refresh
+        # never re-enters here).
         self._trace_count += 1
         if self._forward_impl is not None:   # sharded shard_map program
-            return self._forward_impl(fks)
+            return self._forward_impl(fks, state["arms"])
         ptrs, hits = [], []
-        for arm, fk in zip(self._arms, fks):
-            ptr, hit = _lookup(arm, fk)
-            ptrs.append(ptr)
-            hits.append(hit)
+        for (sorted_pk, order, dmask, _), fk in zip(state["arms"], fks):
+            fj = PKIndex(sorted_pk, order).probe(fk)
+            ptrs.append(fj.ptr)
+            hits.append(fj.found & jnp.take(dmask, fj.ptr))
         valid = hits[0]
         for hit in hits[1:]:
             valid = valid & hit
+        tables = [t for (_, _, _, t) in state["arms"]]
         if self.backend == "fused":
-            out = self._online_fused(ptrs, hits, valid)
+            out = self._online_fused(ptrs, hits, valid, tables, state["h"])
         else:
-            out = self._online_nonfused(ptrs, hits, valid)
+            out = self._online_nonfused(ptrs, hits, valid, tables)
         return out * valid[:, None].astype(out.dtype)
 
-    def _online_fused(self, ptrs, hits, valid) -> jnp.ndarray:
-        tables = [a.table for a in self._arms]
+    def _online_fused(self, ptrs, hits, valid, tables, h) -> jnp.ndarray:
         if self.serve_backend == "pallas":
             from repro.kernels import fused_star_gather
             return fused_star_gather(
                 jnp.stack(ptrs), jnp.stack(hits).astype(jnp.int32),
-                tables, self._h, interpret=self._interpret)
+                tables, h, interpret=self._interpret)
         acc = None
         for ptr, hit, tbl in zip(ptrs, hits, tables):
             part = jnp.take(tbl, ptr, axis=0) * hit[:, None].astype(tbl.dtype)
             acc = part if acc is None else acc + part
-        if self._h is None:
+        if h is None:
             return acc
         acc = acc * valid[:, None].astype(acc.dtype)
-        return (acc == self._h[None, :].astype(acc.dtype)).astype(acc.dtype)
+        return (acc == h[None, :].astype(acc.dtype)).astype(acc.dtype)
 
-    def _online_nonfused(self, ptrs, hits, valid) -> jnp.ndarray:
+    def _online_nonfused(self, ptrs, hits, valid, tables) -> jnp.ndarray:
         parts = []
-        for arm, ptr, hit in zip(self._arms, ptrs, hits):
-            rows = jnp.take(arm.table, ptr, axis=0)
+        for tbl, ptr, hit in zip(tables, ptrs, hits):
+            rows = jnp.take(tbl, ptr, axis=0)
             parts.append(rows * hit[:, None].astype(rows.dtype))
         t = jnp.concatenate(parts, axis=1) * valid[:, None].astype(jnp.float32)
         if (self.serve_backend == "pallas"
@@ -237,6 +298,147 @@ class ServingRuntime:
             return tree_predict(t, m.F, m.v, m.H, m.h,
                                 interpret=self._interpret)
         return self._model.apply(t)
+
+    # -- incremental maintenance --------------------------------------------
+    def refresh(self) -> str:
+        """Apply pending catalog deltas to the serving state, in place.
+
+        Same-shape appends/updates take the delta path: per-arm
+        ``PKIndex.extend`` sorted merges (sharded arms re-index only the
+        shard blocks owning the appended tail), ``prefuse_rows`` over just
+        the changed dimension rows, and predicate-mask scatters — the state
+        pytree is swapped and the already-traced bucket programs keep
+        serving with **zero new compiles** (``num_compiles`` unchanged).
+        Capacity growth falls back to a full rebuild + replan (placement
+        divisibility re-checked) with a fresh jit cache, so
+        ``num_compiles`` restarts from 0.  Either way the latency windows
+        reset: post-refresh ``latency_stats`` never mix pre-refresh
+        samples.  Returns the decision line (also appended to
+        ``plan.reason``).
+        """
+        if self.catalog is None:
+            return self._note("refresh=no-op(detached: no catalog)")
+        cat = self.catalog
+        try:
+            changed = {
+                a.table: cat.deltas_since(a.table,
+                                          self.versions.get(a.table, 0))
+                for a in self.query.arms}
+        except CatalogHistoryError:
+            return self._rebuild("history-compacted: runtime staler than "
+                                 "the delta log")
+        changed = {n: d for n, d in changed.items() if d}
+        if not changed:
+            return self._note("refresh=no-op(versions unchanged)")
+        if any(changed_spans(d)[2] for d in changed.values()):
+            grown = sorted(n for n, d in changed.items()
+                           if changed_spans(d)[2])
+            return self._rebuild(f"capacity-growth:{','.join(grown)}")
+        line = self._refresh_delta(changed)
+        self._reset_stats()
+        return line
+
+    def _note(self, line: str) -> str:
+        # Bounded decision trail: base plan reason + the last few refresh
+        # lines — a runtime refreshed per streaming batch must not grow
+        # its explain() string (and memory) without limit.
+        if not hasattr(self, "_refresh_notes"):
+            self._refresh_notes = collections.deque(maxlen=8)
+        if not self._refresh_notes:
+            self._base_reason = self.plan.reason
+        self._refresh_notes.append(line)
+        self.plan = dataclasses.replace(
+            self.plan, reason="; ".join([self._base_reason,
+                                         *self._refresh_notes]))
+        return line
+
+    def _reset_stats(self):
+        """Latency percentiles restart at a refresh boundary (pre-refresh
+        traces/compiles would pollute the post-refresh distribution)."""
+        self._lat.clear()
+        self._compile_s.clear()
+
+    def _rebuild(self, why: str) -> str:
+        q = self.query
+        dims = [DimSpec(self.catalog[a.table], a.fk_col, a.pk_col,
+                        a.feature_cols) for a in q.arms]
+        # Re-plan from the *base* reason (accumulated refresh notes would
+        # otherwise be baked into the new plan's base and grow unbounded).
+        base_plan = (dataclasses.replace(self.plan,
+                                         reason=self._base_reason)
+                     if getattr(self, "_refresh_notes", None)
+                     else self.plan)
+        arms, h, sharded, plan = _serving_artifacts(
+            self.catalog, q, dims, self._model, self.backend, base_plan,
+            mesh=self._mesh, shard_axis=self._shard_axis,
+            shard_threshold_bytes=self._shard_threshold_bytes)
+        self.plan = plan
+        if hasattr(self, "_refresh_notes"):
+            self._refresh_notes.clear()   # replanned: fresh decision trail
+        self._install(arms, h, sharded)
+        self._reset_stats()
+        self.versions = {a.table: self.catalog.version(a.table)
+                         for a in q.arms}
+        return self._note(f"refresh=rebuild({why}; replanned, jit cache "
+                          "reset)")
+
+    def _refresh_delta(self, changed) -> str:
+        q = self.query
+        cat = self.catalog
+        dims = [DimSpec(cat[a.table], a.fk_col, a.pk_col, a.feature_cols)
+                for a in q.arms]
+        new_arms = list(self._arms)
+        new_sharded_arms = (list(self.sharded.arms)
+                            if self.sharded is not None else None)
+        for j, arm in enumerate(q.arms):
+            if arm.table not in changed:
+                continue
+            dim = cat[arm.table]
+            span, dirty, _ = changed_spans(changed[arm.table])
+            ids = set(dirty)
+            if span is not None:
+                ids.update(range(span[0], span[1]))
+            if not ids:        # e.g. history contains only no-op deltas
+                continue
+            ids = np.asarray(sorted(ids), np.int32)
+            lo, hi = int(ids.min()), int(ids.max()) + 1
+            # Partial (fused) / projected-feature (nonfused) rows: only the
+            # changed dimension rows are recomputed, then scattered — the
+            # delta half of Eq. 1 maintenance, bit-exact vs a cold prefuse.
+            old = self._arms[j]
+            if self.backend == "fused":
+                rows = prefuse_rows(dims, self._model, j,
+                                    jnp.asarray(ids))
+            else:
+                m = mapping_matrix(dim.columns, arm.feature_cols)
+                rows = jnp.take(dim.matrix, jnp.asarray(ids), axis=0) @ m
+            table = (old.table if old.table is not None
+                     else new_sharded_arms[j].table)
+            table = table.at[jnp.asarray(ids)].set(rows)
+            dmask = old.dmask.at[jnp.asarray(ids)].set(
+                _mask_rows(dim, arm.preds, ids))
+            if new_sharded_arms is not None:
+                new_sharded_arms[j] = extend_sharded_arm(
+                    self.sharded, j, table, dim.key(arm.pk_col), dmask,
+                    lo, hi)
+                new_arms[j] = dataclasses.replace(old, dmask=dmask)
+            else:
+                index = old.index
+                if span is not None:
+                    index = index.extend(
+                        dim.key(arm.pk_col)[span[0]:span[1]],
+                        np.arange(span[0], span[1]))
+                new_arms[j] = dataclasses.replace(
+                    old, index=index, dmask=dmask, table=table)
+        self._arms = tuple(new_arms)
+        if new_sharded_arms is not None:
+            self.sharded = dataclasses.replace(
+                self.sharded, arms=tuple(new_sharded_arms))
+        self._state = {"arms": self._arm_state(), "h": self._h}
+        self.versions = {a.table: cat.version(a.table) for a in q.arms}
+        touched = ",".join(f"{n}+{len(changed[n])}" for n in sorted(changed))
+        return self._note(f"refresh=delta({touched}; shapes kept, "
+                          "0 new compiles)")
 
     # -- request entry points ------------------------------------------------
     def serve(self, requests) -> jnp.ndarray:
@@ -273,7 +475,7 @@ class ServingRuntime:
             for f in fks)
         traces_before = self._trace_count
         t0 = time.perf_counter()
-        out = self._jit(padded)
+        out = self._jit(padded, self._state)
         if self._sync_stats:
             # Wall-clock percentiles need a device fence; latency-sensitive
             # callers pass sync_stats=False to keep async dispatch (stats
@@ -326,6 +528,60 @@ def requests_from_rows(fact: Table, q: PredictiveQuery, row_ids
             for a in q.arms}
 
 
+def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
+                       dims: Sequence[DimSpec], model, backend: str,
+                       plan: QueryPlan, *, mesh=None,
+                       shard_axis: str = "model",
+                       shard_threshold_bytes: Optional[int] = None):
+    """The quasi-static serving state: prefused/projected tables, per-arm
+    PK indices + predicate masks, and (mesh) the placed shards.
+
+    Shared by the cold ``compile_serving`` build and the runtime's
+    shape-changing ``refresh`` rebuild, so both paths place and index the
+    state identically (placement replanned from the *current* table
+    shapes — the divisibility boundary is re-checked on every rebuild).
+    Returns ``(arms, h, sharded, plan)``.
+    """
+    if backend == "fused":
+        pre = prefuse_dims(dims, model)
+        tables = pre.partials
+        h = pre.h
+    else:
+        tables = tuple(
+            d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
+            for d in dims)
+        h = None
+
+    arms = []
+    masks = []
+    for arm, d, tbl in zip(q.arms, dims, tables):
+        dmask = d.dim.valid_mask()
+        for p in arm.preds:
+            dmask = dmask & p.mask(d.dim)
+        masks.append(dmask)
+        # On the mesh path the global index/table are dead weight: the
+        # shard_map forward probes the per-shard slices instead.
+        arms.append(_ArmIndex(
+            fk_col=arm.fk_col,
+            index=None if mesh is not None
+            else pk_index(d.dim.key(arm.pk_col)),
+            dmask=dmask,
+            table=None if mesh is not None else tbl))
+
+    sharded = None
+    if mesh is not None:
+        specs, plan = place_tables(mesh, tables, plan, axis=shard_axis,
+                                   threshold_bytes=shard_threshold_bytes)
+        sharded = shard_prefused_partials(
+            mesh,
+            [(arm.fk_col, d.dim.key(arm.pk_col), dmask, tbl)
+             for arm, d, dmask, tbl in zip(q.arms, dims, masks, tables)],
+            h, specs, shard_axis=shard_axis)
+        if h is not None:
+            h = sharded.h
+    return tuple(arms), h, sharded, plan
+
+
 def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                     backend: str = "auto", serve_backend: str = "auto",
                     buckets: Sequence[int] = DEFAULT_BUCKETS,
@@ -364,6 +620,12 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     and each bucket's program runs as one ``shard_map`` of device-local
     probes + gathers.  ``mesh`` is incompatible with
     ``serve_backend="pallas"``.
+
+    ``catalog`` may be a :class:`~repro.core.laq.Catalog`, whose appends
+    and column updates the runtime absorbs in place via
+    :meth:`ServingRuntime.refresh`; plain mappings are auto-wrapped into a
+    read-only Catalog (the pre-Catalog frozen contract — such runtimes
+    never have pending deltas and refresh is a no-op).
     """
     if q.model is None:
         raise ValueError("compile_serving requires a model head")
@@ -374,6 +636,9 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
+    catalog = Catalog.wrap(catalog)
+    for arm in q.arms:   # teach the catalog the join contract (PK columns)
+        catalog.note_unique(arm.table, arm.pk_col)
     buckets = tuple(sorted({int(b) for b in buckets}))
     if not buckets or buckets[0] < 1:
         raise ValueError(f"buckets must be positive ints, got {buckets!r}")
@@ -401,49 +666,17 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             plan, serve_backend=serve_backend,
             reason=f"{plan.reason}; serve={serve_backend} (caller override)")
 
-    if backend == "fused":
-        pre = prefuse_dims(dims, q.model)
-        tables = pre.partials
-        h = pre.h
-    else:
-        tables = tuple(
-            d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
-            for d in dims)
-        h = None
-
-    arms = []
-    masks = []
-    for arm, d, tbl in zip(q.arms, dims, tables):
-        dmask = d.dim.valid_mask()
-        for p in arm.preds:
-            dmask = dmask & p.mask(d.dim)
-        masks.append(dmask)
-        # On the mesh path the global index/table are dead weight: the
-        # shard_map forward probes the per-shard slices instead.
-        arms.append(_ArmIndex(
-            fk_col=arm.fk_col,
-            index=None if mesh is not None
-            else pk_index(d.dim.key(arm.pk_col)),
-            dmask=dmask,
-            table=None if mesh is not None else tbl))
-
-    sharded = None
-    if mesh is not None:
-        specs, plan = place_tables(mesh, tables, plan, axis=shard_axis,
-                                   threshold_bytes=shard_threshold_bytes)
-        sharded = shard_prefused_partials(
-            mesh,
-            [(arm.fk_col, d.dim.key(arm.pk_col), dmask, tbl)
-             for arm, d, dmask, tbl in zip(q.arms, dims, masks, tables)],
-            h, specs, shard_axis=shard_axis)
-        if h is not None:
-            h = sharded.h
+    arms, h, sharded, plan = _serving_artifacts(
+        catalog, q, dims, q.model, backend, plan, mesh=mesh,
+        shard_axis=shard_axis, shard_threshold_bytes=shard_threshold_bytes)
 
     if donate is None:
         donate = (mesh is None
                   and jax.default_backend() in ("tpu", "gpu"))
     return ServingRuntime(query=q, plan=plan, backend=backend,
                           serve_backend=serve_backend, buckets=buckets,
-                          arms=tuple(arms), model=q.model, h=h,
+                          arms=arms, model=q.model, h=h,
                           interpret=interpret, donate=donate,
-                          sync_stats=sync_stats, sharded=sharded)
+                          sync_stats=sync_stats, sharded=sharded,
+                          catalog=catalog, mesh=mesh, shard_axis=shard_axis,
+                          shard_threshold_bytes=shard_threshold_bytes)

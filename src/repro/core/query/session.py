@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..fusion.operators import DecisionTreeGEMM, LinearOperator
+from ..laq.catalog import Catalog
 from ..laq.selection import Pred
 from ..laq.table import Table
 from .compile import CompiledQuery, compile_query
@@ -309,22 +310,33 @@ class Session:
     Holds everything the three execution modes share — the catalog, the
     (optional) device mesh with its shard axis/threshold, kernel interpret
     mode — so call sites describe *queries*, not plumbing.  Compiled plans
-    and serving runtimes are cached by :func:`query_key` + options;
-    identical pipelines never re-trace, whether they were built fluently,
-    by hand, or re-built from a registry.
+    and serving runtimes are cached by :func:`query_key` + options **and
+    the participating tables' catalog versions**; identical pipelines never
+    re-trace, whether they were built fluently, by hand, or re-built from a
+    registry, and a stale entry can never be served: after a
+    ``catalog.append``, the next lookup sees the version mismatch and
+    brings the cached artifact up to date *in place* via its ``refresh()``
+    (the delta path — no retrace while shapes hold) before returning it.
+
+    ``catalog`` may be a mutable :class:`~repro.core.laq.Catalog` (the
+    versioned data surface — appends/updates flow through to every cached
+    plan) or any plain ``Mapping[str, Table]``, which auto-wraps read-only
+    for back-compat with the pre-Catalog frozen-dict Sessions.
     """
 
-    def __init__(self, catalog: Mapping[str, Table], *, mesh=None,
-                 shard_axis: str = "model",
+    def __init__(self, catalog: "Mapping[str, Table] | Catalog", *,
+                 mesh=None, shard_axis: str = "model",
                  shard_threshold_bytes: Optional[int] = None,
                  interpret: bool = False):
-        self.catalog: Dict[str, Table] = dict(catalog)
+        self.catalog: Catalog = Catalog.wrap(catalog)
         self.mesh = mesh
         self.shard_axis = shard_axis
         self.shard_threshold_bytes = shard_threshold_bytes
         self.interpret = interpret
-        self._plans: Dict[tuple, CompiledQuery] = {}
-        self._runtimes: Dict[tuple, ServingRuntime] = {}
+        # key → (versions-at-build, artifact); versions are re-checked (and
+        # the artifact refreshed) on every hit.
+        self._plans: Dict[tuple, Tuple[tuple, CompiledQuery]] = {}
+        self._runtimes: Dict[tuple, Tuple[tuple, ServingRuntime]] = {}
 
     # -- builders ------------------------------------------------------------
     def query(self, fact: str) -> QueryBuilder:
@@ -370,37 +382,87 @@ class Session:
         return dict(mesh=self.mesh, shard_axis=self.shard_axis,
                     shard_threshold_bytes=self.shard_threshold_bytes)
 
+    def _tables_of(self, q: PredictiveQuery, *, serving: bool = False
+                   ) -> Tuple[str, ...]:
+        """The catalog tables whose versions gate ``q``'s cached artifacts.
+
+        Serving runtimes never touch the fact table (requests are FK
+        tuples), so fact appends leave them valid.
+        """
+        names = {a.table for a in q.arms}
+        if not serving:
+            names.add(q.fact)
+        return tuple(sorted(names))
+
     def compile(self, q: PredictiveQuery, **overrides) -> CompiledQuery:
-        """The compiled plan for ``q`` (structurally cached).
+        """The compiled plan for ``q`` (structurally + version cached).
 
         ``overrides`` are :func:`compile_query` keyword arguments
         (``backend``, ``agg_backend``, ...) and participate in the cache
         key, so requesting a different backend compiles a sibling plan
-        instead of returning the first one.
+        instead of returning the first one.  A cached plan built against
+        older catalog versions is refreshed in place before it is returned
+        — the cache can never hand out pre-append state.
         """
         opts = {"interpret": self.interpret, **self._mesh_kwargs(),
                 **overrides}
         key = (query_key(q), _opts_key(opts))
+        versions = self.catalog.versions(self._tables_of(q))
         hit = self._plans.get(key)
         if hit is not None:
-            return hit
+            built_at, compiled = hit
+            if built_at != versions:
+                compiled.refresh()
+                self._plans[key] = (versions, compiled)
+            return compiled
         compiled = compile_query(self.catalog, q, **opts)
         if not compiled.is_traced:
-            self._plans[key] = compiled   # traced plans hold tracers
-        return compiled
+            self._plans[key] = (versions, compiled)  # traced plans hold
+        return compiled                              # tracers: never cached
 
     def serving(self, q: PredictiveQuery, *,
                 buckets: Sequence[int] = DEFAULT_BUCKETS,
                 **overrides) -> ServingRuntime:
-        """The dynamic-batch serving runtime for ``q`` (cached)."""
+        """The dynamic-batch serving runtime for ``q`` (cached).
+
+        Version-gated like :meth:`compile`: pending dimension appends are
+        applied via ``ServingRuntime.refresh`` before the runtime is
+        returned, so cached runtimes never serve pre-append partials.
+        """
         opts = {"interpret": self.interpret, **self._mesh_kwargs(),
                 **overrides}
         key = ("serve", query_key(q), tuple(buckets), _opts_key(opts))
+        versions = self.catalog.versions(self._tables_of(q, serving=True))
         hit = self._runtimes.get(key)
-        if hit is None:
-            hit = compile_serving(self.catalog, q, buckets=buckets, **opts)
-            self._runtimes[key] = hit
-        return hit
+        if hit is not None:
+            built_at, runtime = hit
+            if built_at != versions:
+                runtime.refresh()
+                self._runtimes[key] = (versions, runtime)
+            return runtime
+        runtime = compile_serving(self.catalog, q, buckets=buckets, **opts)
+        self._runtimes[key] = (versions, runtime)
+        return runtime
+
+    def refresh(self) -> Dict[str, str]:
+        """Bring every cached plan/runtime up to the catalog's versions.
+
+        Eager maintenance for serving fleets: one call after a batch of
+        appends applies the delta path everywhere, instead of each artifact
+        paying it lazily on its next lookup.  Returns the per-entry
+        decision lines (keyed by a short artifact descriptor).
+        """
+        out = {}
+        for store, gate in ((self._plans, {}), (self._runtimes,
+                                                {"serving": True})):
+            for i, (key, (built_at, art)) in enumerate(list(store.items())):
+                versions = self.catalog.versions(
+                    self._tables_of(art.query, **gate))
+                if built_at != versions:
+                    desc = f"{art.__class__.__name__}[{art.query.fact}#{i}]"
+                    out[desc] = art.refresh()
+                    store[key] = (versions, art)
+        return out
 
     # -- introspection -------------------------------------------------------
     @property

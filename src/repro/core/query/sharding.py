@@ -37,6 +37,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 try:  # moved to the jax namespace in newer releases
@@ -237,13 +238,78 @@ def _accumulate(parts, hits, valid, h, model, backend):
     return out * valid[:, None].astype(out.dtype)
 
 
+def serving_arm_state(sp: ShardedPrefusedPartials) -> Tuple:
+    """The placed per-arm serving state as a swappable pytree.
+
+    One tuple per arm — ``(table, sorted_pk, order, dmask)`` — passed into
+    the ``shard_map`` program at call time rather than closed over, so the
+    serving runtime's ``refresh`` can swap in extended arrays (same shapes,
+    same shardings) and re-dispatch into the already-compiled executables.
+    """
+    return tuple((a.table, a.sorted_pk, a.order,
+                  a.dmask.astype(jnp.bool_)) for a in sp.arms)
+
+
+def extend_sharded_arm(sp: ShardedPrefusedPartials, j: int,
+                       table: jnp.ndarray, pk: jnp.ndarray,
+                       dmask: jnp.ndarray, lo: int, hi: int) -> ShardedArm:
+    """Re-place arm ``j`` after rows ``[lo, hi)`` changed, touching only the
+    shard blocks that own them.
+
+    The contiguous-block layout means appended rows land in the tail
+    block(s): only those shards' ``ShardedPKIndex`` slices are re-argsorted
+    (rows_per_shard elements each) — every untouched block's index, order
+    and mask bytes are reused as-is.  Replicated arms just re-place the
+    whole (small) table.  Shapes and specs are unchanged, so the swapped
+    arm state dispatches into the compiled ``shard_map`` program.
+    """
+    arm = sp.arms[j]
+    mesh = sp.mesh
+    num_shards = (int(mesh.shape[sp.shard_axis])
+                  if sp.shard_axis in mesh.axis_names else 1)
+
+    def put(x, s):
+        return (None if x is None
+                else jax.device_put(x, NamedSharding(mesh, s)))
+
+    if not arm.is_sharded:
+        idx = pk_index(pk) if pk is not None else None
+        return dataclasses.replace(
+            arm, table=put(table, arm.spec),
+            sorted_pk=put(idx.sorted_pk if idx else None, P(None)),
+            order=put(idx.order if idx else None, P(None)),
+            dmask=put(dmask, P(None)))
+    r = int(table.shape[0])
+    rps = r // num_shards
+    s_lo, s_hi = lo // rps, -(-hi // rps)   # shard blocks owning [lo, hi)
+    vec_spec = P(sp.shard_axis)
+    sorted_pk = order = None
+    if pk is not None:
+        sorted_pk = np.array(np.asarray(sp.arms[j].sorted_pk))
+        order = np.array(np.asarray(sp.arms[j].order))
+        blocks = np.asarray(pk).reshape(num_shards, rps)
+        for s in range(s_lo, s_hi):
+            o = np.argsort(blocks[s], kind="stable").astype(np.int32)
+            sorted_pk[s * rps:(s + 1) * rps] = blocks[s][o]
+            order[s * rps:(s + 1) * rps] = o
+        sorted_pk = jnp.asarray(sorted_pk)
+        order = jnp.asarray(order)
+    return dataclasses.replace(
+        arm, table=put(table, arm.spec), sorted_pk=put(sorted_pk, vec_spec),
+        order=put(order, vec_spec),
+        dmask=put(dmask.astype(jnp.bool_) if dmask is not None else None,
+                  vec_spec))
+
+
 def make_serving_forward(sp: ShardedPrefusedPartials, model, backend: str):
     """The sharded online phase for ``ServingRuntime``: fks → predictions.
 
     One ``shard_map``-wrapped program (jitted per padding bucket by the
     runtime): the FK batch shards over the DP axes, each arm probes its
     device-local ``PKIndex`` slice and gathers its local partial rows, and
-    a single psum over the shard axis merges the row-sharded arms.
+    a single psum over the shard axis merges the row-sharded arms.  The
+    per-arm placed state (:func:`serving_arm_state`) is a call-time
+    argument: ``forward(fks, arms)``.
     """
     mesh, axis = sp.mesh, sp.shard_axis
     dp = dp_axes(mesh)
@@ -251,8 +317,6 @@ def make_serving_forward(sp: ShardedPrefusedPartials, model, backend: str):
     extras, kind = ((), None) if backend == "fused" else _model_leaves(model)
     if backend == "fused" and sp.h is not None:
         extras = (sp.h,)
-    arm_args = tuple((a.table, a.sorted_pk, a.order,
-                      a.dmask.astype(jnp.bool_)) for a in sp.arms)
     arm_specs = tuple(
         ((P(axis, None), P(axis), P(axis), P(axis)) if a.is_sharded
          else (P(None, None), P(None), P(None), P(None)))
@@ -282,37 +346,55 @@ def make_serving_forward(sp: ShardedPrefusedPartials, model, backend: str):
 
     smapped = _shard_map(body, mesh, in_specs, out_spec)
 
-    def forward(fks):
-        return smapped(tuple(fks), arm_args, extras)
+    def forward(fks, arms):
+        return smapped(tuple(fks), tuple(arms), extras)
 
     return forward
 
 
+def predict_rows_state(sp: ShardedPrefusedPartials,
+                       tables: Sequence[jnp.ndarray],
+                       ptrs: Sequence[jnp.ndarray],
+                       founds: Sequence[jnp.ndarray],
+                       row_valid: jnp.ndarray) -> dict:
+    """Placed call-time state for :func:`make_predict_rows_forward`.
+
+    Pointers/validity replicate; each arm table keeps its planned spec.
+    Rebuilt wholesale on refresh (the arrays are re-``device_put`` with the
+    same shardings, so the compiled program re-dispatches without retrace).
+    """
+    mesh = sp.mesh
+    rep = NamedSharding(mesh, P(None))
+    return {
+        "ptrs": tuple(jax.device_put(p, rep) for p in ptrs),
+        "founds": tuple(jax.device_put(f.astype(jnp.bool_), rep)
+                        for f in founds),
+        "valid": jax.device_put(row_valid.astype(jnp.bool_), rep),
+        "tables": tuple(
+            jax.device_put(t, NamedSharding(mesh, a.spec))
+            for t, a in zip(tables, sp.arms)),
+    }
+
+
 def make_predict_rows_forward(sp: ShardedPrefusedPartials, model,
-                              backend: str,
-                              ptrs: Sequence[jnp.ndarray],
-                              founds: Sequence[jnp.ndarray],
-                              row_valid: jnp.ndarray):
+                              backend: str):
     """Sharded ``CompiledQuery.predict_rows``: fact row ids → predictions.
 
     Here the FK→row resolution already ran offline (``join_factored``), so
     the per-arm pointers are *global* row numbers; each shard serves the
     pointers that land in its contiguous block (``axis_index`` arithmetic)
-    and the psum merges, matching the unsharded gather bitwise.
+    and the psum merges, matching the unsharded gather bitwise.  The placed
+    pointer/table state (:func:`predict_rows_state`) is a call-time
+    argument: ``forward(row_ids, state)``.
     """
     mesh, axis = sp.mesh, sp.shard_axis
     extras, kind = ((), None) if backend == "fused" else _model_leaves(model)
     if backend == "fused" and sp.h is not None:
         extras = (sp.h,)
-    rep = NamedSharding(mesh, P(None))
-    ptrs = tuple(jax.device_put(p, rep) for p in ptrs)
-    founds = tuple(jax.device_put(f.astype(jnp.bool_), rep) for f in founds)
-    row_valid = jax.device_put(row_valid.astype(jnp.bool_), rep)
-    tables = tuple(a.table for a in sp.arms)
     table_specs = tuple(P(axis, None) if a.is_sharded else P(None, None)
                         for a in sp.arms)
-    in_specs = (P(None), tuple(P(None) for _ in ptrs),
-                tuple(P(None) for _ in founds), P(None), table_specs,
+    in_specs = (P(None), tuple(P(None) for _ in sp.arms),
+                tuple(P(None) for _ in sp.arms), P(None), table_specs,
                 tuple(_rep_spec(e) for e in extras))
 
     def body(row_ids, ptrs, founds, valid_full, tables, extras):
@@ -365,7 +447,8 @@ def make_predict_rows_forward(sp: ShardedPrefusedPartials, model,
 
     smapped = _shard_map(body, mesh, in_specs, P(None, None))
 
-    def forward(row_ids):
-        return smapped(row_ids, ptrs, founds, row_valid, tables, extras)
+    def forward(row_ids, state):
+        return smapped(row_ids, state["ptrs"], state["founds"],
+                       state["valid"], state["tables"], extras)
 
     return forward

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fusion import LinearOperator, random_tree
-from repro.core.laq import Table
+from repro.core.laq import Catalog
 from repro.core.query import (PREDICTION, GroupKey, PredictiveQuery, Session,
                               query)
 from .ssb import SSBData, N_BRANDS, N_NATIONS, N_REGIONS
@@ -46,10 +46,16 @@ _SESSIONS: "weakref.WeakKeyDictionary[SSBData, Session]" = (
     weakref.WeakKeyDictionary())
 
 
-def ssb_catalog(data: SSBData) -> Dict[str, Table]:
-    return {"lineorder": data.lineorder, "part": data.part,
-            "supplier": data.supplier, "customer": data.customer,
-            "date": data.date}
+def ssb_catalog(data: SSBData) -> Catalog:
+    """A mutable versioned :class:`Catalog` over ``data``'s five tables.
+
+    Appends (e.g. new ``date``/``part`` rows as the benchmark "advances in
+    time") flow through every Session-cached plan and serving runtime via
+    the catalog's version counters + delta refresh.
+    """
+    return Catalog({"lineorder": data.lineorder, "part": data.part,
+                    "supplier": data.supplier, "customer": data.customer,
+                    "date": data.date})
 
 
 def ssb_session(data: SSBData) -> Session:

@@ -28,8 +28,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.fusion import LinearOperator
-from repro.core.query import (DEFAULT_BUCKETS, Session, query_from_star,
-                              requests_from_rows)
+from repro.core.query import (DEFAULT_BUCKETS, Catalog, Session,
+                              query_from_star, requests_from_rows)
 from repro.data import generate_star
 from repro.models import LM
 
@@ -55,8 +55,11 @@ class FusedFeatureServer:
         self.syn = generate_star(setting, sf, k, seed=seed, scale=scale)
         self.model = LinearOperator(
             jnp.asarray(rng.normal(size=(k, l)).astype(np.float32)))
-        self.catalog, self.query = query_from_star(self.syn.star,
-                                                   model=self.model)
+        tables, self.query = query_from_star(self.syn.star,
+                                             model=self.model)
+        # Mutable versioned catalog: dimension appends flow through to the
+        # live runtimes via ``append_dim`` without restarting the server.
+        self.catalog = Catalog(tables)
         self.mesh = mesh
         self.session = Session(self.catalog, mesh=mesh,
                                shard_threshold_bytes=shard_threshold_bytes,
@@ -71,6 +74,19 @@ class FusedFeatureServer:
 
     def runtime(self, fused: bool = True):
         return self.runtime_fused if fused else self.runtime_nonfused
+
+    def append_dim(self, table: str, rows) -> dict:
+        """Append dimension rows and refresh both live runtimes in place.
+
+        The streaming-append story end to end: ``catalog.append`` bumps the
+        table's version; each runtime applies the delta path (extend the PK
+        index, prefuse only the new rows) — zero recompiles while the rows
+        fit the table's padded capacity — and newly appended keys become
+        servable immediately.  Returns the per-runtime refresh decisions.
+        """
+        self.catalog.append(table, rows)
+        return {"fused": self.runtime_fused.refresh(),
+                "nonfused": self.runtime_nonfused.refresh()}
 
     def serve_batch(self, requests, fused: bool = True):
         """Predictions for a batch of per-arm FK requests (any size)."""

@@ -91,6 +91,20 @@ def test_normalize_scale_ignores_sub_floor_noise_rows():
     assert len(regressions) == 1 and "real/d" in regressions[0]
 
 
+def test_normalize_never_amplifies_on_a_faster_machine():
+    """A run globally *faster* than baseline must not turn mild raw ratios
+    into failures: the scale clamps at 1.0 (sub-1 medians would divide a
+    1.2x-raw row up to 1.6x 'normalized')."""
+    cur = {n: us * 0.7 for n, us in BASE.items()}   # uniformly faster runner
+    cur["query/Q1.1"] = BASE["query/Q1.1"] * 1.3    # mild, within tolerance
+    regressions, _, _ = compare(cur, BASE, tolerance=1.5, normalize=True)
+    assert regressions == []
+    # A genuine relative regression still fires through its raw ratio.
+    cur["query/Q1.1"] = BASE["query/Q1.1"] * 2.0
+    regressions, _, _ = compare(cur, BASE, tolerance=1.5, normalize=True)
+    assert len(regressions) == 1 and "query/Q1.1" in regressions[0]
+
+
 def test_normalize_degenerate_row_count_falls_back_to_absolute():
     """A single gated row must not normalize away its own regression."""
     base = {"tiny": 40.0, "real": 5000.0}
