@@ -150,3 +150,36 @@ print(f"append → refresh ≡ cold rebuild ✓ "
       f"(products now v{catalog.version('products')}, "
       f"{int(catalog['products'].nvalid)} rows; plans cached: "
       f"{sess.num_plans})")
+
+# -- 7. serve(async_=True): the admission scheduler --------------------------
+# Synchronous .serve() is a closed loop — right for batch scoring, wrong for
+# many concurrent callers.  async_=True registers the same cached runtime on
+# the session's AdmissionScheduler: submissions queue per plan, coalesce
+# into bucket-shaped batches under a latency SLO, and one drain thread
+# serves every registered plan.  Oversized analytical batches are admitted
+# in top-bucket chunks on the "batch" lane, so interactive point lookups
+# ride along in the same steps instead of queueing behind the scan — and
+# everything stays bit-exact vs the synchronous path.
+plan = sess.bind(pipeline.build()).serve(buckets=(8, 64), async_=True)
+scan = {"o_custkey": rng.integers(0, 20, 200).astype(np.int32),   # 4 chunks
+        "o_prodkey": rng.integers(0, 46, 200).astype(np.int32)}
+lookup = {"o_custkey": np.array([3], np.int32),
+          "o_prodkey": np.array([41], np.int32)}
+f_scan = plan.submit(scan, lane="batch")         # Future, chunked admission
+f_point = plan.submit(lookup)                    # interleaves with the scan
+np.testing.assert_array_equal(np.asarray(f_point.result(30)),
+                              np.asarray(reference.serve(lookup)))
+np.testing.assert_array_equal(np.asarray(f_scan.result(30)),
+                              np.asarray(reference.serve(scan)))
+# Data refreshes fence first (drain-then-swap): in-flight requests finish on
+# their generation before the swap — never a request spanning two versions.
+catalog.append("products", {
+    "prodkey": np.arange(46, 48), "price": np.float32([8.0, 9.0]),
+    "rating": np.float32([4.5, 3.0]), "category": np.int64([1, 2])})
+print("fenced refresh:", sess.scheduler().refresh())
+st = plan.stats()
+print(f"scheduled serving ✓ steps={st['steps']} "
+      f"admitted={st['admitted_rows']} rows "
+      f"(backpressure bound rejects with SchedulerBackpressureError; "
+      f"tune via sess.scheduler(slo_ms=..., max_queued_rows=...))")
+sess.scheduler().close()

@@ -113,7 +113,28 @@ PAD_KEY-padded up to the smallest configured bucket and dispatched through
 that bucket's jitted program (one trace per bucket, ever); a session mesh
 shards the quasi-static partials per ``plan_partition_spec``; the Pallas
 kernels (``fused_star_gather`` / ``tree_predict``) lower the gather-sum when
-shapes fit.
+shapes fit.  Request keys equal to the padding sentinel are rejected with
+:class:`SentinelKeyError` — they would be indistinguishable from padding.
+
+Async serving (the admission scheduler)
+---------------------------------------
+``ServingRuntime.serve`` is synchronous: one caller, one batch at a time —
+right for batch scoring, wrong for concurrent open-loop traffic.
+``builder.serve(async_=True)`` (or ``sess.scheduler().register(runtime)``)
+puts the runtime behind an :class:`AdmissionScheduler`: a per-plan request
+queue whose single drain loop coalesces arriving FK requests into
+bucket-shaped batches under a latency SLO (``slo_ms``), serves oversized
+analytical batches chunk-by-chunk so point lookups interleave instead of
+queueing behind them (per-step admission capped at the top bucket), keeps
+two priority lanes (``"interactive"`` first, ``"batch"`` with a reserved
+per-step row share — starvation-free both ways), and sheds load at a
+bounded row queue with :class:`SchedulerBackpressureError`.  ``submit``
+returns a Future; results are bit-exact vs synchronous ``serve``.  Data
+refreshes on a scheduled runtime fence first (drain-then-swap): the
+session's refresh paths route through ``scheduler.refresh()`` so no request
+ever spans two catalog versions.  Use the scheduler when many concurrent
+callers share compiled plans; call ``serve`` directly when one caller owns
+the runtime.
 """
 from ..laq.catalog import (Catalog, CatalogHistoryError,
                            CatalogReadOnlyError, TableDelta, changed_spans)
@@ -126,8 +147,11 @@ from .planner import (AggDecision, QueryPlan, plan_aggregation,
                       DENSE_JOIN_ELEMS, MXU_SEGMENT_ADVANTAGE,
                       PLANNER_THRESHOLDS, SERVE_KERNEL_MAX_NODES,
                       SERVE_KERNEL_MAX_WIDTH, SHARD_PARTIAL_BYTES)
-from .serving import (DEFAULT_BUCKETS, ServingRuntime, compile_serving,
-                      requests_from_rows)
+from .scheduler import (DEFAULT_MAX_QUEUED_ROWS, DEFAULT_SLO_MS, LANES,
+                        AdmissionScheduler, ScheduledPlan,
+                        SchedulerBackpressureError, SchedulerClosedError)
+from .serving import (DEFAULT_BUCKETS, SentinelKeyError, ServingRuntime,
+                      compile_serving, requests_from_rows)
 from .session import QueryBuilder, Session, query, query_key
 from .sharding import (ShardedArm, ShardedPrefusedPartials,
                        shard_prefused_partials)
@@ -144,8 +168,11 @@ __all__ = [
     "DENSE_JOIN_ELEMS",
     "MXU_SEGMENT_ADVANTAGE", "SERVE_KERNEL_MAX_NODES",
     "SERVE_KERNEL_MAX_WIDTH", "SHARD_PARTIAL_BYTES",
-    "DEFAULT_BUCKETS", "ServingRuntime", "compile_serving",
-    "requests_from_rows",
+    "DEFAULT_BUCKETS", "SentinelKeyError", "ServingRuntime",
+    "compile_serving", "requests_from_rows",
+    "AdmissionScheduler", "ScheduledPlan", "SchedulerBackpressureError",
+    "SchedulerClosedError", "DEFAULT_MAX_QUEUED_ROWS", "DEFAULT_SLO_MS",
+    "LANES",
     "QueryBuilder", "Session", "query", "query_key",
     "ShardedArm", "ShardedPrefusedPartials", "shard_prefused_partials",
 ]

@@ -1,0 +1,600 @@
+"""Async admission scheduler: open-loop traffic on top of ``ServingRuntime``.
+
+``ServingRuntime.serve`` is a closed loop — one caller, one bucketed batch
+at a time, nothing owning *admission*.  Production prediction queries arrive
+the other way around (Park et al., arXiv 2206.00136): many concurrent
+clients, a mix of point lookups and analytical scans, and a latency SLO per
+class.  This module adds the missing admission layer:
+
+Coalescing under an SLO
+    Arriving FK requests queue per plan and are coalesced into one
+    bucket-shaped batch per *admission step*.  A step fires when the queue
+    holds a top bucket's worth of rows, when the oldest queued request has
+    waited ``slo_ms`` (the flush deadline), or immediately for work already
+    mid-flight — so under load, batches fill naturally while the previous
+    step executes, and when idle a lone request waits at most the SLO.
+
+Chunked admission (the sarathi-serve insight, applied to LAQ serving)
+    One oversized analytical batch must not occupy the device for its whole
+    duration.  Admission is capped at the top bucket per step and a large
+    request is served as a *cursor* over consecutive steps, sharing each
+    step with whatever interactive rows are pending: point lookups ride
+    along in the padded slack instead of queueing behind the scan.
+
+Priority lanes with starvation freedom
+    Two lanes per plan — ``"interactive"`` (default) and ``"batch"``.
+    Interactive rows are admitted first each step; the batch lane keeps a
+    configurable row reservation (``batch_reserve_rows``) whenever it has
+    work, so an interactive flood cannot starve analytical progress and an
+    analytical scan cannot starve point lookups: both make guaranteed
+    per-step progress.
+
+Bounded queues with backpressure
+    Each lane's queue is bounded in *rows* (``max_queued_rows``); a
+    submission that would exceed the bound is rejected synchronously with
+    :class:`SchedulerBackpressureError` — load sheds at admission, not by
+    unbounded memory growth in a hidden queue.
+
+Many plans, one drain loop
+    Any number of compiled runtimes register with one scheduler
+    (per-plan queues); a single drain thread forms and executes steps
+    round-robin across plans, so one process serves many compiled plans
+    concurrently without a thread per plan fighting over the device.
+
+Refresh fencing (drain-then-swap)
+    ``ServingRuntime.refresh`` swaps the quasi-static state pytree; doing
+    that under an in-flight batch would hand one request rows from two data
+    generations.  :meth:`AdmissionScheduler.refresh` fences: new admissions
+    pause, *started* requests run to completion (their remaining chunks are
+    the only admissible work), the swap happens on a drained device, then
+    admission resumes.  Every request therefore sees exactly one catalog
+    version, and scheduled results stay bit-exact vs synchronous
+    ``serve`` on the same data generation.
+
+Bit-exactness
+    The bucket programs are row-independent (per-row probes + gathers +
+    per-row model application), so coalescing, chunking, and lane
+    interleaving never change any request's values — scheduled results are
+    bitwise identical to ``ServingRuntime.serve`` of the same request, the
+    property the tests and the open-loop bench assert.
+
+Entry points: ``Session.scheduler()`` / ``QueryBuilder.serve(async_=True)``
+(which returns a :class:`ScheduledPlan` handle), or construct an
+:class:`AdmissionScheduler` directly and :meth:`~AdmissionScheduler.register`
+any runtime.  ``submit`` returns a ``concurrent.futures.Future``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .serving import ServingRuntime
+
+#: Default flush deadline: a queued request is admitted at most this many
+#: milliseconds after submission even when the bucket has not filled.
+DEFAULT_SLO_MS = 2.0
+
+#: Default per-lane queue bound, in rows (not requests): backpressure
+#: rejects submissions that would push a lane past this.
+DEFAULT_MAX_QUEUED_ROWS = 16384
+
+#: Priority lanes, admission order per step (after mid-flight work).
+LANES = ("interactive", "batch")
+
+#: Per-lane completed-request latency samples kept for percentiles.
+STATS_WINDOW = 4096
+
+
+class SchedulerBackpressureError(RuntimeError):
+    """Submission rejected: the plan's lane queue is at its row bound.
+
+    The named rejection error of the bounded-queue contract — callers shed
+    or retry with their own policy instead of the scheduler buffering
+    without limit.
+    """
+
+
+class SchedulerClosedError(RuntimeError):
+    """The scheduler was closed; no further submissions are accepted."""
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One submitted request, from queue to resolved future.
+
+    ``served`` is the admission cursor: requests larger than one step's
+    capacity are admitted chunk by chunk across steps, accumulating their
+    output segments in ``parts``.
+    """
+
+    fks: List[np.ndarray]
+    n: int
+    lane: str
+    future: Future
+    t_submit: float
+    served: int = 0
+    parts: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+class _PlanQueue:
+    """Per-plan admission state: two bounded lanes + mid-flight work."""
+
+    def __init__(self, name: str, runtime: ServingRuntime,
+                 max_queued_rows: int, batch_reserve: int):
+        self.name = name
+        self.runtime = runtime
+        self.max_queued_rows = max_queued_rows
+        self.batch_reserve = batch_reserve
+        self.lanes: Dict[str, Deque[_Pending]] = {
+            lane: collections.deque() for lane in LANES}
+        self.inflight: Dict[str, Deque[_Pending]] = {
+            lane: collections.deque() for lane in LANES}
+        # Unadmitted rows per lane (backpressure accounting): decremented
+        # as rows are admitted, wherever the request currently lives.
+        self.queued_rows: Dict[str, int] = {lane: 0 for lane in LANES}
+        self.lat: Dict[str, Deque[float]] = {
+            lane: collections.deque(maxlen=STATS_WINDOW) for lane in LANES}
+        self.steps = 0
+        self.admitted_rows = 0
+        self.padded_rows = 0
+        self.rejected = 0
+
+    def has_inflight(self) -> bool:
+        return any(self.inflight[lane] for lane in LANES)
+
+    def has_work(self) -> bool:
+        return self.has_inflight() or any(self.lanes[la] for la in LANES)
+
+    def flush_state(self, now: float, *, fenced: bool, slo_s: float,
+                    closed: bool) -> Tuple[bool, Optional[float]]:
+        """``(ready, seconds_until_deadline)`` for the drain loop's poll.
+
+        Mid-flight work is always ready (its next chunk never waits);
+        queued work is ready when it fills the top bucket, when the oldest
+        request hits the SLO deadline, or when the scheduler is closing
+        (final drain).  During a fence only mid-flight work is admissible.
+        """
+        if self.has_inflight():
+            return True, None
+        if fenced:
+            return False, None
+        rows = sum(self.queued_rows.values())
+        if rows == 0:
+            return False, None
+        if closed or rows >= self.runtime.buckets[-1]:
+            return True, None
+        oldest = min(q[0].t_submit for q in self.lanes.values() if q)
+        if now >= oldest + slo_s:
+            return True, None
+        return False, oldest + slo_s - now
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledPlan:
+    """A registered plan's handle: submit requests, read its stats."""
+
+    scheduler: "AdmissionScheduler"
+    name: str
+    runtime: ServingRuntime
+
+    def submit(self, requests, *, lane: str = "interactive") -> Future:
+        """Enqueue one request batch; see :meth:`AdmissionScheduler.submit`."""
+        return self.scheduler.submit(self.name, requests, lane=lane)
+
+    def stats(self) -> Dict:
+        """This plan's admission/latency stats (see scheduler ``stats``)."""
+        return self.scheduler.stats()[self.name]
+
+
+class AdmissionScheduler:
+    """Request queues + one drain loop over any number of serving plans.
+
+    ``slo_ms`` is the coalescing flush deadline (0 serves immediately);
+    ``max_queued_rows`` bounds each lane's queue in rows (backpressure);
+    ``batch_reserve_rows`` is the batch lane's guaranteed per-step row
+    share while it has work (default: a quarter of the plan's top bucket),
+    the starvation-freedom knob in both directions.  ``auto_start=False``
+    skips the drain thread — tests and steppers then drive admission
+    deterministically via :meth:`step`.
+
+    Thread contract: ``submit`` is safe from any thread; execution happens
+    on the single drain thread, so the underlying runtimes are never
+    entered concurrently.  Do not call ``runtime.serve``/``refresh``
+    directly while a scheduler owns the runtime — route refreshes through
+    :meth:`refresh`, which fences in-flight work first.
+    """
+
+    def __init__(self, *, slo_ms: float = DEFAULT_SLO_MS,
+                 max_queued_rows: int = DEFAULT_MAX_QUEUED_ROWS,
+                 batch_reserve_rows: Optional[int] = None,
+                 auto_start: bool = True):
+        if slo_ms < 0:
+            raise ValueError(f"slo_ms must be >= 0, got {slo_ms}")
+        if max_queued_rows < 1:
+            raise ValueError(
+                f"max_queued_rows must be >= 1, got {max_queued_rows}")
+        self.slo_ms = float(slo_ms)
+        self._slo_s = float(slo_ms) / 1e3
+        self._max_queued_rows = int(max_queued_rows)
+        self._batch_reserve_rows = batch_reserve_rows
+        self._plans: Dict[str, _PlanQueue] = {}
+        self._cv = threading.Condition()
+        self._closed = False
+        self._fences = 0
+        self._drained = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if auto_start:
+            self._thread = threading.Thread(
+                target=self._drain_loop, name="admission-drain", daemon=True)
+            self._thread.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def __enter__(self) -> "AdmissionScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(cancel=exc[0] is not None)
+
+    def close(self, *, cancel: bool = False) -> None:
+        """Stop the scheduler; drains queued work first unless ``cancel``.
+
+        With ``cancel=True`` every unresolved future fails with
+        :class:`SchedulerClosedError` instead (mid-flight requests
+        included — their partial output is dropped).
+        """
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            if cancel:
+                for plan in self._plans.values():
+                    for store in (plan.inflight, plan.lanes):
+                        for lane in LANES:
+                            while store[lane]:
+                                p = store[lane].popleft()
+                                plan.queued_rows[lane] -= p.n - p.served
+                                self._fail(p, SchedulerClosedError(
+                                    "scheduler closed before the request "
+                                    "was served"))
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+        else:
+            while self._step() > 0:   # manual mode: drain inline
+                pass
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    # -- registration --------------------------------------------------------
+    def register(self, runtime: ServingRuntime, name: Optional[str] = None,
+                 *, max_queued_rows: Optional[int] = None,
+                 batch_reserve_rows: Optional[int] = None) -> ScheduledPlan:
+        """Add a compiled plan to the drain loop; idempotent per runtime.
+
+        Returns the plan's :class:`ScheduledPlan` handle.  ``name``
+        defaults to ``plan<N>``; per-plan ``max_queued_rows`` /
+        ``batch_reserve_rows`` override the scheduler defaults.
+        """
+        with self._cv:
+            if self._closed:
+                raise SchedulerClosedError("cannot register on a closed "
+                                           "scheduler")
+            for existing in self._plans.values():
+                if existing.runtime is runtime:
+                    return ScheduledPlan(self, existing.name, runtime)
+            if name is None:
+                name = f"plan{len(self._plans)}"
+            if name in self._plans:
+                raise ValueError(f"plan name {name!r} already registered "
+                                 f"(names: {sorted(self._plans)})")
+            reserve = batch_reserve_rows
+            if reserve is None:
+                reserve = self._batch_reserve_rows
+            if reserve is None:
+                reserve = max(1, runtime.buckets[-1] // 4)
+            self._plans[name] = _PlanQueue(
+                name, runtime,
+                max_queued_rows or self._max_queued_rows,
+                min(int(reserve), runtime.buckets[-1]))
+            self._cv.notify_all()
+        return ScheduledPlan(self, name, runtime)
+
+    def is_registered(self, runtime: ServingRuntime) -> bool:
+        with self._cv:
+            return any(p.runtime is runtime for p in self._plans.values())
+
+    @property
+    def plan_names(self) -> Tuple[str, ...]:
+        with self._cv:
+            return tuple(self._plans)
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, plan: str, requests, *,
+               lane: str = "interactive") -> Future:
+        """Enqueue one request batch; returns a Future of the predictions.
+
+        ``requests`` takes every form ``ServingRuntime.serve`` accepts and
+        is validated synchronously (missing/ragged/sentinel-key errors
+        raise here, in the caller).  ``lane`` is ``"interactive"`` (point
+        lookups, admitted first) or ``"batch"`` (analytical scans, chunked
+        through the reserved share).  Raises
+        :class:`SchedulerBackpressureError` when the lane's row bound is
+        hit and :class:`SchedulerClosedError` after :meth:`close`.
+        """
+        if lane not in LANES:
+            raise ValueError(f"unknown lane {lane!r}; lanes are {LANES}")
+        with self._cv:
+            if plan not in self._plans:
+                raise KeyError(f"unknown plan {plan!r}; registered: "
+                               f"{sorted(self._plans)}")
+            pq = self._plans[plan]
+        fks = pq.runtime._normalize(requests)
+        n = int(fks[0].shape[0])
+        future: Future = Future()
+        if n == 0:
+            future.set_result(
+                jnp.zeros((0, pq.runtime.out_width), jnp.float32))
+            return future
+        with self._cv:
+            if self._closed:
+                raise SchedulerClosedError(
+                    "scheduler is closed; no further submissions")
+            queued = pq.queued_rows[lane]
+            if queued + n > pq.max_queued_rows:
+                pq.rejected += 1
+                raise SchedulerBackpressureError(
+                    f"plan {plan!r} lane {lane!r} is at capacity: {queued} "
+                    f"rows queued + {n} submitted > bound "
+                    f"{pq.max_queued_rows}; shed load or retry later")
+            pq.lanes[lane].append(_Pending(
+                fks=fks, n=n, lane=lane, future=future,
+                t_submit=time.perf_counter()))
+            pq.queued_rows[lane] += n
+            self._cv.notify_all()
+        return future
+
+    # -- refresh fencing -----------------------------------------------------
+    def refresh(self, runtime: Optional[ServingRuntime] = None
+                ) -> Dict[str, str]:
+        """Drain-then-swap: fence in-flight work, then refresh runtimes.
+
+        New admissions pause; requests already started (admission cursor
+        past zero) run to completion so no request ever spans two data
+        generations; then each registered runtime's ``refresh()`` applies
+        pending catalog deltas on a quiesced device (``runtime`` narrows
+        the swap to one plan — the fence is still global).  Queued-but-
+        unstarted requests are served entirely post-swap.  Returns the
+        per-plan refresh decision lines.
+        """
+        with self._cv:
+            self._fences += 1
+            self._drained.clear()
+            self._cv.notify_all()
+        try:
+            if self._thread is None:
+                while any(p.has_inflight() for p in self._plans.values()):
+                    self._step()
+            else:
+                self._drained.wait()
+            with self._cv:
+                targets = [p for p in self._plans.values()
+                           if runtime is None or p.runtime is runtime]
+            return {p.name: p.runtime.refresh() for p in targets}
+        finally:
+            with self._cv:
+                self._fences -= 1
+                self._cv.notify_all()
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        """Per-plan admission/latency report.
+
+        For each plan: ``steps`` (admission steps executed),
+        ``admitted_rows`` / ``padded_rows`` (bucket-shape overhead),
+        ``rejected`` (backpressure count), current ``queued_rows``, and
+        per-lane completed-request latency percentiles in ms — measured
+        submit→result per *request*, which is what an open-loop client
+        sees, unlike the runtime's per-dispatch bucket windows.
+        """
+        with self._cv:
+            out: Dict[str, Dict] = {}
+            for name, plan in self._plans.items():
+                lanes = {}
+                for lane in LANES:
+                    ts = plan.lat[lane]
+                    entry: Dict[str, float] = {"count": len(ts)}
+                    if ts:
+                        ms = np.asarray(ts) * 1e3
+                        entry.update(
+                            p50=float(np.percentile(ms, 50)),
+                            p95=float(np.percentile(ms, 95)),
+                            p99=float(np.percentile(ms, 99)))
+                    lanes[lane] = entry
+                out[name] = {
+                    "steps": plan.steps,
+                    "admitted_rows": plan.admitted_rows,
+                    "padded_rows": plan.padded_rows,
+                    "rejected": plan.rejected,
+                    "queued_rows": dict(plan.queued_rows),
+                    "lanes": lanes,
+                }
+            return out
+
+    # -- the drain loop ------------------------------------------------------
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    now = time.perf_counter()
+                    ready, wait = self._poll_locked(now)
+                    if ready:
+                        break
+                    if self._closed:
+                        return
+                    if self._fences and not any(
+                            p.has_inflight() for p in self._plans.values()):
+                        self._drained.set()
+                    self._cv.wait(timeout=wait)
+                steps = []
+                for plan in ready:
+                    take, total = self._form_step_locked(plan)
+                    if total:
+                        steps.append((plan, take, total))
+            for plan, take, total in steps:
+                self._exec_step(plan, take, total)
+
+    def _poll_locked(self, now: float
+                     ) -> Tuple[List[_PlanQueue], Optional[float]]:
+        ready: List[_PlanQueue] = []
+        wait: Optional[float] = None
+        for plan in self._plans.values():
+            r, w = plan.flush_state(now, fenced=self._fences > 0,
+                                    slo_s=self._slo_s, closed=self._closed)
+            if r:
+                ready.append(plan)
+            elif w is not None:
+                wait = w if wait is None else min(wait, w)
+        return ready, wait
+
+    def _form_step_locked(self, plan: _PlanQueue
+                          ) -> Tuple[List[Tuple[_Pending, int, int]], int]:
+        """One admission step: which rows of which requests run next.
+
+        Capacity is the top bucket.  Order: mid-flight interactive, queued
+        interactive (up to capacity minus the batch reservation while the
+        batch lane has work), then mid-flight batch and queued batch into
+        everything left.  Under a fence only mid-flight work is admitted.
+        Mutates cursors/queues; execution happens outside the lock.
+        """
+        cap = plan.runtime.buckets[-1]
+        left = cap
+        take: List[Tuple[_Pending, int, int]] = []
+
+        def drain(src: Deque[_Pending], budget: int,
+                  to_inflight: bool) -> int:
+            taken = 0
+            while src and budget > 0:
+                p = src[0]
+                if p.future.cancelled():
+                    src.popleft()
+                    plan.queued_rows[p.lane] -= p.n - p.served
+                    continue
+                c = min(p.n - p.served, budget)
+                take.append((p, p.served, c))
+                p.served += c
+                plan.queued_rows[p.lane] -= c
+                taken += c
+                budget -= c
+                if p.served == p.n:
+                    src.popleft()
+                elif to_inflight:
+                    src.popleft()
+                    plan.inflight[p.lane].append(p)
+            return taken
+
+        if self._fences:
+            for lane in LANES:
+                left -= drain(plan.inflight[lane], left, False)
+        else:
+            batch_work = (plan.inflight["batch"] or plan.lanes["batch"])
+            reserve = min(plan.batch_reserve, left) if batch_work else 0
+            budget = left - reserve
+            taken = drain(plan.inflight["interactive"], budget, False)
+            taken += drain(plan.lanes["interactive"], budget - taken, True)
+            left -= taken
+            left -= drain(plan.inflight["batch"], left, False)
+            left -= drain(plan.lanes["batch"], left, True)
+        return take, cap - left
+
+    def _exec_step(self, plan: _PlanQueue,
+                   take: List[Tuple[_Pending, int, int]], total: int) -> None:
+        runtime = plan.runtime
+        try:
+            num_arms = len(runtime.request_keys)
+            if len(take) == 1:
+                p0, s0, c0 = take[0]
+                cols = [p0.fks[i][s0:s0 + c0] for i in range(num_arms)]
+            else:
+                cols = [np.concatenate([p.fks[i][s:s + c]
+                                        for p, s, c in take])
+                        for i in range(num_arms)]
+            bucket, padded = runtime._admit(cols)
+            body = runtime._execute(padded, bucket)[:total]
+            done = time.perf_counter()
+            offset = 0
+            for p, s, c in take:
+                seg = body[offset:offset + c]
+                offset += c
+                if s == 0 and c == p.n:
+                    self._resolve(plan, p, seg, done)
+                else:
+                    # Chunked request: segments assemble on host (matches
+                    # the oversized path of ``serve``, incl. the sharded
+                    # eager-concat miscompile workaround).
+                    p.parts.append(np.asarray(seg))
+                    if p.served == p.n:
+                        self._resolve(
+                            plan, p,
+                            jnp.asarray(np.concatenate(p.parts, axis=0)),
+                            done)
+            plan.steps += 1
+            plan.admitted_rows += total
+            plan.padded_rows += bucket - total
+        except Exception as exc:   # noqa: BLE001 — futures carry the error
+            for p, _, _ in take:
+                self._fail(p, exc)
+
+    def _resolve(self, plan: _PlanQueue, p: _Pending, result,
+                 done: float) -> None:
+        try:
+            p.future.set_result(result)
+        except InvalidStateError:
+            return    # cancelled between admission and completion
+        plan.lat[p.lane].append(done - p.t_submit)
+
+    @staticmethod
+    def _fail(p: _Pending, exc: BaseException) -> None:
+        try:
+            p.future.set_exception(exc)
+        except InvalidStateError:
+            pass
+
+    # -- manual stepping (deterministic tests / external drivers) ------------
+    def _step(self) -> int:
+        """Form + execute one admission step per plan with work, now.
+
+        Ignores the SLO wait (anything queued is admitted immediately,
+        subject to fence/lane rules) — the deterministic drive used when
+        ``auto_start=False``.  Returns total rows admitted this call.
+        """
+        with self._cv:
+            steps = []
+            for plan in self._plans.values():
+                if not (plan.has_inflight()
+                        or (not self._fences and plan.has_work())):
+                    continue
+                take, total = self._form_step_locked(plan)
+                if total:
+                    steps.append((plan, take, total))
+        served = 0
+        for plan, take, total in steps:
+            self._exec_step(plan, take, total)
+            served += total
+        return served
+
+    def step(self) -> int:
+        """Public manual drive (only without the drain thread)."""
+        if self._thread is not None:
+            raise RuntimeError(
+                "step() is for auto_start=False schedulers; the drain "
+                "thread owns admission here")
+        return self._step()

@@ -91,6 +91,18 @@ DEFAULT_BUCKETS = (8, 64, 512)
 LATENCY_WINDOW = 2048
 
 
+class SentinelKeyError(ValueError):
+    """A request carried a key equal to the padding sentinel ``PAD_KEY``.
+
+    Padded slots are recognized *by value* — ``PAD_KEY`` never matches a
+    live PK — so a real request key equal to the sentinel would be
+    indistinguishable from padding: it would silently score zero with no
+    indication anything was wrong.  ``ServingRuntime._normalize`` rejects
+    such keys loudly instead; re-key the dimension if ``2**31 - 1`` must be
+    a servable key.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class _ArmIndex:
     """Quasi-static per-arm lookup state (paper's offline phase, per arm).
@@ -150,7 +162,12 @@ class ServingRuntime:
         self._sync_stats = sync_stats
         self._trace_count = 0
         self._lat: Dict[int, Deque[float]] = {}
-        self._compile_s: Dict[int, float] = {}
+        self._lat_chunked: Deque[float] = collections.deque(
+            maxlen=LATENCY_WINDOW)
+        # One compile record per jit-cache generation: ``_compile_s`` is the
+        # live generation's {bucket: seconds}, appended to ``_compile_log``
+        # by ``_install`` so a rebuild archives instead of overwriting.
+        self._compile_log: List[Dict[int, float]] = []
         self._donate = donate
         self.catalog = catalog
         self.versions: Dict[str, int] = (
@@ -180,6 +197,10 @@ class ServingRuntime:
             if sharded is not None else None)
         self._state = {"arms": self._arm_state(), "h": self._h}
         self._trace_count = 0
+        # A fresh cache generation starts a fresh compile record; earlier
+        # generations stay archived in ``_compile_log`` (compile_history).
+        self._compile_s: Dict[int, float] = {}
+        self._compile_log.append(self._compile_s)
         donate_argnums = (0,) if self._donate else ()
         self._jit = jax.jit(self._forward, donate_argnums=donate_argnums)
 
@@ -216,6 +237,23 @@ class ServingRuntime:
         """
         return self._trace_count
 
+    @property
+    def generation(self) -> int:
+        """The jit-cache generation (0-based; rebuilds increment it)."""
+        return len(self._compile_log) - 1
+
+    def compile_history(self) -> List[Dict[int, float]]:
+        """Per-generation ``{bucket: compile_ms}`` records, oldest first.
+
+        Consistent with the ``num_compiles`` generation semantics: a delta
+        refresh keeps the live generation's record (no retrace happened), a
+        shape-changing rebuild archives it and starts a new one — the
+        first-generation compile times survive every later retrace instead
+        of being overwritten.
+        """
+        return [{b: s * 1e3 for b, s in gen.items()}
+                for gen in self._compile_log]
+
     def jit_cache_size(self) -> Optional[int]:
         """The jit executable cache size (None if jax hides it)."""
         try:
@@ -223,29 +261,41 @@ class ServingRuntime:
         except AttributeError:
             return None
 
-    def latency_stats(self) -> Dict[int, Dict[str, float]]:
+    def latency_stats(self) -> Dict[object, Dict[str, float]]:
         """Per-bucket steady-state serve latency percentiles (ms).
 
         Each bucket's one-time trace+compile call is kept out of the
-        percentiles and reported separately as ``compile_ms``; a bucket
-        that has only ever compiled still appears, with ``count == 0`` and
-        no percentile keys.  Percentiles measure wall time only when the
-        runtime synchronizes per call (``sync_stats``, the default).
+        percentiles and reported separately as ``compile_ms`` (the *live*
+        cache generation's record — earlier generations survive in
+        :meth:`compile_history`); a bucket that has only ever compiled
+        still appears, with ``count == 0`` and no percentile keys.
+
+        Oversized batches (``n > buckets[-1]``) are served in top-bucket
+        chunks, and their wall time is attributed **per request** under the
+        ``"chunked"`` key — one sample for the whole oversized call — not
+        per chunk, so one analytical batch cannot skew the top bucket's
+        point-lookup percentiles.  Percentiles measure wall time only when
+        the runtime synchronizes per call (``sync_stats``, the default).
         """
-        out = {}
+        out: Dict[object, Dict[str, float]] = {}
         for bucket in sorted(set(self._lat) | set(self._compile_s)):
             ts = self._lat.get(bucket, ())
             out[bucket] = {"count": len(ts)}
             if ts:
-                ms = np.asarray(ts) * 1e3
-                out[bucket].update(
-                    p50=float(np.percentile(ms, 50)),
-                    p95=float(np.percentile(ms, 95)),
-                    p99=float(np.percentile(ms, 99)),
-                )
+                out[bucket].update(self._percentiles(ts))
             if bucket in self._compile_s:
                 out[bucket]["compile_ms"] = self._compile_s[bucket] * 1e3
+        if self._lat_chunked:
+            out["chunked"] = {"count": len(self._lat_chunked),
+                              **self._percentiles(self._lat_chunked)}
         return out
+
+    @staticmethod
+    def _percentiles(ts) -> Dict[str, float]:
+        ms = np.asarray(ts) * 1e3
+        return {"p50": float(np.percentile(ms, 50)),
+                "p95": float(np.percentile(ms, 95)),
+                "p99": float(np.percentile(ms, 99))}
 
     # -- the compiled program ------------------------------------------------
     def _forward(self, fks: Tuple[jnp.ndarray, ...], state) -> jnp.ndarray:
@@ -313,8 +363,17 @@ class ServingRuntime:
         divisibility re-checked) with a fresh jit cache, so
         ``num_compiles`` restarts from 0.  Either way the latency windows
         reset: post-refresh ``latency_stats`` never mix pre-refresh
-        samples.  Returns the decision line (also appended to
-        ``plan.reason``).
+        samples.  Compile records follow the cache generation instead: the
+        delta path keeps the live record, a rebuild archives it into
+        :meth:`compile_history` and starts generation ``g+1``.  Returns
+        the decision line (also appended to ``plan.reason``).
+
+        Concurrency: refresh swaps the state pytree out from under the
+        bucket programs and is **not** fenced against concurrent
+        :meth:`serve` calls from other threads.  Serve through an
+        :class:`~repro.core.query.scheduler.AdmissionScheduler` (or its
+        ``refresh()``) when requests are in flight — it drains admitted
+        work before swapping.
         """
         if self.catalog is None:
             return self._note("refresh=no-op(detached: no catalog)")
@@ -354,9 +413,13 @@ class ServingRuntime:
 
     def _reset_stats(self):
         """Latency percentiles restart at a refresh boundary (pre-refresh
-        traces/compiles would pollute the post-refresh distribution)."""
+        samples would pollute the post-refresh distribution).  Compile
+        records are *not* cleared here: they are per cache generation
+        (``num_compiles`` semantics) — a delta refresh keeps the live
+        generation's record, and a rebuild already archived it via
+        ``_install``."""
         self._lat.clear()
-        self._compile_s.clear()
+        self._lat_chunked.clear()
 
     def _rebuild(self, why: str) -> str:
         q = self.query
@@ -456,23 +519,73 @@ class ServingRuntime:
             return jnp.zeros((0, self.out_width), jnp.float32)
         top = self.buckets[-1]
         if n > top:
-            chunks = [self._serve_bucketed([f[i:i + top] for f in fks])
+            # Oversized analytical batch: top-bucket chunks, but the wall
+            # time is attributed to the *request* (one "chunked" sample),
+            # never per chunk into the top bucket's percentile window —
+            # one big batch must not skew point-lookup p99.
+            t0 = time.perf_counter()
+            chunks = [self._serve_bucketed([f[i:i + top] for f in fks],
+                                           record=False)
                       for i in range(0, n, top)]
             if self.sharded is not None:
                 # Eagerly concatenating mesh-sharded chunks miscompiles on
                 # some jax versions (observed: values scaled by the model
                 # axis size) — assemble oversized batches on host instead.
-                return jnp.asarray(np.concatenate(
+                out = jnp.asarray(np.concatenate(
                     [np.asarray(c) for c in chunks], axis=0))
-            return jnp.concatenate(chunks, axis=0)
+            else:
+                out = jnp.concatenate(chunks, axis=0)
+                if self._sync_stats:
+                    jax.block_until_ready(out)
+            self._lat_chunked.append(time.perf_counter() - t0)
+            return out
         return self._serve_bucketed(fks)
 
-    def _serve_bucketed(self, fks: List[np.ndarray]) -> jnp.ndarray:
+    def _serve_bucketed(self, fks: List[np.ndarray], *,
+                        record: bool = True) -> jnp.ndarray:
         n = int(fks[0].shape[0])
-        bucket = next(b for b in self.buckets if b >= n)
-        padded = tuple(
+        bucket, padded = self._admit(fks)
+        return self._execute(padded, bucket, record=record)[:n]
+
+    # Admission/execution split: the async scheduler composes padded
+    # sub-batches itself (coalescing several queued requests into one
+    # bucket-shaped step), so padding and dispatch are separate entry
+    # points rather than one opaque serve call.
+    def _admit(self, fks: List[np.ndarray],
+               bucket: Optional[int] = None
+               ) -> Tuple[int, Tuple[jnp.ndarray, ...]]:
+        """Pad normalized request columns into a bucket-shaped batch.
+
+        Returns ``(bucket, padded)``; ``bucket`` defaults to the smallest
+        configured bucket that fits the rows (callers chunk batches larger
+        than ``buckets[-1]`` before admitting).
+        """
+        n = int(fks[0].shape[0])
+        if bucket is None:
+            if n > self.buckets[-1]:
+                raise ValueError(
+                    f"cannot admit {n} rows in one step: top bucket is "
+                    f"{self.buckets[-1]} (chunk the batch first)")
+            bucket = next(b for b in self.buckets if b >= n)
+        elif bucket < n or bucket not in self.buckets:
+            raise ValueError(f"bucket {bucket} cannot hold {n} rows "
+                             f"(buckets: {self.buckets})")
+        return bucket, tuple(
             jnp.asarray(np.pad(f, (0, bucket - n), constant_values=PAD_KEY))
             for f in fks)
+
+    def _execute(self, padded: Tuple[jnp.ndarray, ...], bucket: int, *,
+                 record: bool = True) -> jnp.ndarray:
+        """Dispatch one bucket program; returns the full padded output.
+
+        Owns the latency/trace bookkeeping: a first call into a bucket is
+        dominated by trace + XLA compile and lands in the generation's
+        compile record instead of the percentile window (where it would
+        masquerade as a p99 outlier); ``record=False`` additionally keeps
+        the steady-state wall time out of the bucket window — chunk
+        executions of an oversized request are attributed to the whole
+        request by the caller, not per chunk.
+        """
         traces_before = self._trace_count
         t0 = time.perf_counter()
         out = self._jit(padded, self._state)
@@ -483,13 +596,11 @@ class ServingRuntime:
             jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         if self._trace_count > traces_before:
-            # First call into this bucket: dominated by trace + XLA compile,
-            # which would otherwise masquerade as a p99 outlier.
             self._compile_s[bucket] = dt
-        else:
+        elif record:
             self._lat.setdefault(
                 bucket, collections.deque(maxlen=LATENCY_WINDOW)).append(dt)
-        return out[:n]
+        return out
 
     def _normalize(self, requests) -> List[np.ndarray]:
         keys = self.request_keys
@@ -511,6 +622,13 @@ class ServingRuntime:
         n = out[0].shape[0]
         if any(c.shape[0] != n for c in out):
             raise ValueError("ragged fk columns in one request batch")
+        for key, c in zip(keys, out):
+            if np.any(c == PAD_KEY):
+                raise SentinelKeyError(
+                    f"request column {key!r} contains the padding sentinel "
+                    f"{int(PAD_KEY)} (PAD_KEY): sentinel-valued keys are "
+                    "indistinguishable from padded slots and would "
+                    "silently score zero")
         return out
 
 

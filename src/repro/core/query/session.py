@@ -57,6 +57,7 @@ from ..laq.table import Table
 from .compile import CompiledQuery, compile_query
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
                  GroupKey, Model, PredictiveQuery)
+from .scheduler import AdmissionScheduler, ScheduledPlan
 from .serving import DEFAULT_BUCKETS, ServingRuntime, compile_serving
 
 _SEXPR_OPS = ("col", "add", "sub", "mul", "div")
@@ -291,10 +292,22 @@ class QueryBuilder:
             jnp.asarray(batch, jnp.int32))
 
     def serve(self, *, buckets: Sequence[int] = DEFAULT_BUCKETS,
-              **overrides) -> ServingRuntime:
-        """The (cached) bucketed dynamic-batch serving runtime."""
-        return self._bound().serving(self.build(), buckets=buckets,
-                                     **overrides)
+              async_: bool = False,
+              **overrides) -> "ServingRuntime | ScheduledPlan":
+        """The (cached) bucketed dynamic-batch serving runtime.
+
+        With ``async_=True`` the runtime is registered on the session's
+        :meth:`Session.scheduler` and the returned :class:`ScheduledPlan`
+        handle serves through the admission scheduler (``.submit(...)`` →
+        Future) instead of the synchronous ``serve`` call — use it when
+        many concurrent callers share the plan; stay synchronous for
+        single-caller batch scoring.
+        """
+        runtime = self._bound().serving(self.build(), buckets=buckets,
+                                        **overrides)
+        if async_:
+            return self._bound().scheduler().register(runtime)
+        return runtime
 
     def explain(self, **overrides) -> str:
         """The compiled plan's decision trail (one line per choice)."""
@@ -337,6 +350,7 @@ class Session:
         # the artifact refreshed) on every hit.
         self._plans: Dict[tuple, Tuple[tuple, CompiledQuery]] = {}
         self._runtimes: Dict[tuple, Tuple[tuple, ServingRuntime]] = {}
+        self._scheduler: Optional[AdmissionScheduler] = None
 
     # -- builders ------------------------------------------------------------
     def query(self, fact: str) -> QueryBuilder:
@@ -437,12 +451,27 @@ class Session:
         if hit is not None:
             built_at, runtime = hit
             if built_at != versions:
-                runtime.refresh()
+                self._refresh_runtime(runtime)
                 self._runtimes[key] = (versions, runtime)
             return runtime
         runtime = compile_serving(self.catalog, q, buckets=buckets, **opts)
         self._runtimes[key] = (versions, runtime)
         return runtime
+
+    def _refresh_runtime(self, runtime: ServingRuntime) -> str:
+        """Refresh one runtime, fencing through the scheduler if it owns it.
+
+        A runtime registered on the session scheduler may have batches in
+        flight on the drain thread — swapping state under them would mix
+        data generations, so the refresh is routed through the scheduler's
+        drain-then-swap fence instead of calling ``runtime.refresh()``
+        directly.
+        """
+        if self._scheduler is not None and not self._scheduler.closed \
+                and self._scheduler.is_registered(runtime):
+            return next(iter(
+                self._scheduler.refresh(runtime).values()))
+        return runtime.refresh()
 
     def refresh(self) -> Dict[str, str]:
         """Bring every cached plan/runtime up to the catalog's versions.
@@ -460,9 +489,30 @@ class Session:
                     self._tables_of(art.query, **gate))
                 if built_at != versions:
                     desc = f"{art.__class__.__name__}[{art.query.fact}#{i}]"
-                    out[desc] = art.refresh()
+                    if isinstance(art, ServingRuntime):
+                        out[desc] = self._refresh_runtime(art)
+                    else:
+                        out[desc] = art.refresh()
                     store[key] = (versions, art)
         return out
+
+    def scheduler(self, **opts) -> AdmissionScheduler:
+        """The session's admission scheduler (lazy singleton).
+
+        Created on first call; ``opts`` (``slo_ms``, ``max_queued_rows``,
+        ``batch_reserve_rows``, ``auto_start``) only apply then — later
+        calls with options on a live scheduler raise rather than silently
+        ignoring them.  ``QueryBuilder.serve(async_=True)`` registers its
+        runtime here, and session-driven refreshes of registered runtimes
+        fence through it automatically.
+        """
+        if self._scheduler is None or self._scheduler.closed:
+            self._scheduler = AdmissionScheduler(**opts)
+        elif opts:
+            raise ValueError(
+                "session scheduler already running; close() it before "
+                f"re-creating with new options {sorted(opts)}")
+        return self._scheduler
 
     # -- introspection -------------------------------------------------------
     @property

@@ -71,9 +71,25 @@ class FusedFeatureServer:
             buckets=buckets, backend="nonfused",
             serve_backend=serve_backend)
         self.decision = self.runtime_fused.plan.fusion
+        self._scheduled = {}
 
     def runtime(self, fused: bool = True):
         return self.runtime_fused if fused else self.runtime_nonfused
+
+    def scheduled(self, fused: bool = True, **scheduler_opts):
+        """The async serving handle for one runtime (lazy registration).
+
+        Registers the runtime on the session's admission scheduler
+        (created on first use with ``scheduler_opts`` — ``slo_ms``,
+        ``max_queued_rows``, ...) and returns its ``ScheduledPlan``; use
+        ``submit_batch`` for the Future-based request path under
+        concurrent open-loop traffic.
+        """
+        if fused not in self._scheduled:
+            sched = self.session.scheduler(**scheduler_opts)
+            self._scheduled[fused] = sched.register(
+                self.runtime(fused), name="fused" if fused else "nonfused")
+        return self._scheduled[fused]
 
     def append_dim(self, table: str, rows) -> dict:
         """Append dimension rows and refresh both live runtimes in place.
@@ -82,15 +98,24 @@ class FusedFeatureServer:
         table's version; each runtime applies the delta path (extend the PK
         index, prefuse only the new rows) — zero recompiles while the rows
         fit the table's padded capacity — and newly appended keys become
-        servable immediately.  Returns the per-runtime refresh decisions.
+        servable immediately.  A runtime serving through the admission
+        scheduler is refreshed behind its drain-then-swap fence, so
+        in-flight scheduled batches complete on the old state first.
+        Returns the per-runtime refresh decisions.
         """
         self.catalog.append(table, rows)
-        return {"fused": self.runtime_fused.refresh(),
-                "nonfused": self.runtime_nonfused.refresh()}
+        return {"fused": self.session._refresh_runtime(self.runtime_fused),
+                "nonfused":
+                    self.session._refresh_runtime(self.runtime_nonfused)}
 
     def serve_batch(self, requests, fused: bool = True):
         """Predictions for a batch of per-arm FK requests (any size)."""
         return self.runtime(fused).serve(requests)
+
+    def submit_batch(self, requests, fused: bool = True,
+                     lane: str = "interactive"):
+        """Async request path: enqueue on the scheduler, get a Future."""
+        return self.scheduled(fused).submit(requests, lane=lane)
 
     def serve_rows(self, row_ids, fused: bool = True):
         """Bridge from the old interface: serve the FKs of fact rows."""
@@ -121,6 +146,17 @@ class FusedFeatureServer:
                              f"n={st['count']} {pcts}{extra}")
             lines.append(f"[serve] {name} compiles={rt.num_compiles} "
                          f"(buckets={rt.buckets})")
+        for fused, plan in self._scheduled.items():
+            st = plan.stats()
+            for lane, lt in st["lanes"].items():
+                pcts = (f"p50={lt['p50']:.2f}ms p99={lt['p99']:.2f}ms"
+                        if lt["count"] else "(no completed requests)")
+                lines.append(f"[sched] {plan.name} lane={lane} "
+                             f"n={lt['count']} {pcts}")
+            lines.append(f"[sched] {plan.name} steps={st['steps']} "
+                         f"admitted={st['admitted_rows']} "
+                         f"padded={st['padded_rows']} "
+                         f"rejected={st['rejected']}")
         return "\n".join(lines)
 
 

@@ -371,12 +371,39 @@ def test_latency_stats_reset_across_refresh():
     rng = np.random.default_rng(32)
     cat.append("d1", d1_rows(rng, 2, start=24))
     rt.refresh()
-    assert rt.latency_stats() == {}, \
+    post = rt.latency_stats()
+    assert post[8]["count"] == 0 and "p50" not in post[8], \
         "post-refresh percentiles must not mix pre-refresh samples"
+    # The compile record is per cache *generation*, not per window: a delta
+    # refresh keeps it (no retrace happened).
+    assert post[8]["compile_ms"] == stats[8]["compile_ms"]
     assert rt.num_compiles == n0, "delta refresh adds no traces"
     rt.serve(reqs)
     assert rt.num_compiles == n0, "refreshed state re-dispatches cached jit"
     assert rt.latency_stats()[8]["count"] == 1
+
+
+def test_compile_records_survive_rebuild_per_generation():
+    """Regression: a post-rebuild retrace of an already-seen bucket used to
+    overwrite ``_compile_s[bucket]``, losing the first generation's compile
+    time while ``num_compiles`` claimed a fresh generation."""
+    cat = star_catalog(seed=33, slack=2)
+    q = _query(_models(seed=10)[0], group=False)
+    rt = compile_serving(cat, q, buckets=(8,))
+    reqs = {"fk1": np.array([0, 2], np.int32),
+            "fk2": np.array([0, 1], np.int32)}
+    rt.serve(reqs)
+    assert rt.generation == 0
+    gen0 = rt.compile_history()[0][8]
+    rng = np.random.default_rng(34)
+    cat.append("d1", d1_rows(rng, 6, start=24))   # exceeds capacity slack
+    rt.refresh()                                  # → rebuild: new generation
+    rt.serve(reqs)                                # retrace of bucket 8
+    assert rt.generation == 1
+    hist = rt.compile_history()
+    assert len(hist) == 2 and hist[0][8] == gen0, \
+        "rebuild retrace must archive, not overwrite, generation-0 compiles"
+    assert rt.latency_stats()[8]["compile_ms"] == hist[1][8]
 
 
 # ----------------------------------------------- DomainCache capacity (bug)

@@ -79,3 +79,66 @@ def test_serving_equivalent_to_predict_rows(name, combo, seed, size):
     # Bucketing never leaks padding and never recompiles past the bucket set.
     assert got.shape == (size, runtime.out_width)
     assert runtime.num_compiles <= len(BUCKETS)
+
+
+# ------------------------------------------------- request normalization
+def _norm_runtime():
+    _, _, runtime, passing = _pair(predictive_query_names()[0],
+                                   "fused", "jnp")
+    return runtime, passing
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 2), size=st.integers(0, 40))
+def test_three_request_forms_are_equivalent(seed, size):
+    """Mapping / per-arm sequence / stacked array normalize identically —
+    including the zero-row path, which returns an empty (0, out_width)."""
+    runtime, _ = _norm_runtime()
+    rng = np.random.default_rng(seed)
+    cols = [rng.integers(0, 1000, size).astype(np.int32)
+            for _ in runtime.request_keys]
+    as_mapping = dict(zip(runtime.request_keys, cols))
+    as_seq = [c.copy() for c in cols]
+    as_stack = np.stack(cols, axis=0)     # arm-major (num_arms, n)
+    outs = [np.asarray(runtime.serve(r))
+            for r in (as_mapping, as_seq, as_stack)]
+    assert outs[0].shape == (size, runtime.out_width)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 2), size=st.integers(1, 20),
+       arm=st.integers(0, 10), delta=st.integers(1, 5))
+def test_ragged_and_missing_columns_are_named_errors(seed, size, arm, delta):
+    runtime, _ = _norm_runtime()
+    rng = np.random.default_rng(seed)
+    keys = runtime.request_keys
+    cols = {k: rng.integers(0, 1000, size).astype(np.int32) for k in keys}
+    bad_key = keys[arm % len(keys)]
+    ragged = dict(cols)
+    ragged[bad_key] = rng.integers(0, 1000, size + delta).astype(np.int32)
+    with pytest.raises(ValueError, match="ragged"):
+        runtime.serve(ragged)
+    missing = {k: v for k, v in cols.items() if k != bad_key}
+    if missing != cols:
+        with pytest.raises(KeyError, match=bad_key):
+            runtime.serve(missing)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 2), size=st.integers(1, 20),
+       pos=st.integers(0, 400))
+def test_sentinel_valued_keys_are_rejected(seed, size, pos):
+    """PAD_KEY-valued request keys are indistinguishable from padding and
+    used to score silently as zero; now a named error."""
+    from repro.core.laq import PAD_KEY
+    from repro.core.query import SentinelKeyError
+    runtime, _ = _norm_runtime()
+    rng = np.random.default_rng(seed)
+    cols = {k: rng.integers(0, 1000, size).astype(np.int32)
+            for k in runtime.request_keys}
+    k = runtime.request_keys[pos % len(runtime.request_keys)]
+    cols[k][pos % size] = PAD_KEY
+    with pytest.raises(SentinelKeyError, match="padding sentinel"):
+        runtime.serve(cols)
