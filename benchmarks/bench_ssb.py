@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.data import compiled_plan, generate_ssb, query_groups
+from repro.data import QUERY_IR, generate_ssb, query_groups, ssb_session
 
 from .common import bench, emit
 
@@ -21,6 +21,7 @@ SCALE = 0.003   # shrink factor vs true SSB (CPU-sized)
 def run(sfs=(1, 2, 4)):
     for sf in sfs:
         data = generate_ssb(sf=sf, scale=SCALE, seed=0)
+        session = ssb_session(data)
         groups = query_groups()
         total_us = 0.0
         for gname, qnames in groups.items():
@@ -28,7 +29,7 @@ def run(sfs=(1, 2, 4)):
             for qname in qnames:
                 # Offline (joins/selection/codes) happens at compile; the
                 # benchmarked call is the query's single jitted online plan.
-                fn = compiled_plan(qname, data).run
+                fn = session.compile(QUERY_IR[qname]()).run
                 us = bench(fn)
                 g_us += us
                 emit(f"ssb/{qname}/sf{sf}", us,

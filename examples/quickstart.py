@@ -13,7 +13,12 @@ single fluent entry point, ``repro.core.query.Session``:
      across a forced multi-device mesh, bit-identical to one device,
   5. append dimension rows through the versioned ``Catalog`` — every cached
      plan and serving runtime refreshes *in place* (delta prefuse, zero
-     recompiles), bit-identical to a cold rebuild.
+     recompiles), bit-identical to a cold rebuild,
+  6. run a *workload* at once with ``Session.run_all`` — the multi-query
+     optimizer shares physical artifacts (PK indices, join pointers,
+     prefused partials) across plans through the session's reference-
+     counted ``ArtifactPool`` and stacks compatible plans into one vmapped
+     program, so a refresh touches each shared artifact once.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -40,8 +45,8 @@ rng = np.random.default_rng(0)
 # A Catalog is the mutable, *versioned* data surface: appends/updates bump
 # per-table version counters and every cached plan refreshes incrementally.
 # (A plain {name: Table} dict also works — it wraps read-only.)  The
-# ``capacity=48`` over-allocation on products leaves padded rows for the
-# appends in step 6 to land in without changing any array shape.
+# ``capacity=64`` over-allocation on products leaves padded rows for the
+# appends in steps 6–8 to land in without changing any array shape.
 catalog = Catalog({
     "customers": Table.from_columns("customers", {
         "custkey": np.arange(100),
@@ -53,7 +58,7 @@ catalog = Catalog({
         "price": rng.gamma(2.0, 20.0, 40).astype(np.float32),
         "rating": rng.uniform(1, 5, 40).astype(np.float32),
         "category": rng.integers(0, 4, 40),
-    }, key_cols=("prodkey", "category"), capacity=48),
+    }, key_cols=("prodkey", "category"), capacity=64),
     "orders": Table.from_columns("orders", {
         "o_custkey": rng.integers(0, 100, 500),
         "o_prodkey": rng.integers(0, 40, 500),
@@ -118,7 +123,7 @@ print(f"sharded == single-device ✓ on mesh {dict(serving.mesh.shape)}; "
 # -- 6. Appending dimension rows: incremental prefuse maintenance ------------
 # New products arrive.  ``catalog.append`` is transactional: it bumps the
 # table's version and logs the delta.  The appended rows fit products'
-# padded capacity (48), so every derived artifact refreshes *in place* —
+# padded capacity (64), so every derived artifact refreshes *in place* —
 # PK index sorted-merge extend, Eq. 1 partials prefused for ONLY the 6 new
 # rows, predicate masks scattered — and the already-compiled programs keep
 # executing from the jit cache: zero recompiles, never a stale partial.
@@ -183,3 +188,52 @@ print(f"scheduled serving ✓ steps={st['steps']} "
       f"(backpressure bound rejects with SchedulerBackpressureError; "
       f"tune via sess.scheduler(slo_ms=..., max_queued_rows=...))")
 sess.scheduler().close()
+
+# -- 8. Multi-query: shared artifacts + batched execution --------------------
+# A Session is a *multi-query* optimizer.  Every plan it compiles acquires
+# its physical artifacts — PK indices, factored join pointers, predicate
+# masks, Eq. 1 prefused partials — from one reference-counted pool keyed by
+# arm content, so a workload of N queries over the same star holds ONE copy
+# of each distinct artifact, and a dimension append refreshes it ONCE, not
+# once per plan.
+variants = [pipeline] + [
+    (sess.query("orders")
+     .join("customers", on=("o_custkey", "custkey"),
+           features=["age", "spend"])
+     .join("products", on=("o_prodkey", "prodkey"),
+           features=["price", "rating"],
+           where=[("rating", ">", 1.5)])
+     .where(("quantity", ">", float(thr)))       # only the predicate varies:
+     .predict(model)                             # joins/partials are shared
+     .group_by(("products", "category", 4), num_groups="auto")
+     .agg(qty="sum(quantity)", score=("mean", PREDICTION), n="count",
+          q_max="max(quantity)"))
+    for thr in (1.0, 4.0, 6.0)]
+results = sess.run_all(variants)                 # ONE stacked program: the
+for r, b in zip(results, variants):              # four plans share a vmapped
+    np.testing.assert_array_equal(               # dispatch, bit-exact vs the
+        np.asarray(r["qty"]), np.asarray(b.run()["qty"]))  # per-plan path
+stats = sess.pool.stats()
+print(f"run_all over {len(variants)} variants ✓ pool: "
+      f"{stats['entries']} shared artifacts "
+      f"({stats['hits']} hits / {stats['misses']} misses, "
+      f"{stats['bytes']}B resident, by kind {stats['by_kind']})")
+# Structured explains, unified across the surface: str() is the legacy
+# one-liner, .as_dict() the machine-readable form, and shared_artifacts
+# names the pool keys this plan holds references to.
+report = pipeline.explain()
+print(f"explain: kind={report.kind} shares {len(report.shared_artifacts)} "
+      f"pooled artifacts; trail={list(report.trail)[-1:]}")
+# One more append: every plan above is stale, but the pool refreshes each
+# distinct artifact exactly once — O(artifacts), not O(plans).
+catalog.append("products", {
+    "prodkey": np.arange(48, 50),
+    "price": np.float32([5.0, 6.0]), "rating": np.float32([2.5, 4.0]),
+    "category": np.int64([0, 3])})
+updates_before = sess.pool.stats()["updates"]
+sess.refresh()
+print(f"append → {sess.pool.stats()['updates'] - updates_before} pooled "
+      f"artifact updates for {sess.num_plans} cached plans ✓")
+sess.evict()                                     # release pool references
+assert sess.pool.stats()["entries"] == 0
+print("evict → pool drained ✓")

@@ -180,15 +180,34 @@ def groupby_codes(codes: jnp.ndarray, num_groups: int, *,
     abstract and the check is skipped (the caller owns sizing there).  A
     caller that already measured the domain (``auto_num_groups``) passes
     ``n_live`` to skip the redundant host-side count.
+
+    Concrete codes resolve on the host in numpy: XLA's CPU sort makes the
+    device ``unique``/``searchsorted`` an order of magnitude slower than
+    numpy's at offline sizes, and this resolution is the per-plan floor of
+    a multi-query compile sweep.  Both paths are bit-identical (same sort
+    order, same 'left' searchsorted, same overflow clamp).
     """
-    if n_live is None:
-        n_live = _live_code_count(codes)
+    try:
+        concrete = np.asarray(codes)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        concrete = None
+    if n_live is None and concrete is not None:
+        n_live = int(np.unique(concrete[concrete != int(PAD_GROUP)]).size)
     if n_live is not None and n_live > num_groups:
         raise ValueError(
             f"group-by overflow: {n_live} distinct live group codes "
             f"exceed num_groups={num_groups}; the excess groups would "
             "silently vanish from every aggregate. Raise num_groups "
             f"(>= {n_live}) or coarsen the group keys.")
+    if concrete is not None:
+        u = np.unique(concrete)[:num_groups]
+        uniq = np.full((num_groups,), int(PAD_GROUP), dtype=concrete.dtype)
+        uniq[:u.size] = u
+        gid = np.searchsorted(uniq, concrete).astype(np.int32)
+        gid = np.where(concrete != int(PAD_GROUP),
+                       np.minimum(gid, num_groups), num_groups)
+        return jnp.asarray(uniq), jnp.asarray(gid.astype(np.int32))
     uniq = jnp.unique(codes, size=num_groups, fill_value=PAD_GROUP)
     gid = jnp.searchsorted(uniq, codes).astype(jnp.int32)
     gid = jnp.where(codes != PAD_GROUP,

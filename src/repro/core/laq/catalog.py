@@ -151,6 +151,16 @@ class Catalog(Mapping):
         names = sorted(self._tables if names is None else set(names))
         return tuple((n, self._versions[n]) for n in names)
 
+    def stale_tables(self, versions: Mapping[str, int]) -> Tuple[str, ...]:
+        """Names in ``versions`` whose current version differs, sorted.
+
+        The staleness probe shared by every derived artifact (compiled
+        plans, serving runtimes, pool entries): each records the versions
+        it was built against and asks what moved since.
+        """
+        return tuple(sorted(n for n, v in versions.items()
+                            if self._versions[n] != v))
+
     def deltas_since(self, name: str, version: int) -> Tuple[TableDelta, ...]:
         """Every delta applied to ``name`` after ``version``, in order.
 

@@ -34,8 +34,35 @@ and plan-cache keys live on the session; plans are cached structurally
 (:func:`~repro.core.query.session.query_key`), so equivalent pipelines —
 fluent, hand-built IR, or registry rebuilds — never re-trace.
 
-Migration from the pre-Session entry points (which remain as thin shims —
-the ``PredictiveQuery`` IR is still the stable compiler contract):
+Multi-query optimization (the shared-artifact pool + batched execution)
+-----------------------------------------------------------------------
+A session is a *multi-query* optimizer, not just a plan cache.  Every plan
+and serving runtime compiled through it acquires its physical artifacts —
+PK indices, factored join pointers, predicate dim-masks, pre-fused model
+partials — from one reference-counted :class:`ArtifactPool`
+(``sess.pool``) keyed by arm-level content hashes.  N plans sharing a join
+arm hold ONE pkindex/pointer array; N plans pre-fusing the same model over
+the same dimension hold ONE partial.  The payoffs::
+
+    sess.pool.stats()        # entries/hits/misses/bytes, per artifact kind
+    catalog.append(...)      # a refresh touches each shared artifact ONCE
+    sess.run_all([q1, ...])  # structurally compatible plans stack into one
+                             # jitted program (leading query axis, vmapped)
+                             # — one dispatch per class, bit-exact vs run()
+    sess.evict(q)            # release a query's pool references; the last
+                             # holder of an artifact frees it
+
+``plan_query`` hears about sharing too: a join arm already resident in the
+pool amortizes its maintenance cost over all holders, which the planner
+folds into the fusion decision (``sharing=…x`` in the plan reason).
+``compiled.explain()`` / ``runtime.explain()`` / ``scheduler.explain()``
+all return a unified :class:`ExplainReport` whose ``shared_artifacts``
+lists the pool keys a plan holds; ``str(report)`` is the legacy one-line
+trail, ``report.as_dict()`` the machine-readable form.
+
+Migration from the deprecated pre-Session entry points (thin shims that now
+raise ``DeprecationWarning`` — the ``PredictiveQuery`` IR itself is still
+the stable compiler contract):
 
 =============================================  =============================
 Old call                                       Session call
@@ -43,11 +70,19 @@ Old call                                       Session call
 ``compile_query(catalog, q, **kw)``            ``sess.compile(q, **kw)`` or
                                                ``sess.bind(q).compile(**kw)``
 ``compile_query(catalog, q).run()``            ``sess.bind(q).run()``
+``[compile_query(c, q).run() for q in qs]``    ``sess.run_all(qs)`` (pooled
+                                               artifacts + one stacked
+                                               program per class)
 ``CompiledQuery.predict_rows(ids)``            ``builder.rows(ids)``
 ``compile_serving(catalog, q, buckets=b)``     ``builder.serve(buckets=b)``
 ``compile_query(..., mesh=m, shard_...=...)``  ``Session(catalog, mesh=m,
                                                shard_...)`` once, per-call
                                                plumbing gone
+``compiled_plan(name, data)`` (SSB registry)   ``ssb_session(data).compile(
+                                               QUERY_IR[name]())``
+``compile_query({'t': table, ...}, q)``        ``Session(Catalog({...}))``
+(plain-dict catalog, auto-wrapped read-only;   — versioned, appendable,
+deprecated)                                    pool-shared
 hand-built ``PredictiveQuery(...)``            ``sess.query(fact).join(...)
                                                .where(...).predict(...)
                                                .group_by(...).agg(...)``
@@ -141,6 +176,9 @@ from ..laq.catalog import (Catalog, CatalogHistoryError,
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
                  GroupKey, PredictiveQuery, eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
+from .explain import ExplainReport
+from .multiquery import (ArtifactPool, arm_keys, artifact_bytes,
+                         make_stacked_runner, stack_key, stack_states)
 from .planner import (AggDecision, QueryPlan, plan_aggregation,
                       plan_partition_spec, plan_placements, plan_query,
                       plan_serving_backend, planner_threshold,
@@ -162,6 +200,9 @@ __all__ = [
     "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "TableDelta",
     "changed_spans",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",
+    "ExplainReport",
+    "ArtifactPool", "arm_keys", "artifact_bytes", "make_stacked_runner",
+    "stack_key", "stack_states",
     "AggDecision", "QueryPlan", "plan_aggregation", "plan_partition_spec",
     "plan_placements", "plan_query", "plan_serving_backend",
     "planner_threshold", "PLANNER_THRESHOLDS",

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Dict, Mapping, Optional, Tuple
 
 import jax
@@ -52,8 +53,10 @@ from ..laq.projection import mapping_matrix
 from ..laq.selection import select
 from ..laq.star import DimSpec, StarJoin
 from ..laq.table import PAD_KEY, Table
+from .explain import ExplainReport
 from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
+from .multiquery import holds_tracers
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
 from .sharding import (make_predict_rows_forward, predict_rows_state,
@@ -96,6 +99,17 @@ class CompiledQuery:
     # streaming plan must not grow its explain() string without limit.
     _refresh_notes: "collections.deque" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=8))
+    # Session-owned ArtifactPool sharing: the pool this plan acquired from
+    # (None when compiled standalone) and the keys it holds references to —
+    # {"arms": ((pkindex, join, dmask|None) per arm), "partials": (keys,)}.
+    # ``close()`` releases them; eviction is an optimization, so a compile
+    # that raises mid-way leaking a reference is benign retention, never a
+    # correctness hazard.
+    _pool: Optional[object] = None
+    _pool_refs: Dict = dataclasses.field(default_factory=dict)
+    # The raw (un-jitted) online closure, kept so Session.run_all can vmap
+    # structurally compatible plans into one stacked program.
+    _online_fn: Optional[callable] = None
 
     @property
     def is_traced(self) -> bool:
@@ -128,6 +142,35 @@ class CompiledQuery:
         if self._predict_rows is None:
             raise ValueError("query has no model")
         return self._predict_rows(row_ids, self._state)
+
+    # -- introspection / lifecycle ------------------------------------------
+    def _pool_keys(self) -> list:
+        """Every pool key this plan holds a reference to (with multiplicity)."""
+        keys = [k for ref in self._pool_refs.get("arms", ()) for k in ref
+                if k is not None]
+        keys.extend(self._pool_refs.get("partials", ()))
+        return keys
+
+    def explain(self) -> ExplainReport:
+        """Structured plan/refresh report (``str()`` gives the legacy line)."""
+        return ExplainReport(
+            kind="compiled", backend=self.backend,
+            join_backend=self.join_backend, agg_backend=self.agg_backend,
+            serve_backend=self.serve_backend,
+            plan_reason=getattr(self, "_base_reason", self.plan.reason),
+            trail=tuple(self._refresh_notes),
+            shared_artifacts=tuple(self._pool_keys()),
+            extras=(("selectivity", self.selectivity),))
+
+    def close(self) -> None:
+        """Release this plan's shared-artifact references (idempotent).
+
+        ``Session.evict`` calls this when dropping a cached plan; the pool
+        evicts an artifact only when its *last* referencing plan closes.
+        """
+        if self._pool is not None and self._pool_refs:
+            self._pool.release(self._pool_keys())
+        self._pool_refs = {}
 
     # -- incremental maintenance --------------------------------------------
     def _participating(self) -> Tuple[str, ...]:
@@ -184,12 +227,21 @@ class CompiledQuery:
         return line
 
     def _recompile(self, why: str) -> str:
+        # Recompile FIRST (the fresh plan re-acquires shared artifacts,
+        # keeping their refcounts above zero), then release the old
+        # references — releasing first would evict artifacts the fresh
+        # compile is about to rebuild.
+        old_pool, old_keys = self._pool, self._pool_keys()
         fresh = compile_query(self.catalog, self._source, **self._opts)
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(fresh, f.name))
+        if old_pool is not None:
+            old_pool.release(old_keys)
         return self._note(f"refresh=recompile({why})")
 
     def _refresh_delta(self, changed) -> str:
+        if self._pool is not None and self._pool_refs.get("arms"):
+            return self._refresh_delta_pooled(changed)
         q = self.query
         cat = self.catalog
         fact = cat[q.fact]
@@ -243,7 +295,45 @@ class CompiledQuery:
         if prefused is not None:
             prefused = extend_prefused(prefused, star.dims, q.model,
                                        dirty_rows)
+        self._indices = tuple(indices)
+        return self._rebind(changed, star, valid, prefused,
+                            "shapes kept, jit cache reused")
 
+    def _refresh_delta_pooled(self, changed) -> str:
+        """Delta refresh for pool-backed plans.
+
+        The shared quasi-static artifacts (PK indices, join pointers,
+        predicate masks, prefused partials) come from the pool, which
+        delta-updates each stale entry *exactly once* no matter how many
+        plans reference it — so N plans over one registry pay O(distinct
+        artifacts), not O(plans), for the probe/prefuse work.  Only the
+        per-plan residue — the validity fold, group codes and state-pytree
+        rebuild — runs here.
+        """
+        q = self.query
+        cat = self.catalog
+        pool = self._pool
+        indices, joins, dmasks = [], [], []
+        for (ikey, jkey, mkey) in self._pool_refs["arms"]:
+            indices.append(pool.get(ikey))
+            ptr, found = pool.get(jkey)
+            joins.append(FactoredJoin(ptr, found))
+            dmasks.append(pool.get(mkey) if mkey is not None else None)
+        star, valid = _assemble_star(cat, q, tuple(joins),
+                                     dmasks=tuple(dmasks))
+        prefused = self.prefused
+        pkeys = self._pool_refs.get("partials", ())
+        if pkeys:
+            prefused = PrefusedStar(tuple(pool.get(k) for k in pkeys),
+                                    prefused.h)
+        self._indices = tuple(indices)
+        return self._rebind(changed, star, valid, prefused,
+                            "pooled artifacts, jit cache reused")
+
+    def _rebind(self, changed, star, valid, prefused, how: str) -> str:
+        """Shared delta-refresh tail: group codes, counts, state pytree."""
+        q = self.query
+        cat = self.catalog
         codes = uniq = gid = None
         if q.group_keys:
             cols, bounds = _group_columns(cat, q, star)
@@ -254,14 +344,13 @@ class CompiledQuery:
                 raise _GroupOverflow(str(e)) from e
 
         rows = jnp.sum(valid.astype(jnp.int32))
-        n_fact = _static_int(fact.nvalid, fact.capacity)
+        n_fact = _static_int(star.fact.nvalid, star.fact.capacity)
         self.star = star
         self.prefused = prefused
         self.group_codes = uniq
         self._gid = gid
         self._rows = rows
         self.selectivity = float(rows) / max(n_fact, 1)
-        self._indices = tuple(indices)
         state = _query_state(star, prefused, gid)
         if self._sp is not None:
             tables = (list(prefused.partials) if self.backend == "fused"
@@ -275,8 +364,7 @@ class CompiledQuery:
         self.versions = {n: cat.version(n) for n in self._participating()}
         touched = ",".join(f"{n}+{len(changed[n])}"
                            for n in sorted(changed))
-        return self._note(f"refresh=delta({touched}; shapes kept, "
-                          "jit cache reused)")
+        return self._note(f"refresh=delta({touched}; {how})")
 
 
 class _GroupOverflow(ValueError):
@@ -292,7 +380,8 @@ def _static_int(x, default: int) -> int:
 
 
 def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
-                   joins: Tuple[FactoredJoin, ...]
+                   joins: Tuple[FactoredJoin, ...],
+                   dmasks: Optional[Tuple] = None
                    ) -> Tuple[StarJoin, jnp.ndarray]:
     """Fold every selection mask into the combined validity, given resolved
     per-arm joins.
@@ -300,21 +389,26 @@ def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
     The single definition of predicate semantics (fact preds AND-fold, dim
     preds gathered through the FK pointers) shared by the cold compile and
     the delta refresh — the two must agree bitwise or refresh loses its
-    ≡-cold-rebuild contract.
+    ≡-cold-rebuild contract.  ``dmasks`` optionally supplies precomputed
+    per-arm dimension masks (pool-shared); ``Pred.mask`` folds the table's
+    validity itself, so a pooled ``valid ∧ preds`` mask is boolean-equal to
+    the AND-fold done here.
     """
     fact = catalog[q.fact]
     valid = fact.valid_mask()
     for p in q.fact_preds:
         valid = valid & p.mask(fact)
     dims = []
-    for arm, fj in zip(q.arms, joins):
+    for j, (arm, fj) in enumerate(zip(q.arms, joins)):
         dim = catalog[arm.table]
         dims.append(DimSpec(dim, arm.fk_col, arm.pk_col, arm.feature_cols))
         ok = fj.found
-        if arm.preds:
+        dmask = dmasks[j] if dmasks is not None else None
+        if dmask is None and arm.preds:
             dmask = arm.preds[0].mask(dim)
             for p in arm.preds[1:]:
                 dmask = dmask & p.mask(dim)
+        if dmask is not None:
             ok = ok & jnp.take(dmask, fj.ptr)
         valid = valid & ok
     star = StarJoin(fact=fact, dims=tuple(dims), joins=tuple(joins),
@@ -322,21 +416,42 @@ def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
     return star, valid
 
 
-def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery
-                  ) -> Tuple[StarJoin, jnp.ndarray, Tuple[PKIndex, ...]]:
+def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery,
+                  pool=None
+                  ) -> Tuple[StarJoin, jnp.ndarray, Tuple[PKIndex, ...],
+                             Tuple[tuple, ...]]:
     """Joins + combined validity with every selection mask folded in.
 
     Also returns the per-arm ``PKIndex`` — the quasi-static half of each
-    join, kept for ``refresh`` to extend instead of re-sorting.
+    join, kept for ``refresh`` to extend instead of re-sorting.  With a
+    ``pool``, indices/pointers/masks are acquired from the shared
+    :class:`~.multiquery.ArtifactPool` (computed once per distinct arm
+    across all plans) and the per-arm reference keys are returned as the
+    fourth element (empty tuple when unpooled).
     """
     fact = catalog[q.fact]
-    joins, indices = [], []
+    joins, indices, arm_refs, dmasks = [], [], [], []
     for arm in q.arms:
-        idx = pk_index(catalog[arm.table].key(arm.pk_col))
-        joins.append(idx.probe(fact.key(arm.fk_col)))
+        if pool is not None:
+            idx, ikey = pool.acquire_pkindex(arm.table, arm.pk_col)
+            (ptr, found), jkey = pool.acquire_join(
+                q.fact, arm.fk_col, arm.table, arm.pk_col)
+            fj = FactoredJoin(ptr, found)
+            dmask = mkey = None
+            if arm.preds:
+                dmask, mkey = pool.acquire_dmask(arm.table, arm.preds)
+            arm_refs.append((ikey, jkey, mkey))
+            dmasks.append(dmask)
+        else:
+            idx = pk_index(catalog[arm.table].key(arm.pk_col))
+            fj = idx.probe(fact.key(arm.fk_col))
+            dmasks.append(None)
+        joins.append(fj)
         indices.append(idx)
-    star, valid = _assemble_star(catalog, q, tuple(joins))
-    return star, valid, tuple(indices)
+    star, valid = _assemble_star(
+        catalog, q, tuple(joins),
+        dmasks=tuple(dmasks) if pool is not None else None)
+    return star, valid, tuple(indices), tuple(arm_refs)
 
 
 def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
@@ -436,8 +551,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   memory_budget_bytes: Optional[int] = None,
                   interpret: bool = False, mesh=None,
                   shard_axis: str = "model",
-                  shard_threshold_bytes: Optional[int] = None
-                  ) -> CompiledQuery:
+                  shard_threshold_bytes: Optional[int] = None,
+                  pool=None) -> CompiledQuery:
     """Plan + lower ``q`` against ``catalog`` into one jitted program.
 
     ``catalog`` may be a :class:`~repro.core.laq.Catalog` — the versioned
@@ -487,6 +602,13 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
     _check_aggregates(q)
+    if not isinstance(catalog, Catalog):
+        warnings.warn(
+            "passing a plain mapping to compile_query is deprecated and "
+            "will require an explicit wrap in a future release; construct "
+            "a repro.core.laq.Catalog (or go through Session) — see the "
+            "migration table in repro.core.query",
+            DeprecationWarning, stacklevel=2)
     cat0 = Catalog.wrap(catalog)
     for arm in q.arms:   # teach the catalog the join contract (PK columns)
         cat0.note_unique(arm.table, arm.pk_col)
@@ -497,14 +619,25 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                 batches_per_update=batches_per_update,
                 memory_budget_bytes=memory_budget_bytes,
                 interpret=interpret, mesh=mesh, shard_axis=shard_axis,
-                shard_threshold_bytes=shard_threshold_bytes)
+                shard_threshold_bytes=shard_threshold_bytes, pool=pool)
+    # Pool sharing engages only on the plain single-device path against the
+    # pool's own catalog: select-compaction rebinds the fact to a local
+    # table, mesh placement commits arrays to devices, and tracer-holding
+    # tables must never leak into a cross-plan cache.
+    use_pool = (pool is not None and select_capacity is None
+                and mesh is None and pool.catalog is cat0
+                and not holds_tracers(cat0, q))
+    # How many plans already share these join artifacts — measured BEFORE
+    # this plan acquires (its own reference must not inflate the hint).
+    sharing = pool.sharing_hint(q.fact, q.arms) if use_pool else 1.0
     catalog = cat0
     if select_capacity is not None:
         fact = select(catalog[q.fact], q.fact_preds,
                       capacity=select_capacity)
         catalog = {**catalog, q.fact: fact}
         q = dataclasses.replace(q, fact_preds=())
-    star, valid, indices = _resolve_star(catalog, q)
+    star, valid, indices, arm_refs = _resolve_star(
+        catalog, q, pool=pool if use_pool else None)
     fact = star.fact
     rows = jnp.sum(valid.astype(jnp.int32))
     # Offline compilation measures selectivity from the data; when a caller
@@ -547,7 +680,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                       out_width=out_width,
                       agg_ops=tuple(a.op for a in q.aggregates),
                       batches_per_update=batches_per_update,
-                      memory_budget_bytes=memory_budget_bytes)
+                      memory_budget_bytes=memory_budget_bytes,
+                      sharing=sharing)
     backend = plan.backend if backend == "auto" else backend
     join_backend = plan.join_backend if join_backend == "auto" else join_backend
     agg_backend = ((plan.agg.backend if plan.agg else "segment")
@@ -560,8 +694,14 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             reason=f"{plan.reason}; serve={serve_backend} (caller override)")
 
     prefused = None
+    partial_keys = ()
     if q.model is not None and backend == "fused":
-        prefused = prefuse(star, q.model)
+        if use_pool:
+            parts, h, partial_keys = pool.acquire_partials(star.dims,
+                                                           q.model)
+            prefused = PrefusedStar(parts, h)
+        else:
+            prefused = prefuse(star, q.model)
 
     uniq = gid = None
     if q.group_keys:
@@ -683,7 +823,11 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         _predict_rows=predict_rows_jit, _state=state, catalog=cat0,
         versions={n: cat0.version(n)
                   for n in sorted({q.fact} | {a.table for a in q.arms})},
-        _indices=indices, _source=source_q, _opts=opts, _sp=sp)
+        _indices=indices, _source=source_q, _opts=opts, _sp=sp,
+        _pool=pool if use_pool else None,
+        _pool_refs=({"arms": arm_refs, "partials": tuple(partial_keys)}
+                    if use_pool else {}),
+        _online_fn=_online)
 
 
 def _make_predict_rows_sharded(star: StarJoin, model,

@@ -1,0 +1,63 @@
+"""One structured ``explain()`` surface for every executable artifact.
+
+``CompiledQuery``, ``ServingRuntime`` and ``AdmissionScheduler`` each keep a
+plan-decision string (``plan.reason``) plus a bounded refresh/fallback trail;
+before this module each surfaced them differently (a raw string attribute, a
+string return value, nothing at all).  :class:`ExplainReport` unifies them:
+
+* ``plan_reason`` — the *base* planner decision line (cost-model choices,
+  backend picks), without accumulated refresh notes;
+* ``trail`` — the bounded refresh/fallback decision trail, newest last;
+* ``shared_artifacts`` — the :class:`~.multiquery.ArtifactPool` keys this
+  artifact references (empty when compiled without a pool);
+* ``as_dict()`` — a stable, JSON-friendly mapping for tooling;
+* ``str(report)`` — the legacy one-line string form (``plan_reason`` plus
+  the trail, ``"; "``-joined), so ``print(q.explain())`` reads exactly like
+  the old ``plan.reason``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplainReport:
+    """Structured plan/refresh introspection shared by every artifact kind.
+
+    ``kind`` is ``"compiled"`` / ``"serving"`` / ``"scheduler"``; backend
+    fields are ``None`` where the artifact has no such choice (a scheduler
+    has no backends; a serving runtime has no join/agg backend).
+    """
+
+    kind: str
+    backend: Optional[str] = None
+    join_backend: Optional[str] = None
+    agg_backend: Optional[str] = None
+    serve_backend: Optional[str] = None
+    plan_reason: str = ""
+    trail: Tuple[str, ...] = ()
+    shared_artifacts: Tuple[tuple, ...] = ()
+    extras: Tuple[Tuple[str, object], ...] = ()
+
+    def as_dict(self) -> dict:
+        """A stable JSON-friendly form (tuples become lists).
+
+        The key set is fixed across artifact kinds so tooling can consume
+        reports uniformly; absent choices are ``None``/empty rather than
+        missing keys.
+        """
+        return {
+            "kind": self.kind,
+            "backend": self.backend,
+            "join_backend": self.join_backend,
+            "agg_backend": self.agg_backend,
+            "serve_backend": self.serve_backend,
+            "plan_reason": self.plan_reason,
+            "trail": list(self.trail),
+            "shared_artifacts": [list(k) for k in self.shared_artifacts],
+            "extras": {k: v for k, v in self.extras},
+        }
+
+    def __str__(self) -> str:
+        return "; ".join(p for p in (self.plan_reason, *self.trail) if p)

@@ -301,7 +301,8 @@ def plan_query(model: Optional[Model], fact_rows: int,
                memory_budget_bytes: Optional[int] = None,
                platform: Optional[str] = None, mesh=None,
                shard_axis: str = "model",
-               shard_threshold_bytes: Optional[int] = None) -> QueryPlan:
+               shard_threshold_bytes: Optional[int] = None,
+               sharing: float = 1.0) -> QueryPlan:
     """Pick fused/nonfused + join/agg/serving backends for one query.
 
     ``agg_ops`` is the query's combined aggregate set (one op per
@@ -311,15 +312,22 @@ def plan_query(model: Optional[Model], fact_rows: int,
     (``partition_specs``): each arm's prefused partial is sized as
     (dim rows × out_width) fp32 and either replicated or row-sharded over
     ``shard_axis`` (see :func:`plan_partition_spec`).
+
+    ``sharing`` (≥ 1) is the multi-query pool's hint: how many plans share
+    this query's prefused partials/join artifacts.  A partial referenced by
+    N plans amortizes its one-time prefuse cost over N × the batches, which
+    moves the fused/nonfused break-even — modeled by scaling
+    ``batches_per_update`` in the fusion decision.
     """
     sel = min(max(float(selectivity), 0.0), 1.0)
     online_rows = float(fact_rows) * sel
+    sharing = max(float(sharing), 1.0)
 
     fusion = None
     backend = "fused"
     if model is not None:
         fusion = plan_fusion(model, fact_rows, dim_rows,
-                             batches_per_update=batches_per_update,
+                             batches_per_update=batches_per_update * sharing,
                              memory_budget_bytes=memory_budget_bytes,
                              selectivity=sel)
         backend = "fused" if fusion.fuse else "nonfused"
@@ -343,6 +351,8 @@ def plan_query(model: Optional[Model], fact_rows: int,
             threshold=shard_threshold_bytes)
 
     parts = [f"sel={sel:.3f}", f"join={join_backend}"]
+    if sharing > 1.0:
+        parts.append(f"sharing={sharing:g}x")
     if fusion is not None:
         parts.append(f"{backend} ({fusion.reason})")
     if agg is not None:

@@ -75,6 +75,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from .explain import ExplainReport
 from .serving import ServingRuntime
 
 #: Default flush deadline: a queued request is admitted at most this many
@@ -228,6 +229,7 @@ class AdmissionScheduler:
         self._cv = threading.Condition()
         self._closed = False
         self._fences = 0
+        self._refresh_trail: Deque[str] = collections.deque(maxlen=32)
         self._drained = threading.Event()
         self._thread: Optional[threading.Thread] = None
         if auto_start:
@@ -388,11 +390,36 @@ class AdmissionScheduler:
             with self._cv:
                 targets = [p for p in self._plans.values()
                            if runtime is None or p.runtime is runtime]
-            return {p.name: p.runtime.refresh() for p in targets}
+            out = {p.name: p.runtime.refresh() for p in targets}
+            with self._cv:
+                for name, line in out.items():
+                    self._refresh_trail.append(f"{name}: {line}")
+            return out
         finally:
             with self._cv:
                 self._fences -= 1
                 self._cv.notify_all()
+
+    def explain(self) -> ExplainReport:
+        """Structured scheduler report, unified with plan/runtime explains.
+
+        ``trail`` carries the most recent fenced-refresh decision lines
+        (``"<plan>: <runtime refresh line>"``); ``extras`` summarize the
+        fleet (plan count, admission counters, backpressure rejections).
+        """
+        with self._cv:
+            extras = (
+                ("plans", tuple(sorted(self._plans))),
+                ("steps", sum(p.steps for p in self._plans.values())),
+                ("admitted_rows",
+                 sum(p.admitted_rows for p in self._plans.values())),
+                ("rejected",
+                 sum(p.rejected for p in self._plans.values())),
+                ("closed", self._closed),
+            )
+            return ExplainReport(kind="scheduler",
+                                 trail=tuple(self._refresh_trail),
+                                 extras=extras)
 
     # -- stats ---------------------------------------------------------------
     def stats(self) -> Dict[str, Dict]:

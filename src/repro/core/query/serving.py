@@ -61,6 +61,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -75,7 +76,9 @@ from ..laq.join import PKIndex, pk_index
 from ..laq.projection import mapping_matrix
 from ..laq.star import DimSpec
 from ..laq.table import PAD_KEY, Table
+from .explain import ExplainReport
 from .ir import PredictiveQuery
+from .multiquery import holds_tracers
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
 from .sharding import (ShardedPrefusedPartials, extend_sharded_arm,
@@ -151,7 +154,8 @@ class ServingRuntime:
                  sharded: Optional[ShardedPrefusedPartials] = None,
                  catalog: Optional[Catalog] = None,
                  mesh=None, shard_axis: str = "model",
-                 shard_threshold_bytes: Optional[int] = None):
+                 shard_threshold_bytes: Optional[int] = None,
+                 pool=None, pool_refs: Optional[Dict] = None):
         self.query = query
         self.plan = plan
         self.backend = backend                # "fused" | "nonfused"
@@ -176,6 +180,12 @@ class ServingRuntime:
         self._mesh = mesh
         self._shard_axis = shard_axis
         self._shard_threshold_bytes = shard_threshold_bytes
+        # Session-owned ArtifactPool sharing (None when compiled
+        # standalone): the keys this runtime holds references to —
+        # {"arms": ((pkindex, dmask, features|None) per arm),
+        #  "partials": (keys,)} — released by close().
+        self._pool = pool
+        self._pool_refs: Dict = pool_refs or {}
         self._install(arms, h, sharded)
 
     def _install(self, arms: Tuple[_ArmIndex, ...],
@@ -349,6 +359,31 @@ class ServingRuntime:
                                 interpret=self._interpret)
         return self._model.apply(t)
 
+    # -- introspection / lifecycle -------------------------------------------
+    def _pool_keys(self) -> list:
+        """Every pool key this runtime references (with multiplicity)."""
+        keys = [k for ref in self._pool_refs.get("arms", ()) for k in ref
+                if k is not None]
+        keys.extend(self._pool_refs.get("partials", ()))
+        return keys
+
+    def explain(self) -> ExplainReport:
+        """Structured plan/refresh report (``str()`` gives the legacy line)."""
+        return ExplainReport(
+            kind="serving", backend=self.backend,
+            serve_backend=self.serve_backend,
+            plan_reason=getattr(self, "_base_reason", self.plan.reason),
+            trail=tuple(getattr(self, "_refresh_notes", ())),
+            shared_artifacts=tuple(self._pool_keys()),
+            extras=(("buckets", self.buckets),
+                    ("generation", self.generation)))
+
+    def close(self) -> None:
+        """Release this runtime's shared-artifact references (idempotent)."""
+        if self._pool is not None and self._pool_refs:
+            self._pool.release(self._pool_keys())
+        self._pool_refs = {}
+
     # -- incremental maintenance --------------------------------------------
     def refresh(self) -> str:
         """Apply pending catalog deltas to the serving state, in place.
@@ -431,10 +466,18 @@ class ServingRuntime:
                                          reason=self._base_reason)
                      if getattr(self, "_refresh_notes", None)
                      else self.plan)
-        arms, h, sharded, plan = _serving_artifacts(
+        # Re-acquire from the pool FIRST (fresh references keep shared
+        # refcounts above zero), then release the references of the state
+        # being replaced.
+        old_keys = self._pool_keys()
+        arms, h, sharded, plan, refs = _serving_artifacts(
             self.catalog, q, dims, self._model, self.backend, base_plan,
             mesh=self._mesh, shard_axis=self._shard_axis,
-            shard_threshold_bytes=self._shard_threshold_bytes)
+            shard_threshold_bytes=self._shard_threshold_bytes,
+            pool=self._pool)
+        self._pool_refs = refs
+        if self._pool is not None and old_keys:
+            self._pool.release(old_keys)
         self.plan = plan
         if hasattr(self, "_refresh_notes"):
             self._refresh_notes.clear()   # replanned: fresh decision trail
@@ -445,7 +488,35 @@ class ServingRuntime:
         return self._note(f"refresh=rebuild({why}; replanned, jit cache "
                           "reset)")
 
+    def _refresh_delta_pooled(self, changed) -> str:
+        """Pool-backed delta refresh: O(distinct artifacts), not O(plans).
+
+        Each ``pool.get`` delta-updates the shared entry at most once per
+        catalog version change regardless of how many runtimes/plans
+        reference it; rebinding the refreshed arrays into ``_state`` is
+        all that remains per runtime.
+        """
+        q = self.query
+        cat = self.catalog
+        pool = self._pool
+        pkeys = self._pool_refs.get("partials", ())
+        parts = tuple(pool.get(k) for k in pkeys) if pkeys else None
+        new_arms = []
+        for j, (old, (ikey, mkey, tkey)) in enumerate(
+                zip(self._arms, self._pool_refs["arms"])):
+            new_arms.append(dataclasses.replace(
+                old, index=pool.get(ikey), dmask=pool.get(mkey),
+                table=parts[j] if parts is not None else pool.get(tkey)))
+        self._arms = tuple(new_arms)
+        self._state = {"arms": self._arm_state(), "h": self._h}
+        self.versions = {a.table: cat.version(a.table) for a in q.arms}
+        touched = ",".join(f"{n}+{len(changed[n])}" for n in sorted(changed))
+        return self._note(f"refresh=delta({touched}; pooled artifacts, "
+                          "0 new compiles)")
+
     def _refresh_delta(self, changed) -> str:
+        if self._pool is not None and self._pool_refs.get("arms"):
+            return self._refresh_delta_pooled(changed)
         q = self.query
         cat = self.catalog
         dims = [DimSpec(cat[a.table], a.fk_col, a.pk_col, a.feature_cols)
@@ -650,7 +721,8 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
                        dims: Sequence[DimSpec], model, backend: str,
                        plan: QueryPlan, *, mesh=None,
                        shard_axis: str = "model",
-                       shard_threshold_bytes: Optional[int] = None):
+                       shard_threshold_bytes: Optional[int] = None,
+                       pool=None):
     """The quasi-static serving state: prefused/projected tables, per-arm
     PK indices + predicate masks, and (mesh) the placed shards.
 
@@ -658,33 +730,63 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
     shape-changing ``refresh`` rebuild, so both paths place and index the
     state identically (placement replanned from the *current* table
     shapes — the divisibility boundary is re-checked on every rebuild).
-    Returns ``(arms, h, sharded, plan)``.
+    Returns ``(arms, h, sharded, plan, pool_refs)``.
+
+    With a ``pool`` (single-device path only), the partials / projected
+    feature tables / masks / PK indices are acquired from the shared
+    :class:`~.multiquery.ArtifactPool` — the same entries compiled plans
+    use, so a serving runtime and a fused compiled query over the same arm
+    reference one physical partial.
     """
+    partial_keys: Tuple = ()
     if backend == "fused":
-        pre = prefuse_dims(dims, model)
-        tables = pre.partials
-        h = pre.h
+        if pool is not None:
+            tables, h, partial_keys = pool.acquire_partials(dims, model)
+        else:
+            pre = prefuse_dims(dims, model)
+            tables = pre.partials
+            h = pre.h
     else:
-        tables = tuple(
-            d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
-            for d in dims)
+        feat_keys = []
+        if pool is not None:
+            tables = []
+            for d in dims:
+                tbl, tkey = pool.acquire_features(d.dim.name,
+                                                  d.feature_cols)
+                tables.append(tbl)
+                feat_keys.append(tkey)
+            tables = tuple(tables)
+        else:
+            tables = tuple(
+                d.dim.matrix @ mapping_matrix(d.dim.columns, d.feature_cols)
+                for d in dims)
         h = None
 
     arms = []
     masks = []
-    for arm, d, tbl in zip(q.arms, dims, tables):
-        dmask = d.dim.valid_mask()
-        for p in arm.preds:
-            dmask = dmask & p.mask(d.dim)
+    arm_refs = []
+    for j, (arm, d, tbl) in enumerate(zip(q.arms, dims, tables)):
+        if pool is not None:
+            dmask, mkey = pool.acquire_dmask(arm.table, arm.preds)
+            index, ikey = pool.acquire_pkindex(arm.table, arm.pk_col)
+            arm_refs.append((ikey, mkey,
+                             feat_keys[j] if backend != "fused" else None))
+        else:
+            dmask = d.dim.valid_mask()
+            for p in arm.preds:
+                dmask = dmask & p.mask(d.dim)
+            index = (None if mesh is not None
+                     else pk_index(d.dim.key(arm.pk_col)))
         masks.append(dmask)
         # On the mesh path the global index/table are dead weight: the
         # shard_map forward probes the per-shard slices instead.
         arms.append(_ArmIndex(
             fk_col=arm.fk_col,
-            index=None if mesh is not None
-            else pk_index(d.dim.key(arm.pk_col)),
+            index=index,
             dmask=dmask,
             table=None if mesh is not None else tbl))
+    pool_refs = ({"arms": tuple(arm_refs), "partials": tuple(partial_keys)}
+                 if pool is not None else {})
 
     sharded = None
     if mesh is not None:
@@ -697,7 +799,7 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
             h, specs, shard_axis=shard_axis)
         if h is not None:
             h = sharded.h
-    return tuple(arms), h, sharded, plan
+    return tuple(arms), h, sharded, plan, pool_refs
 
 
 def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
@@ -708,8 +810,8 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                     batches_per_update: float = 1000.0,
                     memory_budget_bytes: Optional[int] = None,
                     mesh=None, shard_axis: str = "model",
-                    shard_threshold_bytes: Optional[int] = None
-                    ) -> ServingRuntime:
+                    shard_threshold_bytes: Optional[int] = None,
+                    pool=None) -> ServingRuntime:
     """Compile ``q``'s online phase over a (batch, fk...) request pytree.
 
     The quasi-static phase (PK sort, predicate masks, Eq. 1 pre-fusion) runs
@@ -754,9 +856,22 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
+    if not isinstance(catalog, Catalog):
+        warnings.warn(
+            "passing a plain mapping to compile_serving is deprecated and "
+            "will require an explicit wrap in a future release; construct "
+            "a repro.core.laq.Catalog (or go through Session) — see the "
+            "migration table in repro.core.query",
+            DeprecationWarning, stacklevel=2)
     catalog = Catalog.wrap(catalog)
     for arm in q.arms:   # teach the catalog the join contract (PK columns)
         catalog.note_unique(arm.table, arm.pk_col)
+    # Pool sharing engages only on the plain single-device path against
+    # the pool's own catalog (mesh placement commits arrays to devices;
+    # tracer-holding tables must never leak into a cross-plan cache).
+    if not (pool is not None and mesh is None and pool.catalog is catalog
+            and not holds_tracers(catalog, q)):
+        pool = None
     buckets = tuple(sorted({int(b) for b in buckets}))
     if not buckets or buckets[0] < 1:
         raise ValueError(f"buckets must be positive ints, got {buckets!r}")
@@ -784,9 +899,10 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             plan, serve_backend=serve_backend,
             reason=f"{plan.reason}; serve={serve_backend} (caller override)")
 
-    arms, h, sharded, plan = _serving_artifacts(
+    arms, h, sharded, plan, pool_refs = _serving_artifacts(
         catalog, q, dims, q.model, backend, plan, mesh=mesh,
-        shard_axis=shard_axis, shard_threshold_bytes=shard_threshold_bytes)
+        shard_axis=shard_axis, shard_threshold_bytes=shard_threshold_bytes,
+        pool=pool)
 
     if donate is None:
         donate = (mesh is None
@@ -797,4 +913,5 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                           interpret=interpret, donate=donate,
                           sync_stats=sync_stats, sharded=sharded,
                           catalog=catalog, mesh=mesh, shard_axis=shard_axis,
-                          shard_threshold_bytes=shard_threshold_bytes)
+                          shard_threshold_bytes=shard_threshold_bytes,
+                          pool=pool, pool_refs=pool_refs)

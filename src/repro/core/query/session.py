@@ -42,21 +42,24 @@ require a session.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
+import inspect
 import re
-from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..fusion.operators import DecisionTreeGEMM, LinearOperator
 from ..laq.catalog import Catalog
 from ..laq.selection import Pred
 from ..laq.table import Table
-from .compile import CompiledQuery, compile_query
+from .compile import CompiledQuery, _program_state, compile_query
+from .explain import ExplainReport
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
                  GroupKey, Model, PredictiveQuery)
+# _array_key/model_key moved to multiquery (the arm-level hashing layer);
+# re-exported here because they are part of this module's public surface.
+from .multiquery import (ArtifactPool, _array_key, make_stacked_runner,
+                         model_key, stack_key, stack_states)
 from .scheduler import AdmissionScheduler, ScheduledPlan
 from .serving import DEFAULT_BUCKETS, ServingRuntime, compile_serving
 
@@ -67,28 +70,6 @@ _AGG_CALL = re.compile(r"^(sum|count|mean|min|max)\s*\(\s*(.*?)\s*\)$")
 # --------------------------------------------------------------------------
 # Structural plan-cache keys
 # --------------------------------------------------------------------------
-def _array_key(a) -> tuple:
-    arr = np.asarray(a)
-    return (arr.shape, arr.dtype.str,
-            hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest())
-
-
-def model_key(model: Optional[Model]):
-    """Content key for a model head; falls back to identity under a trace."""
-    if model is None:
-        return None
-    try:
-        if isinstance(model, LinearOperator):
-            return ("linear", _array_key(model.L))
-        if isinstance(model, DecisionTreeGEMM):
-            return ("tree", _array_key(model.F), _array_key(model.v),
-                    _array_key(model.H), _array_key(model.h))
-    except (jax.errors.ConcretizationTypeError,
-            jax.errors.TracerArrayConversionError):
-        pass
-    return ("id", type(model).__name__, id(model))
-
-
 def query_key(q: PredictiveQuery) -> tuple:
     """Structural hash key of a ``PredictiveQuery``.
 
@@ -101,10 +82,49 @@ def query_key(q: PredictiveQuery) -> tuple:
             q.group_keys, q.aggregates, q.num_groups)
 
 
-def _opts_key(opts: Mapping) -> tuple:
-    """Hashable cache key for compile options (meshes keyed by identity)."""
-    return tuple(sorted(
-        (k, id(v) if k == "mesh" else v) for k, v in opts.items()))
+def _signature_defaults(fn) -> Dict:
+    return {k: p.default for k, p in inspect.signature(fn).parameters.items()
+            if p.default is not inspect.Parameter.empty}
+
+
+#: Option defaults per entry point — the normalization tables behind
+#: ``_opts_key``: an option spelled out at its default value must produce
+#: the same cache key as the option omitted.
+_COMPILE_DEFAULTS = _signature_defaults(compile_query)
+_SERVING_DEFAULTS = _signature_defaults(compile_serving)
+_MISSING = object()
+
+
+def _normalize_buckets(v) -> tuple:
+    return tuple(sorted({int(b) for b in v}))
+
+
+def _opts_key(opts: Mapping, *, defaults: Optional[Mapping] = None) -> tuple:
+    """Hashable cache key for compile options, normalized.
+
+    Equivalent spellings collapse to one key: options equal to the entry
+    point's defaults are dropped (``backend="auto"`` ≡ omitted), bucket
+    sequences are sorted/deduplicated/int-coerced, the shared pool never
+    participates (it is session plumbing, not a plan choice), and meshes
+    key by identity (unhashable, and distinct meshes genuinely are
+    distinct compilation targets).
+    """
+    defaults = _COMPILE_DEFAULTS if defaults is None else defaults
+    items = []
+    for k in sorted(opts):
+        if k == "pool":
+            continue
+        v = opts[k]
+        if k == "buckets":
+            v = _normalize_buckets(v)
+        d = defaults.get(k, _MISSING)
+        if d is not _MISSING:
+            if k == "buckets":
+                d = _normalize_buckets(d)
+            if v is d or v == d:   # e.g. 1000 ≡ 1000.0: same compile
+                continue
+        items.append((k, id(v) if k == "mesh" else v))
+    return tuple(items)
 
 
 # --------------------------------------------------------------------------
@@ -309,9 +329,13 @@ class QueryBuilder:
             return self._bound().scheduler().register(runtime)
         return runtime
 
-    def explain(self, **overrides) -> str:
-        """The compiled plan's decision trail (one line per choice)."""
-        return self.compile(**overrides).plan.reason
+    def explain(self, **overrides) -> ExplainReport:
+        """Structured report for the compiled plan.
+
+        Returns an :class:`ExplainReport`; ``str()`` of it is the legacy
+        one-line decision trail, ``as_dict()`` the machine-readable form.
+        """
+        return self.compile(**overrides).explain()
 
 
 # --------------------------------------------------------------------------
@@ -351,6 +375,14 @@ class Session:
         self._plans: Dict[tuple, Tuple[tuple, CompiledQuery]] = {}
         self._runtimes: Dict[tuple, Tuple[tuple, ServingRuntime]] = {}
         self._scheduler: Optional[AdmissionScheduler] = None
+        # The multi-query optimizer's shared-artifact pool: every plan and
+        # serving runtime compiled through this session acquires its PK
+        # indices / join pointers / predicate masks / prefused partials
+        # here, so N plans sharing an arm reference ONE physical artifact
+        # and a refresh updates it once (see core.query.multiquery).
+        self.pool = ArtifactPool(self.catalog)
+        # stack_key → (online_fn identity, stacked runner) for run_all.
+        self._stacked: Dict[tuple, Tuple[object, callable]] = {}
 
     # -- builders ------------------------------------------------------------
     def query(self, fact: str) -> QueryBuilder:
@@ -418,8 +450,8 @@ class Session:
         older catalog versions is refreshed in place before it is returned
         — the cache can never hand out pre-append state.
         """
-        opts = {"interpret": self.interpret, **self._mesh_kwargs(),
-                **overrides}
+        opts = {"interpret": self.interpret, "pool": self.pool,
+                **self._mesh_kwargs(), **overrides}
         key = (query_key(q), _opts_key(opts))
         versions = self.catalog.versions(self._tables_of(q))
         hit = self._plans.get(key)
@@ -432,7 +464,9 @@ class Session:
         compiled = compile_query(self.catalog, q, **opts)
         if not compiled.is_traced:
             self._plans[key] = (versions, compiled)  # traced plans hold
-        return compiled                              # tracers: never cached
+        else:                                        # tracers: never cached
+            compiled.close()   # nor may they pin shared artifacts
+        return compiled
 
     def serving(self, q: PredictiveQuery, *,
                 buckets: Sequence[int] = DEFAULT_BUCKETS,
@@ -443,9 +477,11 @@ class Session:
         applied via ``ServingRuntime.refresh`` before the runtime is
         returned, so cached runtimes never serve pre-append partials.
         """
-        opts = {"interpret": self.interpret, **self._mesh_kwargs(),
-                **overrides}
-        key = ("serve", query_key(q), tuple(buckets), _opts_key(opts))
+        opts = {"interpret": self.interpret, "pool": self.pool,
+                **self._mesh_kwargs(), **overrides}
+        key = ("serve", query_key(q),
+               _opts_key({**opts, "buckets": tuple(buckets)},
+                         defaults=_SERVING_DEFAULTS))
         versions = self.catalog.versions(self._tables_of(q, serving=True))
         hit = self._runtimes.get(key)
         if hit is not None:
@@ -495,6 +531,85 @@ class Session:
                         out[desc] = art.refresh()
                     store[key] = (versions, art)
         return out
+
+    # -- batched multi-query execution ---------------------------------------
+    def run_all(self, queries: Sequence, **overrides) -> List[Dict]:
+        """Execute many queries, batching compatible plans into one program.
+
+        ``queries`` is a sequence of :class:`PredictiveQuery` IRs and/or
+        bound :class:`QueryBuilder` pipelines.  Each is compiled through the
+        session cache (sharing pooled artifacts), then plans whose stacked
+        signature matches (same star shape, aggregates, model class and
+        state structure — see :func:`multiquery.stack_key`) are stacked
+        along a leading query axis and executed as ONE jitted, vmapped
+        program: one dispatch instead of N.  Plans that cannot stack
+        (sharded, traced, compacted) fall back to per-plan ``run()``.
+
+        Results come back in input order and are bit-exact with what each
+        ``compile(q).run()`` would return.  The stacked runners are cached
+        on the session keyed by signature, so repeated ``run_all`` calls
+        re-dispatch without re-tracing.
+        """
+        plans = []
+        for q in queries:
+            if isinstance(q, QueryBuilder):
+                q = q.build()
+            plans.append(self.compile(q, **overrides))
+        results: List[Optional[Dict]] = [None] * len(plans)
+        groups: Dict[tuple, List[int]] = {}
+        for i, p in enumerate(plans):
+            sk = stack_key(p)
+            if sk is None:
+                results[i] = p.run()
+            else:
+                groups.setdefault(sk, []).append(i)
+        for sk, idxs in groups.items():
+            if len(idxs) == 1:           # nothing to batch with
+                i = idxs[0]
+                results[i] = plans[i].run()
+                continue
+            rep = plans[idxs[0]]
+            cached = self._stacked.get(sk)
+            if cached is None or cached[0] is not rep._online_fn:
+                # (re)build: the representative's online closure is pure in
+                # its program-state pytree, so vmapping it over stacked
+                # states runs every member in one program.
+                runner = make_stacked_runner(rep._online_fn)
+                self._stacked[sk] = (rep._online_fn, runner)
+            else:
+                runner = cached[1]
+            stacked = stack_states(
+                [_program_state(plans[i]._state) for i in idxs])
+            out = runner(stacked)
+            for slot, i in enumerate(idxs):
+                p = plans[i]
+                r = {name: v[slot] for name, v in out.items()}
+                if p.group_codes is not None:
+                    r["groups"] = p.group_codes
+                r["rows"] = p._rows
+                results[i] = r
+        return results
+
+    def evict(self, q: Optional[PredictiveQuery] = None) -> int:
+        """Drop cached plans/runtimes (all, or just those for ``q``).
+
+        Closing each artifact releases its shared-pool references, so the
+        last plan using an artifact frees it from the session pool.
+        Returns the number of cache entries removed.
+        """
+        qk = None if q is None else query_key(q)
+        removed = 0
+        for store in (self._plans, self._runtimes):
+            for key in list(store):
+                this_qk = key[1] if key[0] == "serve" else key[0]
+                if qk is not None and this_qk != qk:
+                    continue
+                _, art = store.pop(key)
+                art.close()
+                removed += 1
+        if q is None:
+            self._stacked.clear()
+        return removed
 
     def scheduler(self, **opts) -> AdmissionScheduler:
         """The session's admission scheduler (lazy singleton).

@@ -24,6 +24,7 @@ features, fused into the star join, with its predictions aggregated.
 """
 from __future__ import annotations
 
+import warnings
 import weakref
 from typing import Callable, Dict
 
@@ -73,12 +74,18 @@ def ssb_session(data: SSBData) -> Session:
 
 
 def compiled_plan(name: str, data: SSBData, **kwargs):
-    """Thin shim over ``Session.compile`` (the old entry point).
+    """Deprecated shim over ``Session.compile`` (the old entry point).
 
-    The session's cache key includes the compile options, so requesting a
-    different backend recompiles instead of returning the first call's
-    plan; plans built under an outer trace are never cached.
+    Use ``ssb_session(data).compile(QUERY_IR[name](), **kwargs)`` — or a
+    fluent ``Session.query(...)`` pipeline — instead; see the migration
+    table in :mod:`repro.core.query`.  The shim still routes through the
+    session cache, so behaviour is unchanged apart from the warning.
     """
+    warnings.warn(
+        "compiled_plan() is deprecated; use "
+        "ssb_session(data).compile(QUERY_IR[name]()) — see the migration "
+        "table in repro.core.query",
+        DeprecationWarning, stacklevel=2)
     return ssb_session(data).compile(QUERY_IR[name](), **kwargs)
 
 

@@ -1,0 +1,335 @@
+"""Multi-query optimizer: pooled compilation is bit-exact vs independent
+(`compile_query` with and without a shared :class:`ArtifactPool`) across the
+whole SSB registry, pool refcounts evict only on last release, a dimension
+append refreshes each shared artifact exactly once, ``Session.run_all``
+stacks compatible plans bit-exactly, ``_opts_key`` normalizes default
+spellings onto one cache entry, and ``explain()`` is unified across
+plan/runtime/scheduler.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core.laq import Catalog
+from repro.core.query import (ArtifactPool, ExplainReport, Session,
+                              artifact_bytes, compile_query, compile_serving,
+                              stack_key)
+from repro.data import QUERY_IR, generate_ssb, predictive_query_names, \
+    ssb_catalog
+
+ALL_NAMES = sorted(QUERY_IR)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_ssb(sf=1, scale=0.0005, seed=5)
+
+
+@pytest.fixture(scope="module")
+def catalog(data):
+    return ssb_catalog(data)
+
+
+def _fresh_session(data):
+    ro = ssb_catalog(data)
+    return Session(Catalog({n: ro[n] for n in ro}))
+
+
+def _assert_same_results(a, b, msg=""):
+    assert set(a) == set(b), msg
+    for k in a:
+        assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                           err_msg=f"{msg}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: pooled ≡ independent, bit-exact
+# ---------------------------------------------------------------------------
+def test_pooled_registry_bit_exact(catalog):
+    """Every registry query: pool-shared plan ≡ standalone plan, bit-exact,
+    with identical backend decisions (sharing must not change semantics)."""
+    pool = ArtifactPool(catalog)
+    for name in ALL_NAMES:
+        q = QUERY_IR[name]()
+        pooled = compile_query(catalog, q, pool=pool)
+        solo = compile_query(catalog, q)
+        assert (pooled.backend, pooled.join_backend, pooled.agg_backend) == \
+            (solo.backend, solo.join_backend, solo.agg_backend), name
+        _assert_same_results(pooled.run(), solo.run(), name)
+    st = pool.stats()
+    assert st["hits"] > 0, "registry shares no artifacts?!"
+    assert st["entries"] == st["misses"]
+
+
+def test_pooled_sharing_reduces_artifacts(catalog):
+    """N plans over the same arms hold ONE physical pkindex/join/partial:
+    resident derived bytes under the pool are well below independent."""
+    pool = ArtifactPool(catalog)
+    pooled = [compile_query(catalog, QUERY_IR[n](), pool=pool)
+              for n in ALL_NAMES]
+    solo = [compile_query(catalog, QUERY_IR[n]()) for n in ALL_NAMES]
+    shared, indep = artifact_bytes(pooled), artifact_bytes(solo)
+    assert shared < indep / 2, (shared, indep)
+    # distinct physical join artifacts: Q2.1/2.2/2.3 share the part arm
+    k2 = [p for n, p in zip(ALL_NAMES, pooled) if n.startswith("Q2.")]
+    ptrs = {id(fj.ptr) for p in k2 for fj in p.star.joins}
+    assert len(ptrs) < sum(len(p.star.joins) for p in k2)
+
+
+def test_pooled_serving_bit_exact(catalog):
+    pool = ArtifactPool(catalog)
+    rng = np.random.default_rng(3)
+    for name in predictive_query_names():
+        q = QUERY_IR[name]()
+        pooled = compile_serving(catalog, q, buckets=(4, 16), pool=pool)
+        solo = compile_serving(catalog, q, buckets=(4, 16))
+        reqs = {a.fk_col: rng.integers(
+            0, catalog[a.table].nvalid + 2, size=9).astype(np.int32)
+            for a in q.arms}
+        assert_array_equal(np.asarray(pooled.serve(reqs)),
+                           np.asarray(solo.serve(reqs)), err_msg=name)
+    assert pool.stats()["hits"] > 0
+
+
+def test_pooled_random_subsets_property(catalog):
+    """Hypothesis: any subset of the registry, compiled in any order through
+    one pool, matches independent compilation bit-exactly."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev)")
+    from hypothesis import given, settings, strategies as st
+
+    solo_results = {n: compile_query(catalog, QUERY_IR[n]()).run()
+                    for n in ALL_NAMES}
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.permutations(ALL_NAMES).map(lambda p: p[:5]))
+    def check(names):
+        pool = ArtifactPool(catalog)
+        for name in names:
+            plan = compile_query(catalog, QUERY_IR[name](), pool=pool)
+            _assert_same_results(plan.run(), solo_results[name], name)
+            plan.close()
+        assert pool.stats()["entries"] == 0   # all refs released
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Refcounts: eviction only on last release
+# ---------------------------------------------------------------------------
+def test_refcount_evicts_on_last_release(catalog):
+    pool = ArtifactPool(catalog)
+    q = QUERY_IR["Q2.1"]()
+    a = compile_query(catalog, q, pool=pool)
+    b = compile_query(catalog, q, pool=pool)
+    keys = set(a._pool_keys())
+    assert keys and keys == set(b._pool_keys())
+    n0 = pool.stats()["entries"]
+    a.close()
+    assert pool.stats()["entries"] == n0          # b still holds every key
+    assert all(pool.refcount(k) >= 1 for k in keys)
+    b.close()
+    assert all(pool.refcount(k) == 0 for k in keys)
+    assert pool.stats()["entries"] < n0           # last release evicts
+    a.close()                                      # idempotent
+    assert pool.stats()["evictions"] >= len(keys)
+
+
+def test_session_evict_drains_pool(data):
+    sess = _fresh_session(data)
+    for n in ALL_NAMES[:6]:
+        sess.compile(QUERY_IR[n]())
+    assert sess.pool.stats()["entries"] > 0
+    removed = sess.evict()
+    assert removed == 6 and sess.num_plans == 0
+    assert sess.pool.stats()["entries"] == 0
+    assert sess.pool.stats()["bytes"] == 0
+
+
+def test_session_evict_single_query(data):
+    sess = _fresh_session(data)
+    q1, q2 = QUERY_IR["Q1.1"](), QUERY_IR["Q1.2"]()
+    sess.compile(q1)
+    sess.compile(q2)
+    assert sess.evict(q1) == 1
+    assert sess.num_plans == 1
+    assert sess.pool.stats()["entries"] > 0       # q2's artifacts survive
+    _ = sess.compile(q2).run()                     # still serviceable
+
+
+# ---------------------------------------------------------------------------
+# Refresh: one update per distinct shared artifact
+# ---------------------------------------------------------------------------
+def _append_dim_rows(cat, table, frac=0.01):
+    t = cat[table]
+    n = max(1, int(t.nvalid * frac))
+    cols = {}
+    for cname in t.columns:
+        col = np.asarray(t.col(cname)[:n])
+        if cname in t.keys:
+            col = np.arange(t.nvalid, t.nvalid + n, dtype=col.dtype)
+        cols[cname] = col
+    cat.append(table, cols)
+    return n
+
+
+def test_refresh_updates_shared_artifact_once(data):
+    """Three plans sharing the 'part' arm + a 1% append: the shared join
+    entry is refreshed exactly once, and every plan matches a cold rebuild."""
+    sess = _fresh_session(data)
+    # first append doubles 'part' capacity, so the measured one below lands
+    # inside the padding (delta path, no recompile)
+    _append_dim_rows(sess.catalog, "part")
+    names = ["Q2.1", "Q2.2", "Q2.3"]
+    plans = [sess.compile(QUERY_IR[n]()) for n in names]
+    shared = [k for k in plans[0]._pool_keys()
+              if k[0] in ("pkindex", "join") and "part" in k]
+    assert shared
+    before = {k: sess.pool.update_count(k) for k in shared}
+    _append_dim_rows(sess.catalog, "part")
+    out = sess.refresh()
+    assert any("refresh=delta" in line for line in out.values())
+    for k in shared:
+        assert sess.pool.update_count(k) - before[k] == 1, k
+    # refreshed pooled plans ≡ cold standalone compiles on the new catalog
+    for n, p in zip(names, plans):
+        cold = compile_query(sess.catalog, QUERY_IR[n]())
+        _assert_same_results(p.run(), cold.run(), n)
+
+
+def test_refresh_noop_leaves_update_counts(data):
+    sess = _fresh_session(data)
+    p = sess.compile(QUERY_IR["Q1.1"]())
+    keys = p._pool_keys()
+    before = [sess.pool.update_count(k) for k in keys]
+    sess.refresh()    # no catalog change
+    assert [sess.pool.update_count(k) for k in keys] == before
+
+
+# ---------------------------------------------------------------------------
+# run_all: stacked execution ≡ per-query run()
+# ---------------------------------------------------------------------------
+def test_run_all_bit_exact(data):
+    sess = _fresh_session(data)
+    qs = [QUERY_IR[n]() for n in ALL_NAMES]
+    batched = sess.run_all(qs)
+    for n, q, r in zip(ALL_NAMES, qs, batched):
+        _assert_same_results(r, compile_query(sess.catalog, q).run(), n)
+    # compatible plans actually stacked (SSB flights share signatures)
+    sks = [stack_key(sess.compile(q)) for q in qs]
+    real = [k for k in sks if k is not None]
+    assert len(set(real)) < len(real)
+    # cached stacked runners: second call is exact too
+    again = sess.run_all(qs)
+    for n, r, r2 in zip(ALL_NAMES, batched, again):
+        _assert_same_results(r, r2, f"repeat:{n}")
+
+
+def test_run_all_accepts_builders_and_survives_refresh(data):
+    sess = _fresh_session(data)
+    b = (sess.query("lineorder")
+         .agg(revenue="sum(lo_revenue)", n="count"))
+    [r] = sess.run_all([b])
+    solo = b.run()
+    _assert_same_results(r, solo, "builder")
+    _append_dim_rows(sess.catalog, "supplier")
+    qs = [QUERY_IR[n]() for n in ("Q2.1", "Q2.2")]
+    for n, r in zip(("Q2.1", "Q2.2"), sess.run_all(qs)):
+        cold = compile_query(sess.catalog, QUERY_IR[n]())
+        _assert_same_results(r, cold.run(), f"post-append:{n}")
+
+
+def test_stack_key_excludes_compacted_plans(catalog):
+    q = QUERY_IR["Q1.1"]()
+    compact = compile_query(catalog, q, select_capacity=4096)
+    assert stack_key(compact) is None
+    assert stack_key(compile_query(catalog, q)) is not None
+
+
+# ---------------------------------------------------------------------------
+# Session cache-key normalization
+# ---------------------------------------------------------------------------
+def test_opts_key_defaults_collapse(data):
+    sess = _fresh_session(data)
+    q = QUERY_IR["Q1.1"]()
+    p = sess.compile(q)
+    assert sess.compile(q, backend="auto") is p       # explicit default
+    assert sess.compile(q, agg_backend="auto") is p
+    assert sess.num_plans == 1
+    assert sess.compile(q, backend="nonfused") is not p
+    assert sess.num_plans == 2
+
+
+def test_opts_key_serving_bucket_spellings(data):
+    sess = _fresh_session(data)
+    q = QUERY_IR[predictive_query_names()[0]]()
+    r = sess.serving(q, buckets=[64, 8])
+    assert sess.serving(q, buckets=(8, 64)) is r      # order-insensitive
+    assert sess.serving(q, buckets=(8, 64, 64)) is r  # dupes collapse
+    assert sess.num_runtimes == 1
+    assert sess.serving(q, buckets=(8, 32)) is not r
+    assert sess.num_runtimes == 2
+
+
+# ---------------------------------------------------------------------------
+# Unified explain surface
+# ---------------------------------------------------------------------------
+def test_explain_unified(data):
+    sess = _fresh_session(data)
+    q = QUERY_IR["Q2.1"]()
+    rep = sess.bind(q).explain()
+    assert isinstance(rep, ExplainReport)
+    assert rep.kind == "compiled"
+    assert rep.shared_artifacts                      # pool-backed plan
+    assert str(rep)                                  # legacy one-liner
+    d = rep.as_dict()
+    assert d["kind"] == "compiled" and isinstance(d["extras"], dict)
+
+    sq = QUERY_IR[predictive_query_names()[0]]()
+    srep = sess.serving(sq, buckets=(4,)).explain()
+    assert srep.kind == "serving" and srep.shared_artifacts
+
+    sched = sess.scheduler(auto_start=False)
+    sched.register(sess.serving(sq, buckets=(4,)), name="p0")
+    _append_dim_rows(sess.catalog, sq.arms[0].table)
+    sched.refresh()
+    crep = sched.explain()
+    assert crep.kind == "scheduler"
+    assert any("p0:" in line for line in crep.trail)
+    sched.close()
+
+
+def test_pool_bypassed_under_outer_trace(catalog):
+    """Compile under an outer jit builds the model from tracers; the pool
+    must bypass entirely (content keys need concrete bytes) and the traced
+    plan must still run — the ssb_demo jit-wrapped-registry path."""
+    import jax
+    pool = ArtifactPool(catalog)
+
+    def f():
+        q = QUERY_IR["P1.linear.year"]()       # model arrays trace here
+        return compile_query(catalog, q, pool=pool).run()
+
+    out = jax.jit(f)()
+    ref = compile_query(catalog, QUERY_IR["P1.linear.year"]()).run()
+    assert set(out) == set(ref)
+    for k in ref:   # whole-pipeline XLA fusion reorders float ops: allclose
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, err_msg=f"traced:{k}")
+    assert pool.stats()["misses"] == 0         # never consulted
+
+
+def test_deprecated_entry_points_warn(data, catalog):
+    from repro.data import compiled_plan
+    with pytest.warns(DeprecationWarning, match="migration table"):
+        compiled_plan("Q1.1", data)
+    raw = {n: catalog[n] for n in catalog}
+    with pytest.warns(DeprecationWarning, match="plain mapping"):
+        compile_query(raw, QUERY_IR["Q1.1"]())
+    with pytest.warns(DeprecationWarning, match="plain mapping"):
+        compile_serving(raw, QUERY_IR[predictive_query_names()[0]](),
+                        buckets=(4,))
