@@ -18,7 +18,10 @@ single fluent entry point, ``repro.core.query.Session``:
      optimizer shares physical artifacts (PK indices, join pointers,
      prefused partials) across plans through the session's reference-
      counted ``ArtifactPool`` and stacks compatible plans into one vmapped
-     program, so a refresh touches each shared artifact once.
+     program, so a refresh touches each shared artifact once,
+  7. go out-of-core: stream the fact axis chunk-at-a-time under a memory
+     budget (bit-identical to in-core), tombstone-*delete* fact rows with
+     a zero-retrace refresh, and ``compact()`` the tombstones away.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -237,3 +240,52 @@ print(f"append → {sess.pool.stats()['updates'] - updates_before} pooled "
 sess.evict()                                     # release pool references
 assert sess.pool.stats()["entries"] == 0
 print("evict → pool drained ✓")
+
+# -- 9. Out-of-core: stream the fact axis, delete rows, compact --------------
+# When facts outgrow device memory, a streaming Session folds the SAME
+# fused program chunk-at-a-time through a carried segment accumulator —
+# bit-identical to in-core, because the chunked fold replays exactly the
+# same adds in the same order.  ``memory_budget_bytes`` sizes chunks
+# automatically (and auto-streams any plan whose working set exceeds it);
+# ``stream_chunk_rows`` pins the chunk size explicitly.
+stream_sess = Session(catalog, stream_chunk_rows=128)
+q9 = (stream_sess.query("orders")
+      .join("customers", on=("o_custkey", "custkey"),
+            features=["age", "spend"])
+      .join("products", on=("o_prodkey", "prodkey"),
+            features=["price", "rating"], where=[("rating", ">", 1.5)])
+      .where(("quantity", ">", 2.0))
+      .predict(model)
+      .group_by(("products", "category", 4), num_groups="auto")
+      .agg(qty="sum(quantity)", score=("mean", PREDICTION), n="count"))
+plan9 = q9.compile()
+# ``stream_chunk_rows=0`` turns streaming OFF for one compile (overrides
+# win), pinned to the exact lowering the chunked fold replays:
+incore9 = q9.compile(stream_chunk_rows=0, backend="fused",
+                     join_backend="gather", agg_backend="segment")
+for k, v in incore9.run().items():
+    np.testing.assert_array_equal(np.asarray(plan9.run()[k]), np.asarray(v))
+print("streamed == in-core bitwise ✓ |",
+      plan9.explain().as_dict()["extras"]["stream"])
+
+# Deleting fact rows is a tombstone fold: shapes, keys and row placement
+# all survive, so every chunk revalidates through the SAME traced program —
+# a delta refresh with zero retraces, exactly like the appends above.
+traces0 = plan9._stream.traces
+catalog.delete_rows("orders", np.arange(0, 500, 5))      # every 5th order
+note9 = plan9.refresh()
+assert plan9._stream.traces == traces0, "delete refresh retraced!"
+cold9 = Session(catalog, stream_chunk_rows=128).compile(q9.build())
+for k, v in cold9.run().items():
+    np.testing.assert_array_equal(np.asarray(plan9.run()[k]), np.asarray(v))
+print(f"delete → {note9} — 0 retraces, ≡ cold rebuild ✓")
+
+# ``compact()`` garbage-collects tombstones once the dead fraction passes a
+# threshold.  Row ids are rewritten, so this is the one lifecycle step that
+# must recompile — and the refresh note names the reason.
+catalog.delete_rows("orders", np.arange(250, 500))       # bulk churn
+assert catalog.compact("orders")
+note9 = plan9.refresh()
+assert "compaction" in note9
+print(f"compact → {note9}; "
+      f"{int(np.asarray(catalog['orders'].valid_mask()).sum())} live rows ✓")

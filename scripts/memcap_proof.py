@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Memory-cap proof: under a hard address-space budget, the in-core program
+OOMs and the streamed program completes — the ISSUE 8 out-of-core claim as
+an executable check, run by the CI ``memcap`` job.
+
+Both modes build the *same* synthetic star (the resident catalog tables are
+a shared cost); the difference is the online program.  In-core lowers one
+jitted program over the whole fact axis, materializing per-row
+intermediates — gathered arm features, the prediction matrix, validity and
+group vectors — for every row at once.  Streaming folds the same program
+chunk-by-chunk through a carried segment accumulator, so its intermediate
+footprint is one chunk's, not the table's.
+
+Modes
+-----
+``--mode stream`` / ``--mode incore``
+    Run one program under the *caller's* limits and exit 0 on success.
+    The CI job applies the cap via ``ulimit -v`` in the step shell.
+``--mode both`` (default)
+    Self-contained driver: spawns each mode as a subprocess under
+    ``RLIMIT_AS = --cap-mb`` and asserts stream passes AND in-core dies.
+    Exits nonzero if either half of the proof fails.
+
+The streamed run prints its aggregate checksum so the two CI legs can be
+eyeballed against an uncapped run; bit-exactness vs in-core is covered by
+tier-1 (the in-core leg here dies by design, there is nothing to compare).
+
+Usage:  PYTHONPATH=src python scripts/memcap_proof.py [--cap-mb 2000]
+        [--rows 12000000] [--budget-mb 64]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import resource
+import subprocess
+import sys
+
+
+def build_catalog(rows: int):
+    """A 2-arm star whose fact dominates memory: ``rows`` x 6 float cols."""
+    import numpy as np
+
+    from repro.core.laq import Catalog, Table
+
+    rng = np.random.default_rng(0)
+    n_dim = 1024
+    d1 = {"pk": np.arange(n_dim) * 2,
+          "a": rng.normal(size=n_dim), "b": rng.normal(size=n_dim)}
+    d2 = {"pk2": np.arange(n_dim),
+          "c": rng.normal(size=n_dim),
+          "g": rng.integers(0, 8, n_dim)}
+    f = {"fk1": rng.integers(0, 2 * n_dim, rows),
+         "fk2": rng.integers(0, n_dim, rows),
+         "v0": rng.normal(size=rows).astype(np.float32),
+         "v1": rng.normal(size=rows).astype(np.float32),
+         "v2": rng.normal(size=rows).astype(np.float32),
+         "v3": rng.normal(size=rows).astype(np.float32)}
+    return Catalog({
+        "d1": Table.from_columns("d1", d1, key_cols=("pk",)),
+        "d2": Table.from_columns("d2", d2, key_cols=("pk2", "g")),
+        "fact": Table.from_columns("fact", f, key_cols=("fk1", "fk2")),
+    })
+
+
+def the_query():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.fusion import LinearOperator
+    from repro.core.laq.selection import Pred
+    from repro.core.query import (PREDICTION, Aggregate, ArmSpec, GroupKey,
+                                  PredictiveQuery)
+
+    # A wide head (l=32): the in-core program materializes the (rows, 32)
+    # prediction matrix, the dominant per-row intermediate the streamed
+    # program only ever holds one chunk of — so the proof window between
+    # "streaming fits" and "in-core OOMs" widens with rows x l while the
+    # shared catalog cost stays put.
+    model = LinearOperator(jnp.asarray(
+        np.random.default_rng(1).normal(size=(3, 32)), jnp.float32))
+    return PredictiveQuery(
+        fact="fact",
+        arms=(ArmSpec("d1", "fk1", "pk", ("a", "b"),
+                      (Pred("a", ">", -1.0),)),
+              ArmSpec("d2", "fk2", "pk2", ("c",))),
+        fact_preds=(Pred("v0", ">", -2.0),),
+        model=model,
+        group_keys=(GroupKey("d2", "g", 8),),
+        aggregates=(Aggregate(PREDICTION, "sum", "pred"),
+                    Aggregate("v1", "mean", "m1"),
+                    Aggregate(("mul", "v2", "v3"), "sum", "x23"),
+                    Aggregate("*", "count", "n")),
+        num_groups=8)
+
+
+def run_mode(mode: str, rows: int, budget_mb: int) -> int:
+    import numpy as np
+
+    from repro.core.query import compile_query
+
+    cat = build_catalog(rows)
+    q = the_query()
+    if mode == "stream":
+        plan = compile_query(cat, q,
+                             memory_budget_bytes=budget_mb * 1024 * 1024)
+        assert plan._stream is not None, "budget did not trigger streaming"
+        print(f"[memcap] stream: {plan._stream.describe()}", flush=True)
+    else:
+        plan = compile_query(cat, q, backend="fused",
+                             join_backend="gather", agg_backend="segment")
+    out = plan.run()
+    print(f"[memcap] {mode} ok: checksum "
+          f"{float(np.sum(np.asarray(out['pred'], np.float64))):.6e} "
+          f"n={np.asarray(out['n']).sum():.0f}", flush=True)
+    return 0
+
+
+def spawn_capped(mode: str, cap_mb: int, args) -> subprocess.CompletedProcess:
+    cap = cap_mb * 1024 * 1024
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, __file__, "--mode", mode,
+         "--rows", str(args.rows), "--budget-mb", str(args.budget_mb)],
+        preexec_fn=lambda: resource.setrlimit(resource.RLIMIT_AS,
+                                              (cap, cap)),
+        env=env, capture_output=True, text=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("both", "stream", "incore"),
+                    default="both")
+    ap.add_argument("--rows", type=int, default=12_000_000)
+    ap.add_argument("--budget-mb", type=int, default=64)
+    ap.add_argument("--cap-mb", type=int, default=2000,
+                    help="RLIMIT_AS for --mode both's subprocesses")
+    args = ap.parse_args()
+
+    if args.mode != "both":
+        return run_mode(args.mode, args.rows, args.budget_mb)
+
+    ok = True
+    s = spawn_capped("stream", args.cap_mb, args)
+    print(s.stdout, end="", flush=True)
+    if s.returncode != 0:
+        print(f"[memcap] FAIL: streaming died under the {args.cap_mb}MB "
+              f"cap (rc={s.returncode})\n{s.stderr[-2000:]}")
+        ok = False
+    i = spawn_capped("incore", args.cap_mb, args)
+    if i.returncode == 0:
+        print(f"[memcap] FAIL: in-core survived the {args.cap_mb}MB cap — "
+              "raise --rows or lower --cap-mb so the proof is non-vacuous")
+        ok = False
+    else:
+        print(f"[memcap] in-core OOMs as expected (rc={i.returncode}): "
+              + (i.stderr.strip().splitlines()[-1][:120]
+                 if i.stderr.strip() else "killed"))
+    if ok:
+        print(f"[memcap] PROOF OK: cap={args.cap_mb}MB rows={args.rows} — "
+              "in-core OOMs, streaming completes")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 """LAQ: relational query processing as linear algebra (paper §2)."""
 from .table import Table, PAD_KEY
 from .catalog import (Catalog, CatalogHistoryError, CatalogReadOnlyError,
-                      TableDelta, changed_spans)
+                      ChangedSpans, TableDelta, changed_spans)
 from .projection import mapping_matrix, project_matmul, project_gather
 from .selection import Pred, select, selection_vector
 from .domain import key_domain, positions, DomainCache, default_domain_cache
@@ -20,8 +20,8 @@ from .star import (DimSpec, StarJoin, dim_mapping_matrices, shard_rows,
 
 __all__ = [
     "Table", "PAD_KEY",
-    "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "TableDelta",
-    "changed_spans",
+    "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "ChangedSpans",
+    "TableDelta", "changed_spans",
     "mapping_matrix", "project_matmul", "project_gather",
     "Pred", "select", "selection_vector", "key_domain", "positions",
     "DomainCache", "default_domain_cache", "FactoredJoin", "PKIndex",

@@ -30,7 +30,8 @@ operand identity.  This is the same move for Eq. 1 partials.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+from typing import (Dict, Iterator, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -44,17 +45,22 @@ class TableDelta:
 
     ``kind`` is ``"append"`` (rows ``[lo, hi)`` are new; ``grew`` marks a
     capacity reallocation — a *shape* change downstream compiled programs
-    cannot absorb without recompiling) or ``"update"`` (``col`` overwritten
-    at ``rows``; shapes unchanged).
+    cannot absorb without recompiling), ``"update"`` (``col`` overwritten
+    at ``rows``; shapes unchanged), ``"delete"`` (rows tombstoned — a pure
+    validity fold, shapes and row placement unchanged; ``rows`` holds the
+    ids, or ``[lo, hi)`` a covering span for bulk deletes), or
+    ``"compact"`` (tombstones physically reclaimed — row ids *moved*, so
+    every pointer-based artifact must rebuild; ``grew`` is set because the
+    rebuild contract is identical to a capacity change).
     """
 
     version: int                 # version this delta produced
-    kind: str                    # "append" | "update"
-    lo: int = 0                  # first appended row (append)
-    hi: int = 0                  # one past the last appended row (append)
-    grew: bool = False           # capacity reallocated (append)
+    kind: str                    # "append" | "update" | "delete" | "compact"
+    lo: int = 0                  # first appended/deleted row (append/delete)
+    hi: int = 0                  # one past the last such row (append/delete)
+    grew: bool = False           # shape/placement change (append/compact)
     col: Optional[str] = None    # updated column (update)
-    rows: Tuple[int, ...] = ()   # dirtied row ids (update)
+    rows: Tuple[int, ...] = ()   # dirtied/deleted row ids (update/delete)
 
 
 class CatalogReadOnlyError(ValueError):
@@ -209,15 +215,17 @@ class Catalog(Mapping):
                 raise ValueError(
                     f"append to {name!r}: duplicate values within the "
                     f"appended block of unique key column {col!r}")
+            # Tombstoned keys still occupy the PK indices (deletion keeps
+            # row placement), so they stay reserved until compact().
             live = np.asarray(table.key(col))[:n]
             dup = new[np.isin(new, live)]
             if dup.size:
                 raise ValueError(
                     f"append to {name!r}: keys {dup[:8].tolist()} already "
                     f"exist in unique key column {col!r} — PK uniqueness "
-                    "is required by every join over this table (update/"
-                    "delete of key rows is not supported; see "
-                    "Table.update_column)")
+                    "is required by every join over this table (deleted "
+                    "keys stay reserved by their tombstones; compact() "
+                    "before re-appending them)")
 
     # -- transactional mutation ----------------------------------------------
     def _writable(self, what: str):
@@ -289,6 +297,79 @@ class Catalog(Mapping):
         self._commit(name, new, delta)
         return self._versions[name]
 
+    def delete_rows(self, name: str, row_ids) -> int:
+        """Tombstone ``row_ids`` on table ``name``.  Returns the new version.
+
+        Deletion is a pure validity fold: shapes, row placement and keys
+        are unchanged, so derived artifacts absorb it as a shape-preserving
+        delta (the deleted rows drop out of every validity/dimension mask
+        on refresh).  Already-deleted ids are ignored; a delete that
+        removes nothing is a version no-op.  Deleted keys stay reserved
+        (tombstones keep their index slots) until :meth:`compact`.
+        """
+        self._writable(f"delete from {name!r}")
+        if name not in self._tables:
+            raise KeyError(f"unknown table {name!r}; catalog has "
+                           f"{sorted(self._tables)}")
+        old = self._tables[name]
+        arr = np.unique(np.asarray(row_ids, np.int64).reshape(-1))
+        n = int(old.nvalid)
+        if arr.size and (arr.min() < 0 or arr.max() >= n):
+            raise ValueError(
+                f"delete_rows on {name!r}: row ids out of the live "
+                f"range [0, {n})")
+        if old.deleted is not None and arr.size:
+            arr = arr[~np.asarray(old.deleted)[arr]]
+        if arr.size == 0:   # nothing newly deleted: version no-op
+            return self._versions[name]
+        new = old.delete_rows(arr)
+        if arr.size > self.UPDATE_ROWS_MAX:
+            # Covering span, like bulk updates: refresh *recomputes* the
+            # span rows' validity from the current table (it never assumes
+            # every span row is dead), so over-approximation is correct.
+            delta = TableDelta(
+                version=self._versions[name] + 1, kind="delete",
+                lo=int(arr.min()), hi=int(arr.max()) + 1, rows=())
+        else:
+            delta = TableDelta(
+                version=self._versions[name] + 1, kind="delete",
+                rows=tuple(int(i) for i in arr))
+        self._commit(name, new, delta)
+        return self._versions[name]
+
+    def tombstone_fraction(self, name: str) -> float:
+        """Deleted fraction of the table's occupied rows (0.0 when clean)."""
+        t = self._tables[name]
+        n = int(t.nvalid)
+        return t.num_deleted / n if n else 0.0
+
+    def compact(self, name: str, *, threshold: float = 0.25) -> bool:
+        """Reclaim tombstones on ``name`` once dense enough to pay for it.
+
+        Below ``threshold`` tombstone density this is a no-op returning
+        ``False`` — rebuilding every PK index / join pointer / partial for
+        a handful of dead rows costs more than the masked rows do.  Past
+        it, live rows pack down (``Table.compacted``), freeing the dead
+        keys for re-append, and a ``"compact"`` delta is logged with the
+        same rebuild contract as capacity growth (row ids moved: every
+        pointer-based artifact must rebuild).  Returns ``True`` iff the
+        table was rewritten.
+        """
+        self._writable(f"compact {name!r}")
+        if name not in self._tables:
+            raise KeyError(f"unknown table {name!r}; catalog has "
+                           f"{sorted(self._tables)}")
+        if not 0.0 <= threshold <= 1.0:
+            raise ValueError(f"threshold {threshold} outside [0, 1]")
+        if self.tombstone_fraction(name) < max(threshold,
+                                               np.finfo(float).tiny):
+            return False
+        new = self._tables[name].compacted()
+        self._commit(name, new, TableDelta(
+            version=self._versions[name] + 1, kind="compact",
+            lo=0, hi=int(new.nvalid), grew=True))
+        return True
+
     def _commit(self, name: str, table: Table, delta: TableDelta):
         self._tables[name] = table
         self._versions[name] = delta.version
@@ -298,30 +379,49 @@ class Catalog(Mapping):
             self._floor[name] = log.pop(0).version
 
 
-def changed_spans(deltas: Sequence[TableDelta]
-                  ) -> Tuple[Optional[Tuple[int, int]], Tuple[int, ...],
-                             bool]:
-    """Fold a delta sequence into ``(append_span, dirty_rows, grew)``.
+class ChangedSpans(NamedTuple):
+    """:func:`changed_spans`'s fold of one table's pending deltas."""
+
+    span: Optional[Tuple[int, int]]   # union [lo, hi) of appended rows
+    dirty: Tuple[int, ...]            # sorted distinct updated row ids
+    grew: bool                        # shapes/placement changed: rebuild
+    deleted: Tuple[int, ...]          # sorted distinct tombstoned row ids
+
+
+def changed_spans(deltas: Sequence[TableDelta]) -> ChangedSpans:
+    """Fold a delta sequence into ``(append_span, dirty, grew, deleted)``.
 
     The refresh planner's view of "what happened since I was built":
-    ``append_span`` is the union ``[lo, hi)`` of all appended rows (appends
-    are contiguous, so the union is one span), ``dirty_rows`` the sorted
-    distinct updated row ids (span-logged bulk updates expand here, at
-    refresh time, not in the persistent log), and ``grew`` whether any
-    append reallocated — the shape-change signal that forces the recompile
-    fallback.
+    ``span`` is the union ``[lo, hi)`` of all appended rows (appends are
+    contiguous, so the union is one span), ``dirty`` the sorted distinct
+    updated row ids (span-logged bulk updates expand here, at refresh
+    time, not in the persistent log), ``grew`` whether any append
+    reallocated capacity or a compaction moved row ids — the signal that
+    forces the rebuild fallback — and ``deleted`` the sorted distinct
+    tombstoned row ids, kept **distinct from updates**: an updated row
+    has fresh values to recompute, a deleted row must additionally drop
+    out of every validity/dimension mask.  Span-logged bulk deletes
+    expand here too; consumers must *recompute* those rows' liveness
+    from the current table (the span is a covering over-approximation —
+    some rows inside it may still be live).
     """
     lo = hi = None
     dirty = set()
+    dead = set()
     grew = False
     for d in deltas:
         if d.kind == "append":
             lo = d.lo if lo is None else min(lo, d.lo)
             hi = d.hi if hi is None else max(hi, d.hi)
             grew = grew or d.grew
+        elif d.kind == "compact":
+            grew = True
+        elif d.kind == "delete":
+            dead.update(d.rows if d.rows else range(d.lo, d.hi))
         elif d.rows:
             dirty.update(d.rows)
         elif d.hi > d.lo:        # bulk update, logged as a covering span
             dirty.update(range(d.lo, d.hi))
     span = None if lo is None else (lo, hi)
-    return span, tuple(sorted(dirty)), grew
+    return ChangedSpans(span, tuple(sorted(dirty)), grew,
+                        tuple(sorted(dead)))

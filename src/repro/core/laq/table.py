@@ -42,6 +42,10 @@ class Table:
                group-bys always read from ``keys``.
       nvalid:  number of live rows (int or traced scalar). Rows >= nvalid are
                padding.
+      deleted: optional (capacity,) bool tombstone mask.  A tombstoned row
+               keeps its slot, data and key (so no derived artifact changes
+               shape or row placement — deletion is a pure validity fold);
+               ``compact()``/``compacted()`` physically reclaims the slots.
     """
 
     name: str
@@ -49,6 +53,7 @@ class Table:
     matrix: jnp.ndarray
     keys: Mapping[str, jnp.ndarray]
     nvalid: jnp.ndarray | int
+    deleted: jnp.ndarray | None = None
 
     # -- construction -------------------------------------------------------
     @staticmethod
@@ -95,7 +100,20 @@ class Table:
         return self.keys[col]
 
     def valid_mask(self) -> jnp.ndarray:
-        return jnp.arange(self.capacity) < self.nvalid
+        m = jnp.arange(self.capacity) < self.nvalid
+        if self.deleted is not None:
+            m = m & ~self.deleted
+        return m
+
+    @property
+    def num_deleted(self) -> int:
+        """Count of tombstoned rows (0 when no deletions have happened)."""
+        return 0 if self.deleted is None else int(jnp.sum(self.deleted))
+
+    @property
+    def num_live(self) -> int:
+        """Live (non-deleted) rows; requires a concrete ``nvalid``."""
+        return self._concrete_nvalid("count live rows of") - self.num_deleted
 
     def with_matrix(self, matrix: jnp.ndarray, columns=None) -> "Table":
         return dataclasses.replace(
@@ -168,7 +186,56 @@ class Table:
                 buf[:n] = np.asarray(k)[:n]
                 buf[n:new_n] = vals[c].astype(np.int32)
                 keys[c] = jnp.asarray(buf)
-        return Table(self.name, self.columns, matrix, keys, new_n)
+        deleted = self.deleted
+        if deleted is not None and cap != self.capacity:
+            buf = np.zeros((cap,), bool)
+            buf[:self.capacity] = np.asarray(deleted)
+            deleted = jnp.asarray(buf)
+        return Table(self.name, self.columns, matrix, keys, new_n, deleted)
+
+    def delete_rows(self, row_ids) -> "Table":
+        """A new Table with ``row_ids`` tombstoned (validity-masked out).
+
+        Shapes, row placement, keys and data are all unchanged — deletion
+        is a pure fold on :meth:`valid_mask`, so every derived artifact
+        (PK indices, join pointers, prefused partials) stays valid and a
+        compiled plan absorbs it as a shape-preserving delta.  The slots
+        (and their keys) are reclaimed only by :meth:`compacted`.
+        """
+        n = self._concrete_nvalid("delete from")
+        ids = np.asarray(row_ids, np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise ValueError(
+                f"delete_rows on {self.name!r}: row ids out of the live "
+                f"range [0, {n})")
+        dead = (np.zeros(self.capacity, bool) if self.deleted is None
+                else np.array(self.deleted))
+        dead[ids] = True
+        return dataclasses.replace(self, deleted=jnp.asarray(dead))
+
+    def compacted(self) -> "Table":
+        """A new Table with tombstoned rows physically removed.
+
+        Live rows pack down into ``[0, num_live)`` preserving order, the
+        capacity is kept, and the tombstone mask is dropped.  Row ids (and
+        therefore every pointer-based artifact) change — callers must
+        rebuild derived indices, which is why :meth:`Catalog.compact` only
+        triggers this past a tombstone-density threshold.
+        """
+        n = self._concrete_nvalid("compact")
+        if self.deleted is None or not self.num_deleted:
+            return dataclasses.replace(self, deleted=None)
+        keep = ~np.array(self.deleted)[:n]
+        new_n = int(keep.sum())
+        matrix = np.zeros((self.capacity, self.ncols), np.float32)
+        matrix[:new_n] = np.asarray(self.matrix)[:n][keep]
+        keys = {}
+        for c, k in self.keys.items():
+            buf = np.full((self.capacity,), PAD_KEY, np.int32)
+            buf[:new_n] = np.asarray(k)[:n][keep]
+            keys[c] = jnp.asarray(buf)
+        return Table(self.name, self.columns, jnp.asarray(matrix), keys,
+                     new_n, None)
 
     def update_column(self, col: str, row_ids, values) -> "Table":
         """A new Table with ``col`` overwritten at ``row_ids``.
@@ -204,4 +271,7 @@ class Table:
     def to_numpy_valid(self) -> np.ndarray:
         """Materialize the live rows on host (tests / oracles only)."""
         n = int(self.nvalid)
-        return np.asarray(self.matrix)[:n]
+        rows = np.asarray(self.matrix)[:n]
+        if self.deleted is not None:
+            rows = rows[~np.asarray(self.deleted)[:n]]
+        return rows

@@ -108,6 +108,46 @@ zero retraces while shapes hold (appends within a table's padded capacity).
 Capacity growth recompiles, with the reason on ``explain()``.  Plain dicts
 auto-wrap read-only (the old frozen contract, unchanged).
 
+The full lifecycle surface and what each mutation costs a cached plan:
+
+========================================  ===================================
+Catalog call                              Cached-plan consequence
+========================================  ===================================
+``append(t, rows)`` within capacity       delta refresh in place: sorted
+                                          ``PKIndex.extend`` merges, block
+                                          join probes, ``prefuse_rows`` over
+                                          only the new rows — zero retraces
+``append(t, rows)`` beyond capacity       recompile/rebuild (shapes changed),
+                                          reason on ``explain()``
+``update_column(t, col, ids, vals)``      delta refresh of just the dirty
+                                          rows (masks/partials rescattered)
+``delete_rows(t, ids)``                   tombstone: shapes, keys and row
+                                          placement all kept, so the delta
+                                          path applies — deleted rows drop
+                                          out through the validity fold,
+                                          zero retraces
+``compact(t)`` (tombstone GC, fires       row ids are rewritten, so every
+past ``tombstone_fraction`` threshold)    referencing plan recompiles with
+                                          ``compaction:<t> rewrote row ids``
+========================================  ===================================
+
+Out-of-core execution (fact streaming)
+--------------------------------------
+When the fact table's working set exceeds device memory — or the caller
+pins a chunk size — the compiled program streams: the fact axis is
+block-partitioned, per-chunk partial aggregates are folded through a
+carried segment accumulator (sum/count exactly; min/max as masked segment
+folds), and host→device transfer of chunk *i+1* overlaps compute of chunk
+*i* (double buffering with donated chunk buffers).  Results are bit-exact
+vs the in-core fused/gather/segment program — same adds, same order, the
+chunk boundary never splits a segment update.  Enabled per call
+(``compile(q, stream_chunk_rows=..., memory_budget_bytes=...)``) or
+session-wide (``Session(catalog, memory_budget_bytes=...)``); the planner
+explains its in-core-vs-streaming choice in ``plan_reason`` and
+``explain().extras["stream"]`` describes the chunking.  Dimension-side
+artifacts (partials, pointers, masks) are built once and shared across all
+chunks — streaming composes with the artifact pool unchanged.
+
 IR node → paper construct
 -------------------------
 ======================  =====================================================
@@ -181,7 +221,7 @@ from .multiquery import (ArtifactPool, arm_keys, artifact_bytes,
                          make_stacked_runner, stack_key, stack_states)
 from .planner import (AggDecision, QueryPlan, plan_aggregation,
                       plan_partition_spec, plan_placements, plan_query,
-                      plan_serving_backend, planner_threshold,
+                      plan_serving_backend, plan_streaming, planner_threshold,
                       DENSE_JOIN_ELEMS, MXU_SEGMENT_ADVANTAGE,
                       PLANNER_THRESHOLDS, SERVE_KERNEL_MAX_NODES,
                       SERVE_KERNEL_MAX_WIDTH, SHARD_PARTIAL_BYTES)
@@ -191,6 +231,7 @@ from .scheduler import (DEFAULT_MAX_QUEUED_ROWS, DEFAULT_SLO_MS, LANES,
 from .serving import (DEFAULT_BUCKETS, SentinelKeyError, ServingRuntime,
                       compile_serving, requests_from_rows)
 from .session import QueryBuilder, Session, query, query_key
+from .streaming import DEFAULT_CHUNK_ROWS, StreamExecutor, plan_chunk_rows
 from .sharding import (ShardedArm, ShardedPrefusedPartials,
                        shard_prefused_partials)
 
@@ -205,7 +246,8 @@ __all__ = [
     "stack_key", "stack_states",
     "AggDecision", "QueryPlan", "plan_aggregation", "plan_partition_spec",
     "plan_placements", "plan_query", "plan_serving_backend",
-    "planner_threshold", "PLANNER_THRESHOLDS",
+    "plan_streaming", "planner_threshold", "PLANNER_THRESHOLDS",
+    "DEFAULT_CHUNK_ROWS", "StreamExecutor", "plan_chunk_rows",
     "DENSE_JOIN_ELEMS",
     "MXU_SEGMENT_ADVANTAGE", "SERVE_KERNEL_MAX_NODES",
     "SERVE_KERNEL_MAX_WIDTH", "SHARD_PARTIAL_BYTES",

@@ -58,9 +58,11 @@ from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
 from .multiquery import holds_tracers
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
-                      plan_query, resolve_mesh_serve_backend)
+                      plan_query, plan_streaming,
+                      resolve_mesh_serve_backend)
 from .sharding import (make_predict_rows_forward, predict_rows_state,
                        shard_prefused_partials)
+from .streaming import StreamExecutor, assert_pool_dimension_side
 
 
 @dataclasses.dataclass
@@ -110,6 +112,10 @@ class CompiledQuery:
     # The raw (un-jitted) online closure, kept so Session.run_all can vmap
     # structurally compatible plans into one stacked program.
     _online_fn: Optional[callable] = None
+    # Out-of-core driver (streaming.StreamExecutor) when the plan streams
+    # the fact axis; ``run()`` dispatches through it instead of the
+    # in-core jitted program.  None on the in-core path.
+    _stream: Optional[object] = None
 
     @property
     def is_traced(self) -> bool:
@@ -118,8 +124,17 @@ class CompiledQuery:
         return isinstance(self._rows, jax.core.Tracer)
 
     def run(self) -> Dict[str, jnp.ndarray]:
-        """Execute the query; returns aggregates (+ "groups", "rows")."""
-        out = dict(self._run(self._state))
+        """Execute the query; returns aggregates (+ "groups", "rows").
+
+        Streaming plans (``stream_chunk_rows``) fold the fact axis chunk by
+        chunk through the same fused program — grouped aggregates and
+        ungrouped count/min/max come back bit-exact vs the in-core path
+        (see :mod:`repro.core.query.streaming`).
+        """
+        if self._stream is not None:
+            out = dict(self._stream.run())
+        else:
+            out = dict(self._run(self._state))
         if self.group_codes is not None:
             out["groups"] = self.group_codes
         out["rows"] = self._rows
@@ -160,7 +175,9 @@ class CompiledQuery:
             plan_reason=getattr(self, "_base_reason", self.plan.reason),
             trail=tuple(self._refresh_notes),
             shared_artifacts=tuple(self._pool_keys()),
-            extras=(("selectivity", self.selectivity),))
+            extras=(("selectivity", self.selectivity),
+                    ("stream", self._stream.describe()
+                     if self._stream is not None else None)))
 
     def close(self) -> None:
         """Release this plan's shared-artifact references (idempotent).
@@ -208,6 +225,14 @@ class CompiledQuery:
         if self._opts.get("select_capacity") is not None:
             return self._recompile("select-compaction rebinds the fact")
         if any(changed_spans(d)[2] for d in changed.values()):
+            # Compaction reuses the capacity-growth contract (row ids
+            # changed shape-compatibly ⇒ every pointer artifact rebuilds),
+            # but the explain() reason names it distinctly.
+            compacted = sorted(n for n, d in changed.items()
+                               if any(t.kind == "compact" for t in d))
+            if compacted:
+                return self._recompile(
+                    f"compaction:{','.join(compacted)} rewrote row ids")
             grown = sorted(n for n, d in changed.items()
                            if changed_spans(d)[2])
             return self._recompile(f"capacity-growth:{','.join(grown)}")
@@ -245,8 +270,8 @@ class CompiledQuery:
         q = self.query
         cat = self.catalog
         fact = cat[q.fact]
-        fspan, _, _ = (changed_spans(changed[q.fact])
-                       if q.fact in changed else (None, (), False))
+        fspan, _, _, _ = (changed_spans(changed[q.fact])
+                          if q.fact in changed else (None, (), False, ()))
 
         ptrs = [np.array(p) for p in self._state["ptrs"]]
         founds = [np.array(f) for f in self._state["founds"]]
@@ -254,8 +279,12 @@ class CompiledQuery:
         dirty_rows = []
         for j, arm in enumerate(q.arms):
             dim = cat[arm.table]
-            span, dirty, _ = (changed_spans(changed[arm.table])
-                              if arm.table in changed else (None, (), False))
+            # Deleted ids need no pointer/index/prefuse work: a tombstone
+            # keeps the row's slot, key and data, so only the validity fold
+            # (recomputed below by _assemble_star) changes.
+            span, dirty, _, _ = (
+                changed_spans(changed[arm.table])
+                if arm.table in changed else (None, (), False, ()))
             ids = set(dirty)
             if span is not None:
                 lo, hi = span
@@ -361,6 +390,10 @@ class CompiledQuery:
                 self._sp, tables, [fj.ptr for fj in star.joins],
                 [fj.found for fj in star.joins], valid)
         self._state = state
+        if self._stream is not None:
+            # Same capacity ⇒ same chunk shapes ⇒ the executor's jit cache
+            # keeps serving: a streamed refresh is zero-retrace too.
+            self._stream.rebind(state)
         self.versions = {n: cat.version(n) for n in self._participating()}
         touched = ",".join(f"{n}+{len(changed[n])}"
                            for n in sorted(changed))
@@ -408,6 +441,12 @@ def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
             dmask = arm.preds[0].mask(dim)
             for p in arm.preds[1:]:
                 dmask = dmask & p.mask(dim)
+        if dmask is None and dim.deleted is not None:
+            # ``Pred.mask`` folds the dimension's validity (tombstones
+            # included), but an arm with no predicates has no mask to fold
+            # through — gather the live mask explicitly so fact rows joined
+            # to a tombstoned dimension row drop out.
+            dmask = dim.valid_mask()
         if dmask is not None:
             ok = ok & jnp.take(dmask, fj.ptr)
         valid = valid & ok
@@ -467,6 +506,21 @@ def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
         cols.append(c - jnp.int32(gk.offset))
         bounds.append(gk.bound)
     return cols, bounds
+
+
+def _fact_row_bytes(fact: Table, q: PredictiveQuery, n_arms: int,
+                    out_width: int) -> int:
+    """Per-fact-row working-set bytes of the online program.
+
+    State leaves (matrix columns, exact keys, per-arm pointer+found,
+    validity, group id) plus the fact-sized intermediates the program
+    materializes (prediction rows, per-aggregate masked value temps) — the
+    quantity the streaming planner compares against the device budget.
+    """
+    base = fact.ncols * 4 + len(fact.keys) * 4 + n_arms * 5 + 1 + 4
+    inter = ((out_width * 4 if q.model is not None else 0)
+             + 4 * max(len(q.aggregates), 1))
+    return base + inter
 
 
 def _check_aggregates(q: PredictiveQuery):
@@ -549,6 +603,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   select_capacity: Optional[int] = None,
                   batches_per_update: float = 1000.0,
                   memory_budget_bytes: Optional[int] = None,
+                  stream_chunk_rows=None,
                   interpret: bool = False, mesh=None,
                   shard_axis: str = "model",
                   shard_threshold_bytes: Optional[int] = None,
@@ -579,6 +634,15 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     non-fused trees onto ``tree_predict`` ("auto" picks it on TPU when the
     shapes fit the block specs); ``interpret=True`` runs the kernels in
     interpret mode so the lowering is testable on CPU.
+
+    ``stream_chunk_rows`` turns ``run()`` out-of-core: the fact axis streams
+    host→device in chunks of that many rows (``"auto"`` sizes chunks to
+    ``memory_budget_bytes``; the default ``None`` streams only when the
+    budget is set and the fact working set exceeds it) through the fused
+    online program, folding per-chunk partial aggregates bit-exactly for
+    grouped aggregates and ungrouped count/min/max — see
+    :mod:`repro.core.query.streaming`.  The serving paths
+    (``predict_rows``) are request-batched and unaffected.
 
     ``select_capacity`` applies the fact predicates by ``mask_select``
     compaction (§2.2) *before* the joins: surviving rows are packed into a
@@ -618,6 +682,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                 select_capacity=select_capacity,
                 batches_per_update=batches_per_update,
                 memory_budget_bytes=memory_budget_bytes,
+                stream_chunk_rows=stream_chunk_rows,
                 interpret=interpret, mesh=mesh, shard_axis=shard_axis,
                 shard_threshold_bytes=shard_threshold_bytes, pool=pool)
     # Pool sharing engages only on the plain single-device path against the
@@ -686,6 +751,57 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     join_backend = plan.join_backend if join_backend == "auto" else join_backend
     agg_backend = ((plan.agg.backend if plan.agg else "segment")
                    if agg_backend == "auto" else agg_backend)
+
+    # Out-of-core decision: fact working-set bytes vs the device budget
+    # (planner), or a caller-pinned chunk size.  Streaming runs the fused
+    # gather/segment program per chunk — the one lowering whose per-row
+    # bits are independent of chunking — so explicit conflicting backend
+    # overrides are rejected rather than silently un-streamed.
+    stream_rows = None
+    if stream_chunk_rows is not None or memory_budget_bytes is not None:
+        row_bytes = _fact_row_bytes(fact, q, len(star.dims), out_width)
+        stream_rows, stream_reason = plan_streaming(
+            stream_chunk_rows, fact.capacity, row_bytes,
+            memory_budget_bytes)
+        if (stream_rows is not None and stream_chunk_rows is None
+                and q.model is not None and backend == "nonfused"
+                and plan.fusion is not None
+                and memory_budget_bytes is not None
+                and plan.fusion.prefused_bytes > memory_budget_bytes):
+            # The budget already ruled out resident prefused partials
+            # (plan_fusion's older contract) — chunking the fact cannot
+            # shrink the dimension side, so the budget-driven path defers
+            # to that choice.  A merely amortization-driven nonfused pick
+            # does NOT defer: out-of-core has no nonfused lowering, and
+            # prefusing is the price of exceeding memory.  An explicit
+            # chunk size always streams.
+            stream_rows = None
+            stream_reason = "stream=off (budget forces nonfused prefuse)"
+        if stream_reason:
+            plan = dataclasses.replace(
+                plan, stream_chunk_rows=stream_rows,
+                reason=f"{plan.reason}; {stream_reason}")
+    if stream_rows is not None:
+        for name, val, bad in (("backend", opts["backend"], "nonfused"),
+                               ("join_backend", opts["join_backend"],
+                                "matmul"),
+                               ("agg_backend", opts["agg_backend"],
+                                "matmul")):
+            if val == bad:
+                raise ValueError(
+                    f"stream_chunk_rows is incompatible with {name}="
+                    f"{bad!r}: chunked execution folds partial aggregates "
+                    "through the fused gather/segment program (matmul "
+                    "lowerings are not bitwise chunk-stable)")
+        if isinstance(rows, jax.core.Tracer) or holds_tracers(cat0, q):
+            raise ValueError(
+                "streaming is an offline host-side driver: it cannot run "
+                "under an outer trace (compile without stream_chunk_rows "
+                "there)")
+        if q.model is not None:
+            backend = "fused"
+        join_backend = "gather"
+        agg_backend = "segment"
     serve_backend = effective_serve_backend(plan, serve_backend, backend,
                                             q.model, len(star.dims))
     if serve_backend != plan.serve_backend:
@@ -815,6 +931,24 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
             def predict_rows_jit(row_ids, st):
                 return rows_jit(row_ids, _program_state(st))
 
+    stream = None
+    if stream_rows is not None:
+        # Result widths come from the in-core program's abstract output
+        # shapes — eval_shape spends no FLOPs and guarantees the chunk
+        # accumulators agree with what the in-core fold produces.
+        out_shapes = jax.eval_shape(_online, _program_state(state))
+        stream = StreamExecutor(
+            star=star, state=state, aggregates=aggregates, model=model,
+            num_groups=num_groups if q.group_keys else 0,
+            fact_desc=fact_desc, chunk_rows=stream_rows,
+            out_shapes=out_shapes)
+        if use_pool:
+            # Tentpole invariant: pooled artifacts a streamed plan shares
+            # are dimension-side and flow to every chunk unchanged.
+            assert_pool_dimension_side(
+                pool, {"arms": arm_refs, "partials": tuple(partial_keys)},
+                state, star)
+
     return CompiledQuery(
         query=q, plan=plan, backend=backend, join_backend=join_backend,
         agg_backend=agg_backend, serve_backend=serve_backend, star=star,
@@ -827,7 +961,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         _pool=pool if use_pool else None,
         _pool_refs=({"arms": arm_refs, "partials": tuple(partial_keys)}
                     if use_pool else {}),
-        _online_fn=_online)
+        _online_fn=_online, _stream=stream)
 
 
 def _make_predict_rows_sharded(star: StarJoin, model,

@@ -197,7 +197,9 @@ def _mask_rows(dim: Table, preds, ids: np.ndarray) -> jnp.ndarray:
                 {c: jnp.take(v, jnp.asarray(ids))
                  for c, v in dim.keys.items()},
                 int(ids.shape[0]))
-    m = jnp.ones((int(ids.shape[0]),), bool)
+    # Liveness comes from the *parent* table: the sub-table is fully
+    # "valid" by construction, so tombstones must be gathered explicitly.
+    m = jnp.take(dim.valid_mask(), jnp.asarray(ids))
     for p in preds:
         m = m & p.mask(sub)
     return m
@@ -462,8 +464,8 @@ class ArtifactPool:
 
     @staticmethod
     def _touched_ids(deltas) -> Optional[np.ndarray]:
-        span, dirty, _ = changed_spans(deltas)
-        ids = set(dirty)
+        span, dirty, _, deleted = changed_spans(deltas)
+        ids = set(dirty) | set(deleted)
         if span is not None:
             ids.update(range(span[0], span[1]))
         return np.asarray(sorted(ids), np.int32) if ids else None
@@ -474,7 +476,7 @@ class ArtifactPool:
 
     def _refresh_pkindex(self, entry, deltas):
         s = entry.spec
-        span, _, _ = changed_spans(deltas[s["table"]])
+        span = changed_spans(deltas[s["table"]]).span
         if span is not None:
             lo, hi = span
             entry.value = entry.value.extend(
@@ -498,7 +500,7 @@ class ArtifactPool:
         ptr = np.array(entry.value[0])
         found = np.array(entry.value[1])
         if s["table"] in deltas:
-            span, _, _ = changed_spans(deltas[s["table"]])
+            span = changed_spans(deltas[s["table"]]).span
             if span is not None:
                 lo, hi = span
                 nk = np.asarray(dim.key(s["pk_col"]))[lo:hi]
@@ -511,7 +513,7 @@ class ArtifactPool:
                 ptr = np.where(hit, srow[posc], ptr).astype(np.int32)
                 found = found | hit
         if s["fact"] in deltas:
-            span, _, _ = changed_spans(deltas[s["fact"]])
+            span = changed_spans(deltas[s["fact"]]).span
             if span is not None:
                 flo, fhi = span
                 idx = self._pkindex_entry(s["table"], s["pk_col"]).value
@@ -589,6 +591,10 @@ def stack_key(compiled) -> Optional[tuple]:
     q = compiled.query
     if (getattr(compiled, "_online_fn", None) is None or compiled.is_traced
             or getattr(compiled, "_sp", None) is not None):
+        return None
+    if getattr(compiled, "_stream", None) is not None:
+        # Streaming plans execute chunk-at-a-time with a carried
+        # accumulator — there is no single whole-fact state to stack.
         return None
     if getattr(compiled, "_opts", {}).get("select_capacity") is not None:
         # Compacted plans close over a per-plan fact skeleton whose key

@@ -105,6 +105,10 @@ class QueryPlan:
     # Per-arm placement of the quasi-static row tables (prefused partials /
     # projected features) over the serving mesh; None when planned meshless.
     partition_specs: Optional[Tuple[P, ...]] = None
+    # Out-of-core: rows per fact chunk when the plan streams the fact axis
+    # (None = in-core).  Decided by plan_streaming from the fact working-set
+    # bytes vs the device-memory budget, or pinned by the caller.
+    stream_chunk_rows: Optional[int] = None
 
 
 def plan_partition_spec(mesh, shape: Sequence[int], *, itemsize: int = 4,
@@ -258,6 +262,40 @@ def effective_serve_backend(plan: "QueryPlan", serve_backend: str,
             return plan.serve_backend
         return plan_serving_backend(model, num_arms, backend=backend)[0]
     return resolve_serve_backend(serve_backend, backend, model)
+
+
+def plan_streaming(requested, fact_rows: int, fact_row_bytes: int,
+                   memory_budget_bytes: Optional[int]
+                   ) -> Tuple[Optional[int], str]:
+    """In-core vs out-of-core for the fact axis; returns ``(chunk, reason)``.
+
+    The working set of the online program is ~``fact_rows × fact_row_bytes``
+    (matrix columns, join pointers, validity, group ids, plus the fact-sized
+    intermediates the program materializes).  When a caller pins
+    ``stream_chunk_rows`` to an int the decision is theirs; ``"auto"``
+    streams with budget-sized chunks; ``None`` streams only when a
+    ``memory_budget_bytes`` is given and the working set exceeds it — the
+    common case stays in-core with zero overhead.
+    """
+    from .streaming import plan_chunk_rows
+    est = int(fact_rows) * max(int(fact_row_bytes), 1)
+    chunk = plan_chunk_rows(requested, int(fact_rows), int(fact_row_bytes),
+                            memory_budget_bytes)
+    if chunk is None:
+        if memory_budget_bytes is not None:
+            return None, (f"stream=off (working set ~{est / 1e6:.1f}MB fits "
+                          f"budget {memory_budget_bytes / 1e6:.1f}MB)")
+        return None, ""
+    if isinstance(requested, int) and requested > 0:
+        why = "caller pinned"
+    elif memory_budget_bytes is not None:
+        why = (f"working set ~{est / 1e6:.1f}MB vs budget "
+               f"{memory_budget_bytes / 1e6:.1f}MB")
+    else:
+        why = "stream_chunk_rows='auto', no budget: default chunk"
+    n_chunks = -(-int(fact_rows) // chunk) if fact_rows else 1
+    return chunk, (f"stream={chunk} rows/chunk x {n_chunks} ({why}; fused "
+                   "segment fold, dimension-side artifacts shared)")
 
 
 def plan_aggregation(online_rows: float, num_groups: int, out_width: int,

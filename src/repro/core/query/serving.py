@@ -132,7 +132,11 @@ def _mask_rows(dim: Table, preds, ids: np.ndarray) -> jnp.ndarray:
                 {c: jnp.take(v, jnp.asarray(ids))
                  for c, v in dim.keys.items()},
                 int(ids.shape[0]))
-    m = jnp.ones((int(ids.shape[0]),), bool)
+    # The sub-table is all-live by construction (nvalid = len(ids), no
+    # tombstones), so fold the *parent's* liveness at these rows explicitly
+    # — a tombstoned row must come back False no matter what the predicates
+    # say, exactly as the cold build's ``valid_mask() & preds`` fold does.
+    m = jnp.take(dim.valid_mask(), jnp.asarray(ids))
     for p in preds:
         m = m & p.mask(sub)
     return m
@@ -425,6 +429,11 @@ class ServingRuntime:
         if not changed:
             return self._note("refresh=no-op(versions unchanged)")
         if any(changed_spans(d)[2] for d in changed.values()):
+            compacted = sorted(n for n, d in changed.items()
+                               if any(t.kind == "compact" for t in d))
+            if compacted:
+                return self._rebuild(
+                    f"compaction:{','.join(compacted)} rewrote row ids")
             grown = sorted(n for n, d in changed.items()
                            if changed_spans(d)[2])
             return self._rebuild(f"capacity-growth:{','.join(grown)}")
@@ -528,27 +537,36 @@ class ServingRuntime:
             if arm.table not in changed:
                 continue
             dim = cat[arm.table]
-            span, dirty, _ = changed_spans(changed[arm.table])
+            span, dirty, _, deleted = changed_spans(changed[arm.table])
             ids = set(dirty)
             if span is not None:
                 ids.update(range(span[0], span[1]))
-            if not ids:        # e.g. history contains only no-op deltas
+            # Tombstoned rows need only the validity scatter below: their
+            # partial rows, keys and slots are untouched (deletion is a
+            # pure validity fold), so they join the mask ids but not the
+            # prefuse recompute.
+            touched = sorted(ids | set(deleted))
+            if not touched:    # e.g. history contains only no-op deltas
                 continue
-            ids = np.asarray(sorted(ids), np.int32)
-            lo, hi = int(ids.min()), int(ids.max()) + 1
-            # Partial (fused) / projected-feature (nonfused) rows: only the
-            # changed dimension rows are recomputed, then scattered — the
-            # delta half of Eq. 1 maintenance, bit-exact vs a cold prefuse.
             old = self._arms[j]
-            if self.backend == "fused":
-                rows = prefuse_rows(dims, self._model, j,
-                                    jnp.asarray(ids))
-            else:
-                m = mapping_matrix(dim.columns, arm.feature_cols)
-                rows = jnp.take(dim.matrix, jnp.asarray(ids), axis=0) @ m
             table = (old.table if old.table is not None
                      else new_sharded_arms[j].table)
-            table = table.at[jnp.asarray(ids)].set(rows)
+            if ids:
+                # Partial (fused) / projected-feature (nonfused) rows: only
+                # the changed dimension rows are recomputed, then scattered
+                # — the delta half of Eq. 1 maintenance, bit-exact vs a
+                # cold prefuse.
+                upd = np.asarray(sorted(ids), np.int32)
+                if self.backend == "fused":
+                    rows = prefuse_rows(dims, self._model, j,
+                                        jnp.asarray(upd))
+                else:
+                    m = mapping_matrix(dim.columns, arm.feature_cols)
+                    rows = jnp.take(dim.matrix, jnp.asarray(upd),
+                                    axis=0) @ m
+                table = table.at[jnp.asarray(upd)].set(rows)
+            ids = np.asarray(touched, np.int32)
+            lo, hi = int(ids.min()), int(ids.max()) + 1
             dmask = old.dmask.at[jnp.asarray(ids)].set(
                 _mask_rows(dim, arm.preds, ids))
             if new_sharded_arms is not None:

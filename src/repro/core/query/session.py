@@ -364,12 +364,19 @@ class Session:
     def __init__(self, catalog: "Mapping[str, Table] | Catalog", *,
                  mesh=None, shard_axis: str = "model",
                  shard_threshold_bytes: Optional[int] = None,
-                 interpret: bool = False):
+                 interpret: bool = False,
+                 memory_budget_bytes: Optional[int] = None,
+                 stream_chunk_rows: Optional[Union[int, str]] = None):
         self.catalog: Catalog = Catalog.wrap(catalog)
         self.mesh = mesh
         self.shard_axis = shard_axis
         self.shard_threshold_bytes = shard_threshold_bytes
         self.interpret = interpret
+        # Out-of-core defaults: a device-memory budget and/or a fact chunk
+        # size applied to every compile through this session (per-call
+        # overrides win).  See core.query.streaming for the execution model.
+        self.memory_budget_bytes = memory_budget_bytes
+        self.stream_chunk_rows = stream_chunk_rows
         # key → (versions-at-build, artifact); versions are re-checked (and
         # the artifact refreshed) on every hit.
         self._plans: Dict[tuple, Tuple[tuple, CompiledQuery]] = {}
@@ -428,6 +435,18 @@ class Session:
         return dict(mesh=self.mesh, shard_axis=self.shard_axis,
                     shard_threshold_bytes=self.shard_threshold_bytes)
 
+    def _stream_kwargs(self, *, serving: bool = False) -> Dict:
+        """Session-level out-of-core defaults, omitted when unset so the
+        plan-cache keys of sessions without them are unchanged.  Serving
+        runtimes batch by request rows, not fact scans, so only the memory
+        budget (a planner input) applies there."""
+        kw: Dict = {}
+        if self.memory_budget_bytes is not None:
+            kw["memory_budget_bytes"] = self.memory_budget_bytes
+        if not serving and self.stream_chunk_rows is not None:
+            kw["stream_chunk_rows"] = self.stream_chunk_rows
+        return kw
+
     def _tables_of(self, q: PredictiveQuery, *, serving: bool = False
                    ) -> Tuple[str, ...]:
         """The catalog tables whose versions gate ``q``'s cached artifacts.
@@ -451,7 +470,7 @@ class Session:
         — the cache can never hand out pre-append state.
         """
         opts = {"interpret": self.interpret, "pool": self.pool,
-                **self._mesh_kwargs(), **overrides}
+                **self._mesh_kwargs(), **self._stream_kwargs(), **overrides}
         key = (query_key(q), _opts_key(opts))
         versions = self.catalog.versions(self._tables_of(q))
         hit = self._plans.get(key)
@@ -478,7 +497,8 @@ class Session:
         returned, so cached runtimes never serve pre-append partials.
         """
         opts = {"interpret": self.interpret, "pool": self.pool,
-                **self._mesh_kwargs(), **overrides}
+                **self._mesh_kwargs(), **self._stream_kwargs(serving=True),
+                **overrides}
         key = ("serve", query_key(q),
                _opts_key({**opts, "buckets": tuple(buckets)},
                          defaults=_SERVING_DEFAULTS))

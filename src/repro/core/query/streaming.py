@@ -1,0 +1,358 @@
+"""Out-of-core execution for the fact axis: chunked streaming aggregation.
+
+MatFast-style block partitioning (PAPERS.md, arxiv 2110.01767): the fact
+table is split along the row axis into fixed-size chunks, each chunk is
+shipped host→device (``jax.device_put`` of chunk *i+1* issued right after
+the — asynchronously dispatched — compute on chunk *i*, so transfer and
+compute overlap; chunk and accumulator buffers are donated off-CPU), and the
+same fused online program the in-core ``run()`` executes is applied per
+chunk.  Dimension-side artifacts (prefused partials, the tree compare
+vector) are device-resident once and shared by every chunk unchanged —
+only fact-axis leaves (matrix rows, validity, join pointers, group ids)
+stream.
+
+Bit-exactness contract
+----------------------
+The per-chunk partial aggregates are **not** combined by re-reducing chunk
+results (floating-point addition is non-associative, so per-chunk
+``segment_sum`` partials added across chunks drift in the last ulp).
+Instead the executor carries one accumulator of ``num_groups + 1`` segments
+across chunks and *continues the same row-order fold* the in-core segment
+reduction performs: ``acc.at[gid].add(vals)`` (``.min``/``.max`` for those
+ops) applies scatter updates row-sequentially, so after the last chunk the
+accumulator holds bitwise the same values as one full-table
+``segment_sum``/``segment_min``/``segment_max`` — for every chunk size,
+including 1, non-divisors of the row count, and sizes past the fact length.
+Grouped aggregates and ungrouped ``count``/``min``/``max`` are therefore
+bit-exact vs the in-core ``run()``.  Ungrouped ``sum``/``mean`` reduce the
+whole fact axis with no segment structure to preserve the fold order
+through; they are exact up to float summation order (tests use allclose
+there, and bitwise everywhere else).
+
+The fused online program is chunk-stable by construction — per-row gathers
+into dimension-side partials plus elementwise adds, no cross-row matmul —
+which is why streaming pins ``backend="fused"``, ``join_backend="gather"``
+and ``agg_backend="segment"`` (``compile_query`` rejects explicit conflicting
+overrides).  The chunk program is one jitted function keyed on the chunk
+shape: the last chunk is padded to the uniform size (padded rows are
+invalid and carry the overflow group id, so they only ever touch the
+dropped ``num_groups`` segment), and ``rebind`` swaps refreshed state in
+without changing shapes — a refresh that keeps the chunk count re-dispatches
+with **zero retraces**.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fusion.pipeline import PrefusedStar, predict_fused
+from ..laq.join import FactoredJoin
+from ..laq.star import StarJoin
+from .ir import PREDICTION, eval_value
+
+#: Default rows per chunk when streaming is requested without a size.
+DEFAULT_CHUNK_ROWS = 65536
+
+
+def plan_chunk_rows(requested, capacity: int, row_bytes: int,
+                    budget_bytes: Optional[int]) -> Optional[int]:
+    """Resolve a ``stream_chunk_rows`` request to a concrete chunk size.
+
+    ``requested`` may be a positive int (use it), ``"auto"`` (size chunks to
+    the budget, default chunk when none), or ``None`` (stream only when a
+    budget is given and the fact working set exceeds it).  Returns ``None``
+    for the in-core path.
+    """
+    if requested is None or requested == 0:
+        if budget_bytes is None:
+            return None
+        if capacity * max(row_bytes, 1) <= budget_bytes:
+            return None
+        requested = "auto"
+    if requested == "auto":
+        if budget_bytes is None:
+            return min(DEFAULT_CHUNK_ROWS, max(capacity, 1))
+        rows = budget_bytes // max(row_bytes, 1)
+        return int(min(max(rows, 1), max(capacity, 1)))
+    rows = int(requested)
+    if rows < 1:
+        raise ValueError(f"stream_chunk_rows must be >= 1, got {rows}")
+    return rows
+
+
+def assert_pool_dimension_side(pool, refs: Dict, state: Dict,
+                               star: StarJoin) -> None:
+    """Assert pooled artifacts compose with streaming exactly as designed.
+
+    Pooled *dimension-side* artifacts — prefused partials (and the dmasks /
+    PK indices behind the validity fold) — must be the very arrays every
+    chunk shares unchanged: partial values identical (by object) to the
+    plan state's and sized by the *dimension* capacity, never the fact's.
+    Pooled *fact-axis* join pointers are the arrays the executor slices per
+    chunk — shared with the state by object too, and never mutated by
+    streaming.  A violation means a copy slipped in between the pool and
+    the chunk program, silently breaking O(distinct artifacts) refresh.
+    """
+    parts = state.get("partials") or ()
+    part_ids = {id(p) for p in parts}
+    for k in refs.get("partials", ()):
+        if id(pool.get(k)) not in part_ids:
+            raise AssertionError(
+                f"pooled partial {k} is not the array the streamed plan "
+                "shares across chunks — dimension-side artifacts must flow "
+                "from the pool to every chunk unchanged")
+    for p, d in zip(parts, star.dims):
+        if int(p.shape[0]) != d.dim.capacity:
+            raise AssertionError(
+                f"prefused partial for {d.dim.name!r} is "
+                f"{int(p.shape[0])}-row, expected the dimension capacity "
+                f"{d.dim.capacity}: partials must stay dimension-side "
+                "(fact-sized partials would have to stream)")
+    ptr_ids = {id(p) for p in state["ptrs"]}
+    found_ids = {id(f) for f in state["founds"]}
+    for (_ikey, jkey, _mkey) in refs.get("arms", ()):
+        ptr, found = pool.get(jkey)
+        if id(ptr) not in ptr_ids or id(found) not in found_ids:
+            raise AssertionError(
+                f"pooled join {jkey} diverged from the streamed plan's "
+                "pointers — chunking must slice the shared arrays, not "
+                "copies")
+
+
+class StreamExecutor:
+    """Chunked driver for one compiled query's online aggregate program.
+
+    Built by ``compile_query`` when a plan streams; holds host-side views of
+    the fact-axis state leaves, the shared dimension-side leaves, and one
+    jitted chunk-fold program.  ``run()`` produces the same aggregate dict
+    as the in-core jitted ``_online`` (see the module docstring for the
+    exactness contract); ``rebind(state)`` swaps refreshed state in without
+    retracing while the chunk count is unchanged.
+    """
+
+    #: fact-axis state leaves (sliced per chunk); everything else is shared.
+    _FACT_AXIS = ("fact_matrix", "valid", "ptrs", "founds", "gid")
+
+    def __init__(self, *, star: StarJoin, state: Dict, aggregates,
+                 model, num_groups: int, fact_desc: str, chunk_rows: int,
+                 out_shapes: Dict):
+        self._star0 = star
+        self._fact0 = star.fact
+        self._aggregates = tuple(aggregates)
+        self._model = model
+        self._num_groups = int(num_groups)
+        self._fact_desc = fact_desc
+        self._grouped = state["gid"] is not None
+        self._capacity = int(state["fact_matrix"].shape[0])
+        self.chunk_rows = int(min(max(chunk_rows, 1), max(self._capacity, 1)))
+        self.n_chunks = max(
+            1, math.ceil(self._capacity / self.chunk_rows))
+        # Result widths per aggregate, from the in-core program's abstract
+        # output shapes (jax.eval_shape — no FLOPs spent).
+        self._widths = {}
+        for agg in self._aggregates:
+            sh = tuple(out_shapes[agg.name].shape)
+            self._widths[agg.name] = (sh[-1] if len(sh) > (
+                1 if self._grouped else 0) else None)
+        self._needs_count = any(a.op in ("count", "mean")
+                                for a in self._aggregates)
+        self.traces = 0
+        platform = jax.default_backend()
+        # Donating the accumulator and the chunk buffers lets XLA write the
+        # folded accumulator (and scratch) into the arriving chunk's memory;
+        # CPU jit does not honor donation and warns, so gate it.
+        donate = (0, 1) if platform != "cpu" else ()
+        self._step = jax.jit(self._chunk_step, donate_argnums=donate)
+        self._finalize = jax.jit(self._finalize_fn)
+        self.rebind(state)
+
+    # -- state binding -------------------------------------------------------
+    def rebind(self, state: Dict) -> None:
+        """Swap in refreshed state.  Shapes (and so the chunk program's jit
+        cache) are preserved — same capacity ⇒ same chunk count ⇒ zero
+        retraces; a capacity change recompiles the owning plan instead."""
+        if int(state["fact_matrix"].shape[0]) != self._capacity:
+            raise ValueError(
+                "stream rebind with a different fact capacity "
+                f"({int(state['fact_matrix'].shape[0])} vs "
+                f"{self._capacity}): capacity growth recompiles")
+        if (state["gid"] is not None) != self._grouped:
+            raise ValueError("stream rebind changed group-by structure")
+        # Host views of the fact-axis leaves (numpy slicing below is
+        # zero-copy; the per-chunk device_put materializes only chunk-sized
+        # buffers on device).
+        self._h_matrix = np.asarray(state["fact_matrix"])
+        self._h_valid = np.asarray(state["valid"])
+        self._h_ptrs = tuple(np.asarray(p) for p in state["ptrs"])
+        self._h_founds = tuple(np.asarray(f) for f in state["founds"])
+        self._h_gid = (np.asarray(state["gid"]) if self._grouped else None)
+        self._shared = {"partials": state["partials"], "h": state["h"]}
+
+    # -- chunk construction --------------------------------------------------
+    def _host_chunk(self, i: int) -> Dict:
+        lo = i * self.chunk_rows
+        hi = min(lo + self.chunk_rows, self._capacity)
+        pad = self.chunk_rows - (hi - lo)
+
+        def pad1(a, fill):
+            if pad == 0:
+                return a[lo:hi]
+            out = np.full((self.chunk_rows,) + a.shape[1:], fill, a.dtype)
+            out[:hi - lo] = a[lo:hi]
+            return out
+
+        chunk = {
+            "fact_matrix": pad1(self._h_matrix, 0),
+            # Padded rows are invalid and land in the dropped overflow
+            # segment — they can only ever touch acc[num_groups].
+            "valid": pad1(self._h_valid, False),
+            "ptrs": tuple(pad1(p, 0) for p in self._h_ptrs),
+            "founds": tuple(pad1(f, False) for f in self._h_founds),
+            "gid": (pad1(self._h_gid, self._num_groups)
+                    if self._grouped else None),
+        }
+        return chunk
+
+    def _put(self, i: int):
+        return jax.device_put(self._host_chunk(i))
+
+    # -- the jitted chunk fold ----------------------------------------------
+    def _acc_shape(self, width):
+        lead = (self._num_groups + 1,) if self._grouped else ()
+        return lead + ((width,) if width is not None else ())
+
+    def _init_acc(self) -> Dict:
+        acc = {}
+        if self._needs_count:
+            acc["count"] = jnp.zeros(self._acc_shape(None), jnp.float32)
+        for agg in self._aggregates:
+            if agg.op == "count":
+                continue
+            shape = self._acc_shape(self._widths[agg.name])
+            if agg.op == "min":
+                acc[agg.name] = jnp.full(shape, jnp.inf, jnp.float32)
+            elif agg.op == "max":
+                acc[agg.name] = jnp.full(shape, -jnp.inf, jnp.float32)
+            else:
+                acc[agg.name] = jnp.zeros(shape, jnp.float32)
+        return acc
+
+    def _chunk_predictions(self, chunk: Dict, shared: Dict) -> jnp.ndarray:
+        """``predict_fused`` on the chunk view: per-row gathers into the
+        shared dimension-side partials — bitwise independent of chunking."""
+        fact_v = dataclasses.replace(self._fact0,
+                                     matrix=chunk["fact_matrix"])
+        joins = tuple(FactoredJoin(p, f)
+                      for p, f in zip(chunk["ptrs"], chunk["founds"]))
+        star_v = dataclasses.replace(self._star0, fact=fact_v, joins=joins,
+                                     row_valid=chunk["valid"])
+        return predict_fused(star_v,
+                             PrefusedStar(tuple(shared["partials"]),
+                                          shared["h"]))
+
+    def _chunk_values(self, agg, pred, chunk):
+        """Mirror of the compiler's ``_agg_values`` on a chunk view."""
+        if agg.value == PREDICTION:
+            return pred                          # already validity-masked
+        fact_v = dataclasses.replace(self._fact0,
+                                     matrix=chunk["fact_matrix"])
+        vals = eval_value(fact_v, agg.value,
+                          query=f"{agg.name!r} on {self._fact_desc!r}")
+        if agg.op in ("min", "max"):
+            return vals       # invalid rows are masked by gid / ±inf below
+        return jnp.where(chunk["valid"], vals, 0.0)
+
+    def _chunk_step(self, acc: Dict, chunk: Dict, shared: Dict) -> Dict:
+        self.traces += 1       # python side effect: counts (re)traces only
+        valid = chunk["valid"]
+        gid = chunk["gid"]
+        pred = (self._chunk_predictions(chunk, shared)
+                if self._model is not None else None)
+        out = {}
+        if self._needs_count:
+            ones = valid.astype(jnp.float32)
+            out["count"] = (acc["count"].at[gid].add(ones) if self._grouped
+                            else acc["count"] + jnp.sum(ones))
+        for agg in self._aggregates:
+            if agg.op == "count":
+                continue
+            vals = self._chunk_values(agg, pred, chunk)
+            a = acc[agg.name]
+            if self._grouped:
+                # Scatter into the carried (num_groups+1)-segment
+                # accumulator: updates apply row-sequentially, continuing
+                # the full-table segment fold bit-exactly.
+                if agg.op == "min":
+                    out[agg.name] = a.at[gid].min(vals)
+                elif agg.op == "max":
+                    out[agg.name] = a.at[gid].max(vals)
+                else:
+                    out[agg.name] = a.at[gid].add(vals)
+            elif agg.op in ("min", "max"):
+                fill = jnp.inf if agg.op == "min" else -jnp.inf
+                mask = valid[:, None] if vals.ndim > 1 else valid
+                r = (jnp.min if agg.op == "min" else jnp.max)(
+                    jnp.where(mask, vals, fill), axis=0)
+                out[agg.name] = (jnp.minimum if agg.op == "min"
+                                 else jnp.maximum)(a, r)
+            else:
+                out[agg.name] = a + jnp.sum(vals, axis=0)
+        return out
+
+    def _finalize_fn(self, acc: Dict) -> Dict:
+        """Slice off the overflow segment and apply the same final forms the
+        in-core program uses (isfinite-zero for min/max, sum/count for
+        mean) — bit-identical inputs ⇒ bit-identical outputs."""
+        g = self._num_groups
+        count = acc.get("count")
+        if count is not None and self._grouped:
+            count = count[:g]
+        out = {}
+        for agg in self._aggregates:
+            if agg.op == "count":
+                out[agg.name] = count
+                continue
+            a = acc[agg.name]
+            if self._grouped:
+                a = a[:g]
+            if agg.op in ("min", "max"):
+                out[agg.name] = jnp.where(jnp.isfinite(a), a, 0.0)
+            elif agg.op == "mean":
+                c = jnp.maximum(count, 1.0)
+                out[agg.name] = a / (c[:, None] if a.ndim > 1 else c)
+            else:
+                out[agg.name] = a
+        return out
+
+    # -- driver --------------------------------------------------------------
+    def run(self) -> Dict[str, jnp.ndarray]:
+        """Stream every chunk through the fold and finalize.
+
+        Double-buffered: compute on chunk *i* is dispatched (async) before
+        chunk *i+1*'s host→device transfer is issued, overlapping transfer
+        with compute.  Peak device residency is the shared dimension-side
+        state plus two chunks plus the accumulator.
+        """
+        acc = self._init_acc()
+        cur = self._put(0)
+        for i in range(self.n_chunks):
+            acc = self._step(acc, cur, self._shared)
+            cur = self._put(i + 1) if i + 1 < self.n_chunks else None
+        return dict(self._finalize(acc))
+
+    # -- introspection -------------------------------------------------------
+    def chunk_bytes(self) -> int:
+        """Approximate device bytes one chunk occupies."""
+        per_row = self._h_matrix.shape[1] * 4 + 1 + len(self._h_ptrs) * 5
+        if self._grouped:
+            per_row += 4
+        return int(self.chunk_rows * per_row)
+
+    def describe(self) -> str:
+        return (f"stream: {self.n_chunks} chunk(s) x {self.chunk_rows} rows "
+                f"(~{self.chunk_bytes() / 1e6:.1f} MB/chunk)")

@@ -1,0 +1,44 @@
+"""Shared test session hooks.
+
+Persistent XLA compilation cache
+--------------------------------
+Tier-1 wall-clock is dominated by XLA compiles (every jitted program, every
+bucket, every backend pair re-lowered per run).  When ``REPRO_JAX_CACHE_DIR``
+is set — CI exports it and persists the directory with ``actions/cache``
+keyed on (jax version, kernel-source hash) — compiled executables are
+reused across runs: the first run on a cold key pays full compile time and
+seeds the cache, later runs deserialize.  Unset (the default), behaviour is
+exactly as before: no cache, nothing written.
+
+The env-var gate keeps local runs hermetic and makes the CI key explicit;
+the version/kernel hash in the *cache key* (not here) guarantees staleness
+can only cost a re-compile, never serve a wrong executable (jax also keys
+entries by its own fingerprint internally).
+"""
+import os
+
+import jax
+
+
+def _init_compilation_cache() -> None:
+    cache_dir = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if not cache_dir:
+        return
+    os.makedirs(cache_dir, exist_ok=True)
+    try:
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.set_cache_dir(cache_dir)
+    except (ImportError, AttributeError):
+        # Older jax: the config knob predates set_cache_dir.
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # CPU executables are cacheable but jax skips them by default unless
+    # told the backend participates; harmless no-ops where unsupported.
+    for knob, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                      ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(knob, val)
+        except AttributeError:
+            pass
+
+
+_init_compilation_cache()
