@@ -21,7 +21,13 @@ single fluent entry point, ``repro.core.query.Session``:
      program, so a refresh touches each shared artifact once,
   7. go out-of-core: stream the fact axis chunk-at-a-time under a memory
      budget (bit-identical to in-core), tombstone-*delete* fact rows with
-     a zero-retrace refresh, and ``compact()`` the tombstones away.
+     a zero-retrace refresh, and ``compact()`` the tombstones away,
+  8. chain joins into *snowflake* dimensions — a ``.join`` whose FK lives
+     on an already-joined table hangs a sub-dimension off that arm; the
+     compiler collapses the chain offline, the planner explains its
+     prefuse-vs-materialize choice, and sub-dimension appends refresh the
+     collapsed chain in place (the subsystem is fuzzed nightly against a
+     float64 numpy oracle — ``scripts/fuzz_repro.py``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -289,3 +295,60 @@ note9 = plan9.refresh()
 assert "compaction" in note9
 print(f"compact → {note9}; "
       f"{int(np.asarray(catalog['orders'].valid_mask()).sum())} live rows ✓")
+
+# -- 10. Snowflake chains: multi-hop dimensions ------------------------------
+# Dimensions can have dimensions.  A chained ``.join`` whose FK lives on an
+# already-joined table (or an explicit ``via=[...]``) hangs sub-dimensions
+# off an arm, TPC-DS-style; the compiler collapses the chain offline into
+# one head-granularity virtual dimension (factored joins compose
+# associatively), prefuses it like any flat arm, and the planner explains
+# its prefuse-through vs materialize-at-hop choice per chain.
+snow = Catalog({
+    "countries": Table.from_columns("countries", {
+        "co_key": np.arange(4), "tax": np.float32([0., 1., 2., 1.]),
+        "co_zone": np.int64([0, 1, 1, 2])},
+        key_cols=("co_key", "co_zone"), capacity=8),
+    "cities": Table.from_columns("cities", {
+        "ci_key": np.arange(12), "ci_country": rng.integers(0, 4, 12),
+        "density": rng.integers(1, 5, 12).astype(np.float32)},
+        key_cols=("ci_key", "ci_country"), capacity=16),
+    "stores": Table.from_columns("stores", {
+        "st_key": np.arange(30), "st_city": rng.integers(0, 14, 30),
+        "sqm": rng.integers(1, 9, 30).astype(np.float32)},
+        key_cols=("st_key", "st_city"), capacity=40),
+    "visits": Table.from_columns("visits", {
+        "v_store": rng.integers(0, 32, 400),
+        "basket": rng.integers(1, 20, 400).astype(np.float32)},
+        key_cols=("v_store",)),
+})
+snow_sess = Session(snow)
+chain_model = LinearOperator(jnp.asarray(rng.normal(size=(3, 1)),
+                                         jnp.float32))
+q10 = (snow_sess.query("visits")
+       .join("stores", on=("v_store", "st_key"), features=["sqm"])
+       .join("cities", on=("st_city", "ci_key"),       # FK is on stores →
+             features=["density"])                     # chains, not a star
+       .join("countries", on=("ci_country", "co_key"), # chains off cities
+             features=["tax"], where=[("tax", "<=", 1.5)])
+       .predict(chain_model)
+       .group_by(("countries", "co_zone", 3), num_groups=3)  # 2 hops deep
+       .agg(basket="sum(basket)", score=("mean", PREDICTION), n="count"))
+assert len(q10.build().arms) == 1                      # one arm, two links
+plan10 = q10.compile()
+chain_note = [r for r in plan10.plan.reason.split("; ")
+              if r.startswith("chain[")][0]
+res10 = q10.run()
+print(f"snowflake ✓ {chain_note}")
+print(f"  per-zone baskets={np.asarray(res10['basket']).ravel()}")
+
+# Sub-dimension appends refresh the collapsed chain in place — cached plans
+# stay bit-identical to a cold rebuild, exactly like flat-arm appends.
+snow.append("cities", {"ci_key": np.arange(12, 14),
+                       "ci_country": np.int64([3, 0]),
+                       "density": np.float32([2.0, 4.0])})
+res10b = q10.run()                                     # refreshed in place
+for k, v in Session(snow).compile(q10.build()).run().items():
+    np.testing.assert_array_equal(np.asarray(res10b[k]), np.asarray(v))
+print("sub-dimension append → chain refresh ≡ cold rebuild ✓")
+# The whole subsystem is fuzzed nightly against a float64 numpy oracle:
+# replay any reported case with `python scripts/fuzz_repro.py --seed N`.

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Replay / drive the randomized snowflake fuzzer from the command line.
+
+Two modes:
+
+``--seed N``
+    Replay ONE generated case (the seed a CI failure printed) with the
+    full check matrix — fused/nonfused × segment/matmul against the
+    float64 oracle, plus the append→refresh-vs-cold-rebuild and serving
+    checks — and dump the generated schema/query so the failure is
+    inspectable.  Exits nonzero on any mismatch.
+
+``--cases K [--base-seed B]``
+    Run a fresh fuzz campaign of K cases (the CI smoke/deep-fuzz entry
+    point).  On mismatch, prints every failure plus the one-command
+    replay line and exits nonzero.
+
+Usage:
+    PYTHONPATH=src python scripts/fuzz_repro.py --seed 12345
+    PYTHONPATH=src python scripts/fuzz_repro.py --cases 200 --base-seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _describe(case) -> str:
+    q = case.query
+    lines = [f"seed {case.seed}: fact rows={int(case.tables[q.fact].nvalid)}"
+             f" preds={list(q.fact_preds)}"]
+    for a in q.arms:
+        lines.append(f"  arm {a.table} fk={a.fk_col} "
+                     f"feats={list(a.feature_cols)} preds={list(a.preds)}")
+        for lk in a.links:
+            lines.append(f"    link {lk.table} parent={lk.parent or '<prev>'}"
+                         f" fk={lk.fk_col} feats={list(lk.feature_cols)}"
+                         f" preds={list(lk.preds)}")
+    lines.append(f"  model={type(q.model).__name__ if q.model else None}"
+                 f" group_keys={[(g.table, g.col) for g in q.group_keys]}"
+                 f" aggs={[(a.op, a.name) for a in q.aggregates]}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--seed", type=int, help="replay one case by seed")
+    mode.add_argument("--cases", type=int, help="run a K-case campaign")
+    ap.add_argument("--base-seed", type=int, default=0,
+                    help="campaign base seed (case i uses base*10000+i)")
+    ap.add_argument("--full-every", type=int, default=4,
+                    help="full-matrix check every Nth campaign case")
+    args = ap.parse_args(argv)
+
+    from repro.core.query.workload import check_case, generate_case, run_fuzz
+
+    if args.seed is not None:
+        print(_describe(generate_case(args.seed)))
+        t0 = time.time()
+        bad = check_case(args.seed, full=True)
+        dt = time.time() - t0
+        if bad:
+            print(f"FAIL ({len(bad)} mismatches, {dt:.1f}s):")
+            for b in bad:
+                print(" ", b)
+            return 1
+        print(f"OK: seed {args.seed} bit-exact across the full matrix "
+              f"({dt:.1f}s)")
+        return 0
+
+    t0 = time.time()
+    rep = run_fuzz(args.cases, seed=args.base_seed,
+                   full_every=args.full_every)
+    print(f"{rep.summary()} ({time.time() - t0:.1f}s)")
+    for b in rep.failures:
+        print(" ", b)
+    return 0 if rep.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

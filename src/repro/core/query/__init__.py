@@ -131,6 +131,31 @@ past ``tombstone_fraction`` threshold)    referencing plan recompiles with
                                           ``compaction:<t> rewrote row ids``
 ========================================  ===================================
 
+Snowflake chains (multi-hop dimensions)
+---------------------------------------
+An arm generalizes past a star: :class:`ChainLink` hangs sub-dimensions off
+a dimension (or off an earlier link), TPC-DS-style, to depth 3 with fanout
+up to 3 per node.  Factored PK–FK joins compose associatively —
+``ptr_chain = take(link_ptr, head_ptr)`` — so the compiler collapses each
+chain *inner-out* into one head-granularity virtual dimension before
+prefusing it into the Eq. 1 partial form; the result is bit-exact with
+materializing the chain as a flat pre-joined dimension
+(:func:`~repro.core.query.snowflake.materialize_chains` is the executable
+statement of that identity).  Sub-dimension predicates fold into the
+chain's validity vector exactly like flat dimension predicates.  The
+planner costs prefuse-through vs materialize-at-hop-k per chain
+(``chain[head->hop->…]: …`` in the plan reason); pooled sessions share one
+collapsed chain per content key and refresh it once per sub-dimension
+append; serving prefuses chains offline so the request shape is unchanged.
+Build chains fluently — ``.join(..., via=[("nation", "c_nationkey",
+"n_pk", ["n_gdp"])])``, or just chain ``.join`` calls whose FK lives on an
+already-joined dimension — or hand ``ArmSpec(links=(...))`` to the IR.
+
+The subsystem is fuzzed: ``core.query.workload`` generates random
+snowflake schemas/queries/models and checks every lowering bit-exact
+against a float64 numpy oracle (``python scripts/fuzz_repro.py --seed N``
+replays any failure deterministically).
+
 Out-of-core execution (fact streaming)
 --------------------------------------
 When the fact table's working set exceeds device memory — or the caller
@@ -214,9 +239,12 @@ the runtime.
 from ..laq.catalog import (Catalog, CatalogHistoryError,
                            CatalogReadOnlyError, TableDelta, changed_spans)
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
-                 GroupKey, PredictiveQuery, eval_value)
+                 ChainLink, GroupKey, PredictiveQuery, eval_value)
 from .compile import CompiledQuery, compile_query, query_from_star
 from .explain import ExplainReport
+from .snowflake import (CollapsedChain, chain_tables, materialize_chains,
+                        resolve_chain, virtual_name)
+from .workload import FuzzCase, FuzzReport, generate_case, np_oracle, run_fuzz
 from .multiquery import (ArtifactPool, arm_keys, artifact_bytes,
                          make_stacked_runner, stack_key, stack_states)
 from .planner import (AggDecision, QueryPlan, plan_aggregation,
@@ -237,7 +265,10 @@ from .sharding import (ShardedArm, ShardedPrefusedPartials,
 
 __all__ = [
     "AGG_OPS", "COUNT_STAR", "PREDICTION", "Aggregate", "ArmSpec",
-    "GroupKey", "PredictiveQuery",
+    "ChainLink", "GroupKey", "PredictiveQuery",
+    "CollapsedChain", "chain_tables", "materialize_chains", "resolve_chain",
+    "virtual_name",
+    "FuzzCase", "FuzzReport", "generate_case", "np_oracle", "run_fuzz",
     "Catalog", "CatalogHistoryError", "CatalogReadOnlyError", "TableDelta",
     "changed_spans",
     "eval_value", "CompiledQuery", "compile_query", "query_from_star",

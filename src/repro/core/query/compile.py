@@ -58,8 +58,11 @@ from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
 from .multiquery import holds_tracers
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
-                      plan_query, plan_streaming,
+                      plan_chain_materialization, plan_query, plan_streaming,
                       resolve_mesh_serve_backend)
+from .snowflake import (CollapsedChain, chain_dirty_heads, chain_tables,
+                        flat_arm, link_parents, participating_tables,
+                        refresh_chain, resolve_chain, virtual_name)
 from .sharding import (make_predict_rows_forward, predict_rows_state,
                        shard_prefused_partials)
 from .streaming import StreamExecutor, assert_pool_dimension_side
@@ -95,6 +98,11 @@ class CompiledQuery:
     versions: Dict[str, int] = dataclasses.field(default_factory=dict)
     _indices: Tuple[PKIndex, ...] = ()   # per-arm PK indices (extendable)
     _source: Optional[PredictiveQuery] = None  # q as originally passed
+    # Per-arm collapsed snowflake chains (None for flat arms; empty tuple
+    # for all-flat queries).  ``query`` holds the *flattened* arms — the
+    # chains carry the real head/link tables and the composed pointers the
+    # refresh and group-by paths need.
+    _chains: Tuple[Optional[CollapsedChain], ...] = ()
     _opts: Dict = dataclasses.field(default_factory=dict)
     _sp: Optional[object] = None         # ShardedPrefusedPartials (mesh path)
     # Bounded refresh-decision trail appended to plan.reason: a long-lived
@@ -191,8 +199,7 @@ class CompiledQuery:
 
     # -- incremental maintenance --------------------------------------------
     def _participating(self) -> Tuple[str, ...]:
-        names = {self.query.fact} | {a.table for a in self.query.arms}
-        return tuple(sorted(names))
+        return participating_tables(self._source or self.query)
 
     def refresh(self) -> str:
         """Apply pending catalog deltas to the compiled artifacts, in place.
@@ -273,18 +280,35 @@ class CompiledQuery:
         fspan, _, _, _ = (changed_spans(changed[q.fact])
                           if q.fact in changed else (None, (), False, ()))
 
+        # Re-collapse chains whose real tables changed (cached hops on
+        # unchanged tables are reused); the per-arm pointer work below then
+        # runs against the *head* table — the fact joins the head's PK, at
+        # head granularity, chain or no chain.
+        chains = (list(self._chains) if self._chains
+                  else [None] * len(q.arms))
+        stale = set(changed)
+        for j, ch in enumerate(chains):
+            if ch is not None and stale & set(chain_tables(ch.arm)):
+                chains[j] = refresh_chain(cat, ch, stale)
+        overlay = cat
+        if any(c is not None for c in chains):
+            overlay = {**cat, **{c.table.name: c.table
+                                 for c in chains if c is not None}}
+
         ptrs = [np.array(p) for p in self._state["ptrs"]]
         founds = [np.array(f) for f in self._state["founds"]]
         indices = list(self._indices)
         dirty_rows = []
         for j, arm in enumerate(q.arms):
-            dim = cat[arm.table]
+            ch = chains[j]
+            head = ch.arm.table if ch is not None else arm.table
+            dim = cat[head]
             # Deleted ids need no pointer/index/prefuse work: a tombstone
             # keeps the row's slot, key and data, so only the validity fold
             # (recomputed below by _assemble_star) changes.
             span, dirty, _, _ = (
-                changed_spans(changed[arm.table])
-                if arm.table in changed else (None, (), False, ()))
+                changed_spans(changed[head])
+                if head in changed else (None, (), False, ()))
             ids = set(dirty)
             if span is not None:
                 lo, hi = span
@@ -309,6 +333,23 @@ class CompiledQuery:
                 fj = indices[j].probe(fact.key(arm.fk_col)[flo:fhi])
                 ptrs[j][flo:fhi] = np.asarray(fj.ptr)
                 founds[j][flo:fhi] = np.asarray(fj.found)
+            if ch is not None:
+                # Sub-dimension deltas dirty the head rows whose composed
+                # pointers resolve into the touched link rows — those
+                # virtual-matrix rows (and only those) differ from the old
+                # collapse, so the partial scatter stays bit-exact vs cold.
+                touched = {}
+                for t in chain_tables(ch.arm):
+                    if t in changed:
+                        tspan, tdirty, _, _ = changed_spans(changed[t])
+                        tids = set(tdirty)
+                        if tspan is not None:
+                            tids.update(range(tspan[0], tspan[1]))
+                        if tids:
+                            touched[t] = np.asarray(sorted(tids), np.int64)
+                dh = chain_dirty_heads(ch, touched)
+                if dh is not None:
+                    ids.update(int(i) for i in dh)
             dirty_rows.append(
                 np.asarray(sorted(ids), np.int32) if ids else None)
 
@@ -318,13 +359,17 @@ class CompiledQuery:
         # refreshed validity is bitwise the cold rebuild's by construction.
         joins = tuple(FactoredJoin(jnp.asarray(p), jnp.asarray(f))
                       for p, f in zip(ptrs, founds))
-        star, valid = _assemble_star(cat, q, joins)
+        dmasks = (tuple(c.dmask if c is not None else None for c in chains)
+                  if any(c is not None for c in chains) else None)
+        star, valid = _assemble_star(overlay, q, joins, dmasks=dmasks)
 
         prefused = self.prefused
         if prefused is not None:
             prefused = extend_prefused(prefused, star.dims, q.model,
                                        dirty_rows)
         self._indices = tuple(indices)
+        self._chains = tuple(chains) if any(
+            c is not None for c in chains) else ()
         return self._rebind(changed, star, valid, prefused,
                             "shapes kept, jit cache reused")
 
@@ -342,13 +387,28 @@ class CompiledQuery:
         q = self.query
         cat = self.catalog
         pool = self._pool
+        chains = (list(self._chains) if self._chains
+                  else [None] * len(q.arms))
         indices, joins, dmasks = [], [], []
-        for (ikey, jkey, mkey) in self._pool_refs["arms"]:
+        for j, (ikey, jkey, mkey) in enumerate(self._pool_refs["arms"]):
             indices.append(pool.get(ikey))
             ptr, found = pool.get(jkey)
             joins.append(FactoredJoin(ptr, found))
-            dmasks.append(pool.get(mkey) if mkey is not None else None)
-        star, valid = _assemble_star(cat, q, tuple(joins),
+            mval = pool.get(mkey) if mkey is not None else None
+            if isinstance(mval, CollapsedChain):
+                # Chained arm: the mask slot holds the pooled collapsed
+                # chain — the pool re-collapsed it at most once for every
+                # plan sharing it; the dmask and virtual table fall out.
+                chains[j] = mval
+                mval = mval.dmask
+            dmasks.append(mval)
+        overlay = cat
+        if any(c is not None for c in chains):
+            overlay = {**cat, **{c.table.name: c.table
+                                 for c in chains if c is not None}}
+        self._chains = tuple(chains) if any(
+            c is not None for c in chains) else ()
+        star, valid = _assemble_star(overlay, q, tuple(joins),
                                      dmasks=tuple(dmasks))
         prefused = self.prefused
         pkeys = self._pool_refs.get("partials", ())
@@ -365,7 +425,7 @@ class CompiledQuery:
         cat = self.catalog
         codes = uniq = gid = None
         if q.group_keys:
-            cols, bounds = _group_columns(cat, q, star)
+            cols, bounds = _group_columns(cat, q, star, self._chains)
             codes = composite_code(cols, bounds, valid)
             try:
                 uniq, gid = groupby_codes(codes, q.num_groups)
@@ -456,7 +516,7 @@ def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
 
 
 def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery,
-                  pool=None
+                  pool=None, chains: Tuple = (), chain_keys: Tuple = ()
                   ) -> Tuple[StarJoin, jnp.ndarray, Tuple[PKIndex, ...],
                              Tuple[tuple, ...]]:
     """Joins + combined validity with every selection mask folded in.
@@ -467,36 +527,63 @@ def _resolve_star(catalog: Mapping[str, Table], q: PredictiveQuery,
     :class:`~.multiquery.ArtifactPool` (computed once per distinct arm
     across all plans) and the per-arm reference keys are returned as the
     fourth element (empty tuple when unpooled).
+
+    Chained arms (``chains[j]`` not None) index and probe against the
+    *real* head table name, so two queries joining the same head through
+    different chains still share one PK index and fact probe; their dmask
+    is the chain's folded validity (the pool reference in the mask slot
+    is the chain entry's key).
     """
     fact = catalog[q.fact]
     joins, indices, arm_refs, dmasks = [], [], [], []
-    for arm in q.arms:
+    any_chain = any(c is not None for c in chains)
+    for j, arm in enumerate(q.arms):
+        ch = chains[j] if j < len(chains) else None
+        head = ch.arm.table if ch is not None else arm.table
         if pool is not None:
-            idx, ikey = pool.acquire_pkindex(arm.table, arm.pk_col)
+            idx, ikey = pool.acquire_pkindex(head, arm.pk_col)
             (ptr, found), jkey = pool.acquire_join(
-                q.fact, arm.fk_col, arm.table, arm.pk_col)
+                q.fact, arm.fk_col, head, arm.pk_col)
             fj = FactoredJoin(ptr, found)
-            dmask = mkey = None
-            if arm.preds:
+            if ch is not None:
+                dmask, mkey = ch.dmask, chain_keys[j]
+            elif arm.preds:
                 dmask, mkey = pool.acquire_dmask(arm.table, arm.preds)
+            else:
+                dmask = mkey = None
             arm_refs.append((ikey, jkey, mkey))
             dmasks.append(dmask)
         else:
-            idx = pk_index(catalog[arm.table].key(arm.pk_col))
+            idx = pk_index(catalog[head].key(arm.pk_col))
             fj = idx.probe(fact.key(arm.fk_col))
-            dmasks.append(None)
+            dmasks.append(ch.dmask if ch is not None else None)
         joins.append(fj)
         indices.append(idx)
     star, valid = _assemble_star(
         catalog, q, tuple(joins),
-        dmasks=tuple(dmasks) if pool is not None else None)
+        dmasks=(tuple(dmasks) if pool is not None or any_chain else None))
     return star, valid, tuple(indices), tuple(arm_refs)
 
 
 def _group_columns(catalog: Mapping[str, Table], q: PredictiveQuery,
-                   star: StarJoin):
-    """Exact int32 group-key columns, gathered through the arm pointers."""
-    arm_ptr = {a.table: fj.ptr for a, fj in zip(q.arms, star.joins)}
+                   star: StarJoin, chains: Tuple = ()):
+    """Exact int32 group-key columns, gathered through the arm pointers.
+
+    Chained arms register their *real* head name plus every link table:
+    a sub-dimension group key composes the fact→head pointers with the
+    chain's head→link pointers (associativity again — the composition is
+    the flat fact→link join's pointer array).  Misses gather row 0, which
+    is masked by ``composite_code``'s validity fold like any flat miss.
+    """
+    arm_ptr = {}
+    for j, (a, fj) in enumerate(zip(q.arms, star.joins)):
+        ch = chains[j] if j < len(chains) else None
+        if ch is None:
+            arm_ptr[a.table] = fj.ptr
+        else:
+            arm_ptr[ch.arm.table] = fj.ptr
+            for name, lptr, _found in ch.link_ptrs:
+                arm_ptr[name] = jnp.take(lptr, fj.ptr)
     cols, bounds = [], []
     for gk in q.group_keys:
         if gk.table == "fact":
@@ -604,6 +691,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   batches_per_update: float = 1000.0,
                   memory_budget_bytes: Optional[int] = None,
                   stream_chunk_rows=None,
+                  chain_strategy: str = "auto",
                   interpret: bool = False, mesh=None,
                   shard_axis: str = "model",
                   shard_threshold_bytes: Optional[int] = None,
@@ -661,7 +749,9 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
                          (join_backend, ("auto", "gather", "matmul")),
                          (agg_backend, ("auto", "segment", "matmul")),
-                         (serve_backend, ("auto", "jnp", "pallas"))):
+                         (serve_backend, ("auto", "jnp", "pallas")),
+                         (chain_strategy, ("auto", "through",
+                                           "materialize"))):
         if arg not in allowed:
             raise ValueError(f"backend {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
@@ -676,6 +766,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     cat0 = Catalog.wrap(catalog)
     for arm in q.arms:   # teach the catalog the join contract (PK columns)
         cat0.note_unique(arm.table, arm.pk_col)
+        for lk in arm.links:
+            cat0.note_unique(lk.table, lk.pk_col)
     source_q = q
     opts = dict(backend=backend, join_backend=join_backend,
                 agg_backend=agg_backend, serve_backend=serve_backend,
@@ -683,6 +775,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                 batches_per_update=batches_per_update,
                 memory_budget_bytes=memory_budget_bytes,
                 stream_chunk_rows=stream_chunk_rows,
+                chain_strategy=chain_strategy,
                 interpret=interpret, mesh=mesh, shard_axis=shard_axis,
                 shard_threshold_bytes=shard_threshold_bytes, pool=pool)
     # Pool sharing engages only on the plain single-device path against the
@@ -701,8 +794,39 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                       capacity=select_capacity)
         catalog = {**catalog, q.fact: fact}
         q = dataclasses.replace(q, fact_preds=())
+    # Snowflake chains collapse offline to head-granularity virtual
+    # dimensions (factored joins compose associatively — see
+    # core.query.snowflake), overlaid on the catalog like the
+    # select-compacted fact; the flattened query then lowers through the
+    # unchanged star pipeline, bit-exact with materializing each chain.
+    chains: Tuple = ()
+    chain_keys: Tuple = ()
+    chain_notes = []
+    if any(a.links for a in q.arms):
+        ccs, ckeys = [], []
+        for arm in q.arms:
+            if not arm.links:
+                ccs.append(None)
+                ckeys.append(None)
+                continue
+            k, note = plan_chain_materialization(
+                virtual_name(arm),
+                [catalog[p].capacity for p in link_parents(arm)],
+                strategy=chain_strategy)
+            chain_notes.append(note)
+            if use_pool:
+                cc, ckey = pool.acquire_chain(arm, keep_hops=k)
+            else:
+                cc, ckey = resolve_chain(catalog, arm, keep_hops=k), None
+            ccs.append(cc)
+            ckeys.append(ckey)
+        chains, chain_keys = tuple(ccs), tuple(ckeys)
+        catalog = {**catalog, **{c.table.name: c.table
+                                 for c in chains if c is not None}}
+        q = dataclasses.replace(q, arms=tuple(flat_arm(a) for a in q.arms))
     star, valid, indices, arm_refs = _resolve_star(
-        catalog, q, pool=pool if use_pool else None)
+        catalog, q, pool=pool if use_pool else None, chains=chains,
+        chain_keys=chain_keys)
     fact = star.fact
     rows = jnp.sum(valid.astype(jnp.int32))
     # Offline compilation measures selectivity from the data; when a caller
@@ -720,7 +844,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     codes = None
     n_live = None
     if q.group_keys:
-        cols, bounds = _group_columns(catalog, q, star)
+        cols, bounds = _group_columns(catalog, q, star, chains)
         codes = composite_code(cols, bounds, valid)
         if q.num_groups == "auto":
             n_live = auto_num_groups(codes)
@@ -747,6 +871,9 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                       batches_per_update=batches_per_update,
                       memory_budget_bytes=memory_budget_bytes,
                       sharing=sharing)
+    if chain_notes:
+        plan = dataclasses.replace(
+            plan, reason="; ".join([plan.reason, *chain_notes]))
     backend = plan.backend if backend == "auto" else backend
     join_backend = plan.join_backend if join_backend == "auto" else join_backend
     agg_backend = ((plan.agg.backend if plan.agg else "segment")
@@ -793,7 +920,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                     f"{bad!r}: chunked execution folds partial aggregates "
                     "through the fused gather/segment program (matmul "
                     "lowerings are not bitwise chunk-stable)")
-        if isinstance(rows, jax.core.Tracer) or holds_tracers(cat0, q):
+        if isinstance(rows, jax.core.Tracer) or holds_tracers(cat0,
+                                                              source_q):
             raise ValueError(
                 "streaming is an offline host-side driver: it cannot run "
                 "under an outer trace (compile without stream_chunk_rows "
@@ -813,8 +941,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     partial_keys = ()
     if q.model is not None and backend == "fused":
         if use_pool:
-            parts, h, partial_keys = pool.acquire_partials(star.dims,
-                                                           q.model)
+            parts, h, partial_keys = pool.acquire_partials(
+                star.dims, q.model, chains=chains)
             prefused = PrefusedStar(parts, h)
         else:
             prefused = prefuse(star, q.model)
@@ -956,8 +1084,9 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         _rows=rows, _run=run_fn, _predict=predict_jit,
         _predict_rows=predict_rows_jit, _state=state, catalog=cat0,
         versions={n: cat0.version(n)
-                  for n in sorted({q.fact} | {a.table for a in q.arms})},
+                  for n in participating_tables(source_q)},
         _indices=indices, _source=source_q, _opts=opts, _sp=sp,
+        _chains=chains,
         _pool=pool if use_pool else None,
         _pool_refs=({"arms": arm_refs, "partials": tuple(partial_keys)}
                     if use_pool else {}),

@@ -48,6 +48,27 @@ _BINOPS = {
 
 
 @dataclasses.dataclass(frozen=True)
+class ChainLink:
+    """One snowflake hop: ``<parent>.fk_col = <table>.pk_col``.
+
+    A link hangs a sub-dimension off an arm's dimension (or off an earlier
+    link), TPC-DS-style.  ``fk_col`` is a key column on the *parent* table;
+    ``parent`` names that table explicitly (tree-shaped snowflakes) or is
+    ``None``, meaning the previous hop in declaration order (the arm's head
+    dimension for the first link).  ``preds`` are sub-dimension predicates:
+    they fold into the chain's validity vector exactly like flat dimension
+    predicates — evaluated once offline, composed with the factored join.
+    """
+
+    table: str                            # catalog name of the sub-dimension
+    fk_col: str                           # FK column on the parent table
+    pk_col: str                           # PK column on this table
+    feature_cols: Tuple[str, ...] = ()
+    preds: Tuple[Pred, ...] = ()
+    parent: Optional[str] = None          # None → previous hop / head dim
+
+
+@dataclasses.dataclass(frozen=True)
 class ArmSpec:
     """One arm of the star: ``fact.fk_col = <table>.pk_col`` (paper §3.1).
 
@@ -55,6 +76,11 @@ class ArmSpec:
     evaluated once on the dimension table and folded into the factored
     matching matrix's validity (selection-as-filter-vector, §2.2, composed
     with the join instead of multiplied through).
+
+    ``links`` generalizes the arm to a multi-hop snowflake chain: factored
+    joins compose associatively, so the compiler collapses the chain to one
+    head-granularity virtual dimension (bit-exact with materializing the
+    chain as a flat join) before prefusing it into the Eq. 1 partial form.
     """
 
     table: str                            # catalog name of the dimension
@@ -62,6 +88,12 @@ class ArmSpec:
     pk_col: str
     feature_cols: Tuple[str, ...] = ()
     preds: Tuple[Pred, ...] = ()
+    links: Tuple[ChainLink, ...] = ()
+
+    @property
+    def feature_width(self) -> int:
+        return (len(self.feature_cols)
+                + sum(len(lk.feature_cols) for lk in self.links))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,9 +145,35 @@ class PredictiveQuery:
     aggregates: Tuple[Aggregate, ...] = (Aggregate("lo_revenue"),)
     num_groups: Union[int, str] = 8192
 
+    def __post_init__(self):
+        # A duplicate table alias would silently shadow in every
+        # name-keyed structure downstream (catalog overlays, group-key
+        # pointer maps, serving version maps) — reject it here, once.
+        seen = set()
+        for a in self.arms:
+            names = [a.table] + [lk.table for lk in a.links]
+            for n in names:
+                if n in seen:
+                    raise ValueError(
+                        f"duplicate table alias {n!r} across the arms/chains "
+                        f"of query on fact {self.fact!r}: each dimension or "
+                        "sub-dimension table may join at most once")
+                seen.add(n)
+            known = {a.table}
+            for lk in a.links:
+                parent = lk.parent
+                if parent is not None and parent not in known:
+                    raise ValueError(
+                        f"chain link {lk.table!r} on arm {a.table!r} names "
+                        f"parent {parent!r}, which is not the arm's head "
+                        "dimension or an earlier link (links must be "
+                        "declared parent-first; self-referential chains are "
+                        "invalid)")
+                known.add(lk.table)
+
     @property
     def feature_width(self) -> int:
-        return sum(len(a.feature_cols) for a in self.arms)
+        return sum(a.feature_width for a in self.arms)
 
 
 def eval_value(fact: Table, expr, *, query: Optional[str] = None

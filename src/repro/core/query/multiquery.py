@@ -48,7 +48,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +62,10 @@ from ..laq.join import PKIndex, pk_index
 from ..laq.projection import mapping_matrix
 from ..laq.star import DimSpec
 from ..laq.table import PAD_KEY, Table
-from .ir import Model, PredictiveQuery
+from .ir import ArmSpec, Model, PredictiveQuery
+from .snowflake import (CollapsedChain, chain_dirty_heads, chain_key,
+                        chain_tables, participating_tables, qualified_cols,
+                        refresh_chain, resolve_chain, virtual_name)
 
 
 # --------------------------------------------------------------------------
@@ -147,17 +151,27 @@ def arm_keys(q: PredictiveQuery) -> Tuple[Tuple[tuple, ...], ...]:
         off = 0
         slices = []
         for arm in q.arms:
-            slices.append((off, off + len(arm.feature_cols)))
-            off += len(arm.feature_cols)
+            slices.append((off, off + arm.feature_width))
+            off += arm.feature_width
     out = []
     for arm, (lo, hi) in zip(q.arms, slices):
+        # Chained arms index/probe against the real head table (shared with
+        # flat arms over the same head); the chain collapse and its partial
+        # are keyed by the full chain content.
         keys = [pkindex_key(arm.table, arm.pk_col),
                 join_key(q.fact, arm.fk_col, arm.table, arm.pk_col)]
-        if arm.preds:
+        if arm.links:
+            keys.append(chain_key(arm))
+        elif arm.preds:
             keys.append(dmask_key(arm.table, arm.preds))
         if q.model is not None:
-            keys.append(partial_key(arm.table, arm.feature_cols, q.model,
-                                    lo, hi))
+            if arm.links:
+                keys.append(partial_key(virtual_name(arm),
+                                        qualified_cols(arm), q.model,
+                                        lo, hi) + (chain_key(arm),))
+            else:
+                keys.append(partial_key(arm.table, arm.feature_cols,
+                                        q.model, lo, hi))
         out.append(tuple(keys))
     return tuple(out)
 
@@ -171,7 +185,7 @@ def holds_tracers(catalog, q: PredictiveQuery) -> bool:
     bypass the pool entirely.
     """
     tracer = jax.core.Tracer
-    for name in {q.fact, *(a.table for a in q.arms)}:
+    for name in participating_tables(q):
         t = catalog[name]
         if isinstance(t.matrix, tracer) or isinstance(t.nvalid, tracer):
             return True
@@ -228,6 +242,14 @@ class _PoolEntry:
 def _entry_arrays(value) -> List:
     if isinstance(value, PKIndex):
         return [value.sorted_pk, value.order]
+    if isinstance(value, CollapsedChain):
+        arrs = [value.table.matrix, value.dmask]
+        for _name, ptr, found in value.link_ptrs:
+            arrs.extend([ptr, found])
+        for h in value.hops:
+            if h is not None:
+                arrs.extend([h.ptr, h.found])
+        return arrs
     if isinstance(value, tuple):
         return [v for v in value if v is not None]
     return [value] if value is not None else []
@@ -403,8 +425,27 @@ class ArtifactPool:
         entry.refcount += 1
         return entry.value, entry.key
 
+    # -- acquire: collapsed snowflake chains ----------------------------------
+    def acquire_chain(self, arm: ArmSpec, *, keep_hops: int = 0
+                      ) -> Tuple[CollapsedChain, tuple]:
+        """The collapsed chain of one multi-hop arm (see ``snowflake``).
+
+        Keyed by the full chain content (head, hop keys, features, preds),
+        gated on every chain table's version.  ``keep_hops`` is a
+        refresh-speed hint only — it never changes the collapsed values —
+        so plans that disagree on it still share one entry (first build
+        wins).
+        """
+        entry = self._fresh(
+            chain_key(arm), "chain", chain_tables(arm),
+            lambda: resolve_chain(self.catalog, arm, keep_hops=keep_hops),
+            {"arm": arm, "keep_hops": keep_hops})
+        entry.refcount += 1
+        return entry.value, entry.key
+
     # -- acquire: prefused partials (one prefuse_dims per miss set) ----------
-    def acquire_partials(self, dims: Sequence[DimSpec], model: Model
+    def acquire_partials(self, dims: Sequence[DimSpec], model: Model,
+                         chains: Sequence[Optional[CollapsedChain]] = ()
                          ) -> Tuple[Tuple[jnp.ndarray, ...],
                                     Optional[jnp.ndarray],
                                     Tuple[tuple, ...]]:
@@ -414,23 +455,39 @@ class ArtifactPool:
         list — exactly the computation the unpooled compile runs, so hits
         handed back from the pool are bit-identical to what that call
         would have produced for them.
+
+        ``chains`` marks which dims are collapsed snowflake chains (parallel
+        to ``dims``; None entries are flat).  A chained partial's key
+        carries the chain's content key — the virtual table *name* alone
+        would alias chains over the same tables with different hop keys —
+        and its refresh gates on every chain table.
         """
+        chains = tuple(chains) + (None,) * (len(dims) - len(chains))
         slices = _feature_slices(dims)
-        keys = tuple(partial_key(d.dim.name, d.feature_cols, model, lo, hi)
-                     for d, (lo, hi) in zip(dims, slices))
-        arm_specs = tuple((d.dim.name, d.fk_col, d.pk_col,
-                           tuple(d.feature_cols)) for d in dims)
+        keys, arm_specs = [], []
+        for d, (lo, hi), cc in zip(dims, slices, chains):
+            k = partial_key(d.dim.name, d.feature_cols, model, lo, hi)
+            if cc is not None:
+                k = k + (chain_key(cc.arm),)
+                arm_specs.append(cc.arm)
+            else:
+                arm_specs.append((d.dim.name, d.fk_col, d.pk_col,
+                                  tuple(d.feature_cols)))
+            keys.append(k)
+        keys = tuple(keys)
+        arm_specs = tuple(arm_specs)
         pre = (prefuse_dims(dims, model)
                if any(k not in self._entries for k in keys) else None)
         parts = []
-        for j, (d, key) in enumerate(zip(dims, keys)):
+        for j, (d, key, cc) in enumerate(zip(dims, keys, chains)):
             entry = self._entries.get(key)
             if entry is None:
                 self.misses += 1
+                gates = (chain_tables(cc.arm) if cc is not None
+                         else (d.dim.name,))
                 entry = _PoolEntry(
                     key=key, kind="partial", value=pre.partials[j],
-                    versions={d.dim.name:
-                              self.catalog.version(d.dim.name)},
+                    versions={n: self.catalog.version(n) for n in gates},
                     spec={"arms": arm_specs, "j": j, "model": model})
                 self._entries[key] = entry
             else:
@@ -469,6 +526,24 @@ class ArtifactPool:
         if span is not None:
             ids.update(range(span[0], span[1]))
         return np.asarray(sorted(ids), np.int32) if ids else None
+
+    @staticmethod
+    def _pad_ids(ids: np.ndarray) -> np.ndarray:
+        """Pad a dirty-row id list up to a power-of-two length.
+
+        Scatter refreshes (``value.at[ids].set(rows)``) specialize the
+        jitted update on ``len(ids)``; successive appends rarely dirty the
+        exact same number of rows, so every refresh would recompile.
+        Padding repeats ``ids[0]`` — duplicate scatter indices carry
+        *identical* row values, so the update stays deterministic and
+        bit-exact while the shape lands in one of log₂ buckets.
+        """
+        n = len(ids)
+        cap = 1 << max(3, int(np.ceil(np.log2(max(n, 1)))))
+        if n == cap:
+            return ids
+        return np.concatenate(
+            [ids, np.full(cap - n, ids[0], ids.dtype)])
 
     def _rebuild_pkindex(self, entry):
         s = entry.spec
@@ -530,6 +605,7 @@ class ArtifactPool:
         s = entry.spec
         ids = self._touched_ids(deltas[s["table"]])
         if ids is not None:
+            ids = self._pad_ids(ids)
             entry.value = entry.value.at[jnp.asarray(ids)].set(
                 _mask_rows(self.catalog[s["table"]], s["preds"], ids))
 
@@ -542,14 +618,34 @@ class ArtifactPool:
         s = entry.spec
         ids = self._touched_ids(deltas[s["table"]])
         if ids is not None:
+            ids = self._pad_ids(ids)
             dim = self.catalog[s["table"]]
             m = mapping_matrix(dim.columns, s["feature_cols"])
             rows = jnp.take(dim.matrix, jnp.asarray(ids), axis=0) @ m
             entry.value = entry.value.at[jnp.asarray(ids)].set(rows)
 
-    def _partial_dims(self, entry) -> Tuple[DimSpec, ...]:
-        return tuple(DimSpec(self.catalog[t], fk, pk, fcols)
-                     for (t, fk, pk, fcols) in entry.spec["arms"])
+    def _rebuild_chain(self, entry):
+        s = entry.spec
+        return resolve_chain(self.catalog, s["arm"],
+                             keep_hops=s["keep_hops"])
+
+    def _refresh_chain(self, entry, deltas):
+        entry.value = refresh_chain(self.catalog, entry.value, set(deltas))
+
+    def _partial_dims(self, entry, chains: Optional[Mapping[
+            int, CollapsedChain]] = None) -> Tuple[DimSpec, ...]:
+        # Chained arm specs are stored as the ArmSpec itself; they resolve
+        # through the (possibly freshly re-collapsed) chain's virtual table.
+        dims = []
+        for i, a in enumerate(entry.spec["arms"]):
+            if isinstance(a, ArmSpec):
+                cc = (chains or {}).get(i) or resolve_chain(self.catalog, a)
+                dims.append(DimSpec(cc.table, a.fk_col, a.pk_col,
+                                    tuple(cc.table.columns)))
+            else:
+                t, fk, pk, fcols = a
+                dims.append(DimSpec(self.catalog[t], fk, pk, fcols))
+        return tuple(dims)
 
     def _rebuild_partial(self, entry):
         dims = self._partial_dims(entry)
@@ -558,10 +654,25 @@ class ArtifactPool:
 
     def _refresh_partial(self, entry, deltas):
         s = entry.spec
-        dims = self._partial_dims(entry)
-        ids = self._touched_ids(deltas[dims[s["j"]].dim.name])
+        a = s["arms"][s["j"]]
+        if isinstance(a, ArmSpec):
+            # Chained partial: re-collapse (cheap dimension-sized gathers),
+            # then scatter-refresh exactly the head rows whose virtual
+            # matrix rows may differ — the same dirty set the unpooled
+            # CompiledQuery._refresh_delta computes.
+            cc = resolve_chain(self.catalog, a)
+            dims = self._partial_dims(entry, chains={s["j"]: cc})
+            touched = {}
+            for name, d in deltas.items():
+                t = self._touched_ids(d)
+                if t is not None:
+                    touched[name] = t
+            ids = chain_dirty_heads(cc, touched)
+        else:
+            dims = self._partial_dims(entry)
+            ids = self._touched_ids(deltas[dims[s["j"]].dim.name])
         if ids is not None:
-            ids = jnp.asarray(ids, jnp.int32)
+            ids = jnp.asarray(self._pad_ids(np.asarray(ids, np.int32)))
             entry.value = entry.value.at[ids].set(
                 prefuse_rows(dims, s["model"], s["j"], ids))
 

@@ -49,6 +49,11 @@ PLANNER_THRESHOLDS = {
         "DENSE_JOIN_ELEMS": 1 << 14,
         "MXU_SEGMENT_ADVANTAGE": 16.0,
         "SHARD_PARTIAL_BYTES": 1 << 20,
+        # Snowflake chains: total bytes of cached hop probes (int32 ptr +
+        # bool found per parent row) a chain may pin to speed refresh.
+        # Hops are cached parent-first until the budget runs out —
+        # materialize-at-hop-k; a zero/overflowing budget prefuses through.
+        "CHAIN_CACHE_BYTES": 1 << 22,
     },
     # "tpu": {...}  ← ROADMAP "Planner calibration": re-measure there and
     # fill this row in; every decision point below reads through
@@ -296,6 +301,46 @@ def plan_streaming(requested, fact_rows: int, fact_row_bytes: int,
     n_chunks = -(-int(fact_rows) // chunk) if fact_rows else 1
     return chunk, (f"stream={chunk} rows/chunk x {n_chunks} ({why}; fused "
                    "segment fold, dimension-side artifacts shared)")
+
+
+def plan_chain_materialization(chain_name: str, parent_rows: Sequence[int],
+                               *, strategy: str = "auto",
+                               platform: Optional[str] = None
+                               ) -> Tuple[int, str]:
+    """Where along a snowflake chain to materialize; ``(k, reason)``.
+
+    Collapsing a chain probes each hop at its parent's granularity.  The
+    probes can be *cached* on the collapsed chain (materialize-at-hop-k:
+    the first ``k`` hops keep their ``FactoredJoin``), so a refresh after
+    an append re-probes only hops whose tables changed — at the cost of
+    ``parent_rows[i] × 5`` resident bytes per cached hop (int32 ptr +
+    bool found).  Hops are admitted parent-first while the cumulative
+    cost fits ``CHAIN_CACHE_BYTES``; ``strategy`` overrides: ``"through"``
+    caches nothing (prefuse-through), ``"materialize"`` caches every hop.
+    """
+    n = len(parent_rows)
+    costs = [int(r) * 5 for r in parent_rows]
+    if strategy == "through":
+        return 0, f"chain[{chain_name}]: prefuse-through (caller pinned)"
+    if strategy == "materialize":
+        return n, (f"chain[{chain_name}]: materialize@{n}/{n} "
+                   f"(caller pinned; hop cache {sum(costs)}B)")
+    if strategy != "auto":
+        raise ValueError(f"chain_strategy {strategy!r} not one of "
+                         "('auto', 'through', 'materialize')")
+    budget = planner_threshold("CHAIN_CACHE_BYTES", platform)
+    k, spent = 0, 0
+    for c in costs:
+        if spent + c > budget:
+            break
+        spent += c
+        k += 1
+    if k == 0:
+        return 0, (f"chain[{chain_name}]: prefuse-through (hop cache "
+                   f"{costs[0] if costs else 0}B exceeds budget {budget}B)")
+    return k, (f"chain[{chain_name}]: materialize@{k}/{n} (hop cache "
+               f"{spent}B fits budget {budget}B; refresh reuses unchanged "
+               "hops)")
 
 
 def plan_aggregation(online_rows: float, num_groups: int, out_width: int,

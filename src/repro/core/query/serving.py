@@ -79,6 +79,7 @@ from ..laq.table import PAD_KEY, Table
 from .explain import ExplainReport
 from .ir import PredictiveQuery
 from .multiquery import holds_tracers
+from .snowflake import CollapsedChain, chain_tables, resolve_chain
 from .planner import (QueryPlan, effective_serve_backend, place_tables,
                       plan_query, resolve_mesh_serve_backend)
 from .sharding import (ShardedPrefusedPartials, extend_sharded_arm,
@@ -123,6 +124,47 @@ class _ArmIndex:
     index: Optional[PKIndex]  # None on the mesh path (per-shard slices rule)
     dmask: jnp.ndarray        # (r,) bool, in dimension-row order
     table: Optional[jnp.ndarray]  # (r, w) partial; None on the mesh path
+
+
+def _serving_tables(q: PredictiveQuery) -> Tuple[str, ...]:
+    """Real catalog tables whose versions gate a runtime: heads + links.
+
+    The fact table is deliberately absent — requests are FK tuples, never
+    fact rows — but every table along a snowflake chain participates: a
+    sub-dimension append changes the collapsed virtual dimension.
+    """
+    return tuple(sorted({t for a in q.arms for t in chain_tables(a)}))
+
+
+def _serving_dims(catalog: Mapping[str, Table], q: PredictiveQuery,
+                  pool=None) -> Tuple[List[DimSpec],
+                                      Tuple[Optional[CollapsedChain], ...],
+                                      Tuple[Optional[tuple], ...]]:
+    """Per-arm DimSpecs with snowflake chains collapsed offline.
+
+    Flat arms resolve against the catalog directly; chained arms collapse
+    (through the shared pool when available — the same entry compiled
+    plans use) to their head-granularity virtual dimension, whose columns
+    become the arm's served feature set.  Returns ``(dims, chains,
+    chain_keys)`` with ``None`` chain slots for flat arms.
+    """
+    dims, chains, chain_keys = [], [], []
+    for a in q.arms:
+        if a.links:
+            if pool is not None:
+                cc, ckey = pool.acquire_chain(a)
+            else:
+                cc, ckey = resolve_chain(catalog, a), None
+            dims.append(DimSpec(cc.table, a.fk_col, a.pk_col,
+                                tuple(cc.table.columns)))
+            chains.append(cc)
+            chain_keys.append(ckey)
+        else:
+            dims.append(DimSpec(catalog[a.table], a.fk_col, a.pk_col,
+                                a.feature_cols))
+            chains.append(None)
+            chain_keys.append(None)
+    return dims, tuple(chains), tuple(chain_keys)
 
 
 def _mask_rows(dim: Table, preds, ids: np.ndarray) -> jnp.ndarray:
@@ -179,7 +221,7 @@ class ServingRuntime:
         self._donate = donate
         self.catalog = catalog
         self.versions: Dict[str, int] = (
-            {a.table: catalog.version(a.table) for a in query.arms}
+            {t: catalog.version(t) for t in _serving_tables(query)}
             if catalog is not None else {})
         self._mesh = mesh
         self._shard_axis = shard_axis
@@ -419,9 +461,8 @@ class ServingRuntime:
         cat = self.catalog
         try:
             changed = {
-                a.table: cat.deltas_since(a.table,
-                                          self.versions.get(a.table, 0))
-                for a in self.query.arms}
+                t: cat.deltas_since(t, self.versions.get(t, 0))
+                for t in _serving_tables(self.query)}
         except CatalogHistoryError:
             return self._rebuild("history-compacted: runtime staler than "
                                  "the delta log")
@@ -437,6 +478,18 @@ class ServingRuntime:
             grown = sorted(n for n, d in changed.items()
                            if changed_spans(d)[2])
             return self._rebuild(f"capacity-growth:{','.join(grown)}")
+        chained = {t for a in self.query.arms if a.links
+                   for t in chain_tables(a)}
+        if chained & set(changed):
+            # A delta anywhere along a chain changes the collapsed virtual
+            # dimension (composed pointers, gathered features, folded
+            # validity) — re-collapse and rebind through the full rebuild
+            # path rather than teaching the delta scatters chain
+            # composition.  Bit-exact by construction; the flat-arm delta
+            # path below stays zero-recompile for non-chain appends.
+            touched = ",".join(sorted(chained & set(changed)))
+            return self._rebuild(
+                f"chain tables changed: {touched} re-collapsed")
         line = self._refresh_delta(changed)
         self._reset_stats()
         return line
@@ -467,8 +520,8 @@ class ServingRuntime:
 
     def _rebuild(self, why: str) -> str:
         q = self.query
-        dims = [DimSpec(self.catalog[a.table], a.fk_col, a.pk_col,
-                        a.feature_cols) for a in q.arms]
+        dims, chains, chain_keys = _serving_dims(self.catalog, q,
+                                                 pool=self._pool)
         # Re-plan from the *base* reason (accumulated refresh notes would
         # otherwise be baked into the new plan's base and grow unbounded).
         base_plan = (dataclasses.replace(self.plan,
@@ -483,7 +536,7 @@ class ServingRuntime:
             self.catalog, q, dims, self._model, self.backend, base_plan,
             mesh=self._mesh, shard_axis=self._shard_axis,
             shard_threshold_bytes=self._shard_threshold_bytes,
-            pool=self._pool)
+            pool=self._pool, chains=chains, chain_keys=chain_keys)
         self._pool_refs = refs
         if self._pool is not None and old_keys:
             self._pool.release(old_keys)
@@ -492,8 +545,8 @@ class ServingRuntime:
             self._refresh_notes.clear()   # replanned: fresh decision trail
         self._install(arms, h, sharded)
         self._reset_stats()
-        self.versions = {a.table: self.catalog.version(a.table)
-                         for a in q.arms}
+        self.versions = {t: self.catalog.version(t)
+                         for t in _serving_tables(q)}
         return self._note(f"refresh=rebuild({why}; replanned, jit cache "
                           "reset)")
 
@@ -511,14 +564,23 @@ class ServingRuntime:
         pkeys = self._pool_refs.get("partials", ())
         parts = tuple(pool.get(k) for k in pkeys) if pkeys else None
         new_arms = []
-        for j, (old, (ikey, mkey, tkey)) in enumerate(
+        for j, (old, ref) in enumerate(
                 zip(self._arms, self._pool_refs["arms"])):
+            # Serving refs are (ikey, mkey, tkey[, ckey]); a chained arm
+            # carries its dmask/features on the pooled chain entry.
+            ikey, mkey, tkey, ckey = (tuple(ref) + (None,) * 4)[:4]
+            if ckey is not None:
+                cc = pool.get(ckey)
+                dmask = cc.dmask
+                tbl = parts[j] if parts is not None else cc.table.matrix
+            else:
+                dmask = pool.get(mkey)
+                tbl = parts[j] if parts is not None else pool.get(tkey)
             new_arms.append(dataclasses.replace(
-                old, index=pool.get(ikey), dmask=pool.get(mkey),
-                table=parts[j] if parts is not None else pool.get(tkey)))
+                old, index=pool.get(ikey), dmask=dmask, table=tbl))
         self._arms = tuple(new_arms)
         self._state = {"arms": self._arm_state(), "h": self._h}
-        self.versions = {a.table: cat.version(a.table) for a in q.arms}
+        self.versions = {t: cat.version(t) for t in _serving_tables(q)}
         touched = ",".join(f"{n}+{len(changed[n])}" for n in sorted(changed))
         return self._note(f"refresh=delta({touched}; pooled artifacts, "
                           "0 new compiles)")
@@ -528,8 +590,11 @@ class ServingRuntime:
             return self._refresh_delta_pooled(changed)
         q = self.query
         cat = self.catalog
-        dims = [DimSpec(cat[a.table], a.fk_col, a.pk_col, a.feature_cols)
-                for a in q.arms]
+        # Chain tables never reach this path (refresh() routes any chain
+        # delta to _rebuild), but chained arms still shape the prefuse
+        # feature slices — resolve them so arm j's slice offsets match the
+        # build.
+        dims, _, _ = _serving_dims(cat, q)
         new_arms = list(self._arms)
         new_sharded_arms = (list(self.sharded.arms)
                             if self.sharded is not None else None)
@@ -587,7 +652,7 @@ class ServingRuntime:
             self.sharded = dataclasses.replace(
                 self.sharded, arms=tuple(new_sharded_arms))
         self._state = {"arms": self._arm_state(), "h": self._h}
-        self.versions = {a.table: cat.version(a.table) for a in q.arms}
+        self.versions = {t: cat.version(t) for t in _serving_tables(q)}
         touched = ",".join(f"{n}+{len(changed[n])}" for n in sorted(changed))
         return self._note(f"refresh=delta({touched}; shapes kept, "
                           "0 new compiles)")
@@ -740,7 +805,9 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
                        plan: QueryPlan, *, mesh=None,
                        shard_axis: str = "model",
                        shard_threshold_bytes: Optional[int] = None,
-                       pool=None):
+                       pool=None, chains: Sequence[
+                           Optional[CollapsedChain]] = (),
+                       chain_keys: Sequence[Optional[tuple]] = ()):
     """The quasi-static serving state: prefused/projected tables, per-arm
     PK indices + predicate masks, and (mesh) the placed shards.
 
@@ -755,11 +822,22 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
     :class:`~.multiquery.ArtifactPool` — the same entries compiled plans
     use, so a serving runtime and a fused compiled query over the same arm
     reference one physical partial.
+
+    ``chains``/``chain_keys`` come from :func:`_serving_dims`: a chained
+    arm's dmask is the collapsed chain's validity vector (head liveness,
+    hop misses and every predicate along the chain already folded in),
+    its nonfused feature table is the virtual matrix, and its PK index is
+    built on the *real head table's* name — the virtual PK column is the
+    head's, so the entry is shared with compiled plans over the head.
     """
+    chains = tuple(chains) + (None,) * (len(dims) - len(chains))
+    chain_keys = (tuple(chain_keys)
+                  + (None,) * (len(dims) - len(chain_keys)))
     partial_keys: Tuple = ()
     if backend == "fused":
         if pool is not None:
-            tables, h, partial_keys = pool.acquire_partials(dims, model)
+            tables, h, partial_keys = pool.acquire_partials(
+                dims, model, chains=chains)
         else:
             pre = prefuse_dims(dims, model)
             tables = pre.partials
@@ -768,7 +846,14 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
         feat_keys = []
         if pool is not None:
             tables = []
-            for d in dims:
+            for d, cc in zip(dims, chains):
+                if cc is not None:
+                    # The virtual matrix IS the projected feature table
+                    # (columns == the arm's served features); it lives in
+                    # the pool under the chain key, not a features entry.
+                    tables.append(cc.table.matrix)
+                    feat_keys.append(None)
+                    continue
                 tbl, tkey = pool.acquire_features(d.dim.name,
                                                   d.feature_cols)
                 tables.append(tbl)
@@ -783,16 +868,24 @@ def _serving_artifacts(catalog: Mapping[str, Table], q: PredictiveQuery,
     arms = []
     masks = []
     arm_refs = []
-    for j, (arm, d, tbl) in enumerate(zip(q.arms, dims, tables)):
+    for j, (arm, d, tbl, cc) in enumerate(zip(q.arms, dims, tables,
+                                              chains)):
         if pool is not None:
-            dmask, mkey = pool.acquire_dmask(arm.table, arm.preds)
+            if cc is not None:
+                dmask, mkey = cc.dmask, None
+            else:
+                dmask, mkey = pool.acquire_dmask(arm.table, arm.preds)
             index, ikey = pool.acquire_pkindex(arm.table, arm.pk_col)
             arm_refs.append((ikey, mkey,
-                             feat_keys[j] if backend != "fused" else None))
+                             feat_keys[j] if backend != "fused" else None,
+                             chain_keys[j]))
         else:
-            dmask = d.dim.valid_mask()
-            for p in arm.preds:
-                dmask = dmask & p.mask(d.dim)
+            if cc is not None:
+                dmask = cc.dmask
+            else:
+                dmask = d.dim.valid_mask()
+                for p in arm.preds:
+                    dmask = dmask & p.mask(d.dim)
             index = (None if mesh is not None
                      else pk_index(d.dim.key(arm.pk_col)))
         masks.append(dmask)
@@ -884,6 +977,8 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     catalog = Catalog.wrap(catalog)
     for arm in q.arms:   # teach the catalog the join contract (PK columns)
         catalog.note_unique(arm.table, arm.pk_col)
+        for lk in arm.links:
+            catalog.note_unique(lk.table, lk.pk_col)
     # Pool sharing engages only on the plain single-device path against
     # the pool's own catalog (mesh placement commits arrays to devices;
     # tracer-holding tables must never leak into a cross-plan cache).
@@ -897,8 +992,7 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         dp = dp_size(mesh)
         buckets = tuple(sorted({-(-b // dp) * dp for b in buckets}))
 
-    dims = [DimSpec(catalog[a.table], a.fk_col, a.pk_col, a.feature_cols)
-            for a in q.arms]
+    dims, chains, chain_keys = _serving_dims(catalog, q, pool=pool)
     dim_rows = []
     for d in dims:
         try:
@@ -920,7 +1014,7 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     arms, h, sharded, plan, pool_refs = _serving_artifacts(
         catalog, q, dims, q.model, backend, plan, mesh=mesh,
         shard_axis=shard_axis, shard_threshold_bytes=shard_threshold_bytes,
-        pool=pool)
+        pool=pool, chains=chains, chain_keys=chain_keys)
 
     if donate is None:
         donate = (mesh is None

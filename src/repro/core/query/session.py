@@ -55,13 +55,14 @@ from ..laq.table import Table
 from .compile import CompiledQuery, _program_state, compile_query
 from .explain import ExplainReport
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
-                 GroupKey, Model, PredictiveQuery)
+                 ChainLink, GroupKey, Model, PredictiveQuery)
 # _array_key/model_key moved to multiquery (the arm-level hashing layer);
 # re-exported here because they are part of this module's public surface.
 from .multiquery import (ArtifactPool, _array_key, make_stacked_runner,
                          model_key, stack_key, stack_states)
 from .scheduler import AdmissionScheduler, ScheduledPlan
 from .serving import DEFAULT_BUCKETS, ServingRuntime, compile_serving
+from .snowflake import chain_tables
 
 _SEXPR_OPS = ("col", "add", "sub", "mul", "div")
 _AGG_CALL = re.compile(r"^(sum|count|mean|min|max)\s*\(\s*(.*?)\s*\)$")
@@ -137,6 +138,49 @@ def _as_pred(spec) -> Pred:
         return Pred(*spec)
     raise ValueError(f"unparseable predicate {spec!r}: expected a Pred or a "
                      "(col, op, value) tuple")
+
+
+def _as_link(spec) -> ChainLink:
+    """One ``.join(via=[...])`` entry → a :class:`ChainLink`.
+
+    Accepted specs::
+
+        ChainLink(...)                              # passthrough
+        ("nation", "c_nationkey", "n_nationkey")    # (table, fk, pk
+        (..., ["n_gdp"], [("n_region","==",1)],     #  [, features [, where
+         "customer")                                #  [, parent]]])
+        {"table": ..., "fk_col": ..., "pk_col": ...,
+         "features": [...], "where": [...], "parent": ...}
+    """
+    if isinstance(spec, ChainLink):
+        return spec
+    if isinstance(spec, Mapping):
+        d = dict(spec)
+        preds = d.pop("where", d.pop("preds", ()))
+        feats = d.pop("features", d.pop("feature_cols", ()))
+        try:
+            link = ChainLink(d.pop("table"), d.pop("fk_col"),
+                             d.pop("pk_col"), tuple(feats),
+                             tuple(_as_pred(p) for p in preds),
+                             d.pop("parent", None))
+        except KeyError as e:
+            raise ValueError(
+                f"unparseable chain link {spec!r}: missing key {e}") from e
+        if d:
+            raise ValueError(
+                f"unparseable chain link {spec!r}: unknown keys {sorted(d)}")
+        return link
+    if isinstance(spec, tuple) and 3 <= len(spec) <= 6:
+        table, fk, pk, *rest = spec
+        feats = tuple(rest[0]) if len(rest) >= 1 else ()
+        preds = tuple(_as_pred(p) for p in (rest[1] if len(rest) >= 2
+                                            else ()))
+        parent = rest[2] if len(rest) >= 3 else None
+        return ChainLink(table, fk, pk, feats, preds, parent)
+    raise ValueError(
+        f"unparseable chain link {spec!r}: expected a ChainLink, a "
+        "(table, fk_col, pk_col[, features[, where[, parent]]]) tuple, or "
+        "a dict with those keys")
 
 
 def _as_group_key(spec) -> GroupKey:
@@ -220,22 +264,76 @@ class QueryBuilder:
     # -- pipeline steps ------------------------------------------------------
     def join(self, table: str, *, on: Tuple[str, str],
              features: Sequence[str] = (),
-             where: Sequence = ()) -> "QueryBuilder":
+             where: Sequence = (),
+             via: Sequence = ()) -> "QueryBuilder":
         """Add one star arm: ``fact.<fk> = <table>.<pk>``.
 
         ``on=(fk_col, pk_col)``; ``features`` are dimension columns fed to
         the model (in join order); ``where`` holds dimension-side predicates
         (``Pred`` or ``(col, op, value)``), pushed below the join into the
         matching matrix's validity.
+
+        ``via`` extends the arm into a snowflake chain: each entry (see
+        :func:`_as_link`) hangs a sub-dimension off the head (or an earlier
+        link), TPC-DS-style.  A bound builder also recognizes a *chained*
+        join — when ``on``'s FK column is a key of an already-joined
+        dimension or link table rather than the fact, the new table is
+        attached as a :class:`ChainLink` of the owning arm instead of a
+        star arm::
+
+            (sess.query("sales")
+             .join("customer", on=("s_custkey", "c_custkey"))
+             .join("nation", on=("c_nationkey", "n_nationkey"),
+                   features=["n_gdp"]))        # chains off customer
+
+        Either way the compiler collapses the chain offline to one
+        head-granularity virtual dimension (see ``core.query.snowflake``).
         """
         if not (isinstance(on, tuple) and len(on) == 2):
             raise ValueError(f"join on={on!r}: expected (fk_col, pk_col)")
         fk, pk = on
-        arm = ArmSpec(table, fk, pk, tuple(features),
-                      tuple(_as_pred(p) for p in where))
+        preds = tuple(_as_pred(p) for p in where)
+        links = tuple(_as_link(lk) for lk in via)
+        if not links:
+            owner = self._link_parent(fk)
+            if owner is not None:
+                i, parent = owner
+                link = ChainLink(table, fk, pk, tuple(features), preds,
+                                 parent=parent)
+                arm = dataclasses.replace(
+                    self.arms[i], links=self.arms[i].links + (link,))
+                if self.session is not None:
+                    self.session._check_arm(self.fact, arm)
+                return dataclasses.replace(
+                    self,
+                    arms=self.arms[:i] + (arm,) + self.arms[i + 1:])
+        arm = ArmSpec(table, fk, pk, tuple(features), preds, links)
         if self.session is not None:
             self.session._check_arm(self.fact, arm)
         return dataclasses.replace(self, arms=self.arms + (arm,))
+
+    def _link_parent(self, fk: str) -> Optional[Tuple[int, str]]:
+        """``(arm_index, parent_table)`` when ``fk`` belongs to a joined
+        dimension/link table (a chained join), None when it is a fact FK.
+
+        Detached builders always return None — chains there go through
+        ``via=`` explicitly (no catalog to resolve column ownership).
+        """
+        if self.session is None:
+            return None
+        cat = self.session.catalog
+        fact_t = cat.get(self.fact)
+        if fact_t is not None and fk in fact_t.keys:
+            return None
+        matches = [(i, t) for i, a in enumerate(self.arms)
+                   for t in chain_tables(a)
+                   if t in cat and fk in cat[t].keys]
+        if len(matches) > 1:
+            raise ValueError(
+                f"ambiguous chained join: FK column {fk!r} is a key of "
+                f"multiple joined tables {sorted(t for _, t in matches)}; "
+                "spell the chain out with via=[...]")
+        return matches[0] if matches else None
 
     def where(self, *preds) -> "QueryBuilder":
         """AND fact-side predicates (``Pred`` or ``(col, op, value)``)."""
@@ -427,6 +525,38 @@ class Session:
             raise ValueError(
                 f"join on {arm.table!r}: unknown feature columns {missing} "
                 f"(columns: {list(dim.columns)})")
+        known = {arm.table: dim}
+        prev = arm.table
+        for lk in arm.links:
+            parent_name = lk.parent if lk.parent is not None else prev
+            parent_t = known.get(parent_name)
+            if parent_t is None:
+                raise ValueError(
+                    f"chain link {lk.table!r} on arm {arm.table!r}: parent "
+                    f"{parent_name!r} is not the head dimension or an "
+                    f"earlier link (have: {sorted(known)})")
+            if lk.fk_col not in parent_t.keys:
+                raise ValueError(
+                    f"chain link {lk.table!r}: {lk.fk_col!r} is not a key "
+                    f"column of parent {parent_name!r} "
+                    f"(keys: {sorted(parent_t.keys)})")
+            if lk.table not in self.catalog:
+                raise KeyError(
+                    f"unknown sub-dimension table {lk.table!r}; catalog "
+                    f"has {sorted(self.catalog)}")
+            link_t = self.catalog[lk.table]
+            if lk.pk_col not in link_t.keys:
+                raise ValueError(
+                    f"chain link {lk.table!r}: {lk.pk_col!r} is not a key "
+                    f"column (keys: {sorted(link_t.keys)})")
+            missing = [c for c in lk.feature_cols
+                       if c not in link_t.columns]
+            if missing:
+                raise ValueError(
+                    f"chain link {lk.table!r}: unknown feature columns "
+                    f"{missing} (columns: {list(link_t.columns)})")
+            known[lk.table] = link_t
+            prev = lk.table
 
     # -- cached compilation --------------------------------------------------
     def _mesh_kwargs(self) -> Dict:
@@ -452,9 +582,11 @@ class Session:
         """The catalog tables whose versions gate ``q``'s cached artifacts.
 
         Serving runtimes never touch the fact table (requests are FK
-        tuples), so fact appends leave them valid.
+        tuples), so fact appends leave them valid.  Chained arms gate on
+        every table along the chain — a sub-dimension append invalidates
+        the collapsed chain just like a head append.
         """
-        names = {a.table for a in q.arms}
+        names = {t for a in q.arms for t in chain_tables(a)}
         if not serving:
             names.add(q.fact)
         return tuple(sorted(names))

@@ -1,0 +1,259 @@
+"""Snowflake chains: multi-hop arms collapsed to head-granularity virtual dims.
+
+The paper's factored-join form (Eq. 1) composes associatively: if the fact
+resolves into a dimension ``D`` through ``FactoredJoin(ptr_f, found_f)`` and
+``D`` resolves into a sub-dimension ``S`` through ``FactoredJoin(ptr_d,
+found_d)``, then ``ptr_f→S = ptr_d[ptr_f]`` with ``found = found_f ∧
+found_d[ptr_f]`` is exactly the pointer array of the flat ``fact ⋈ S`` join.
+This module exploits that to *collapse* a multi-hop chain (``ArmSpec.links``)
+into one head-granularity virtual dimension offline:
+
+- every hop is probed once at the **parent's** granularity (dimension-sized,
+  never fact-sized), then composed top-down to head granularity;
+- sub-dimension feature columns are gathered through the composed pointers
+  into one virtual feature matrix (qualified ``table.col`` column names);
+- sub-dimension predicates and row liveness fold into a single
+  head-granularity validity vector — exactly how the compiler folds flat
+  dimension predicates into the join's validity (§2.2).
+
+The compiler then lowers the chained arm as an ordinary flat arm over the
+virtual table: same Eq. 1 prefusion, same online program, bit-exact with
+materializing the chain as one flat pre-joined dimension
+(:func:`materialize_chains` builds that baseline for tests/benches).
+
+Where along the chain to *materialize* is a planner decision
+(:func:`~.planner.plan_chain_materialization`): caching the first ``k`` hop
+probes (``CollapsedChain.hops``) costs dimension-sized memory but lets
+:func:`refresh_chain` recompose the chain after an append without re-probing
+unchanged hops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..laq.join import FactoredJoin, join_factored
+from ..laq.table import Table
+from .ir import ArmSpec, PredictiveQuery
+
+
+def virtual_name(arm: ArmSpec) -> str:
+    """The collapsed chain's catalog-overlay name: ``head->link->...``."""
+    return "->".join([arm.table, *(lk.table for lk in arm.links)])
+
+
+def qualified_cols(arm: ArmSpec) -> Tuple[str, ...]:
+    """Virtual feature columns, ``table.col``-qualified.
+
+    Qualification keeps the names unique across hops (the IR rejects
+    duplicate table aliases) and self-describing in explain output.
+    """
+    cols = [f"{arm.table}.{c}" for c in arm.feature_cols]
+    for lk in arm.links:
+        cols.extend(f"{lk.table}.{c}" for c in lk.feature_cols)
+    return tuple(cols)
+
+
+def flat_arm(arm: ArmSpec) -> ArmSpec:
+    """The flat arm the compiler lowers in place of a chained one.
+
+    Predicates are dropped deliberately: head *and* link predicates are
+    already folded into the collapsed chain's validity vector, which the
+    compiler threads in as the arm's dmask.
+    """
+    if not arm.links:
+        return arm
+    return ArmSpec(virtual_name(arm), arm.fk_col, arm.pk_col,
+                   qualified_cols(arm))
+
+
+def link_parents(arm: ArmSpec) -> Tuple[str, ...]:
+    """Each link's resolved parent table (``parent=None`` → previous hop)."""
+    parents, prev = [], arm.table
+    for lk in arm.links:
+        parents.append(lk.parent if lk.parent is not None else prev)
+        prev = lk.table
+    return tuple(parents)
+
+
+def chain_tables(arm: ArmSpec) -> Tuple[str, ...]:
+    """Real catalog tables a (possibly chained) arm reads: head + links."""
+    return (arm.table, *(lk.table for lk in arm.links))
+
+
+def participating_tables(q: PredictiveQuery) -> Tuple[str, ...]:
+    """Every real table the query reads: fact, heads, and chain links."""
+    names = {q.fact}
+    for a in q.arms:
+        names.update(chain_tables(a))
+    return tuple(sorted(names))
+
+
+def chain_key(arm: ArmSpec) -> tuple:
+    """Content key for pooled collapsed chains.
+
+    Everything the collapsed value depends on: head table/PK, the gathered
+    feature columns, head predicates and the full link tuple (tables, hop
+    keys, link features, link predicates, parents).  The fact-side
+    ``fk_col`` is deliberately excluded — two queries joining the same
+    chain through different fact FKs share one collapse.
+    """
+    return ("chain", arm.table, arm.pk_col, arm.feature_cols, arm.preds,
+            arm.links)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollapsedChain:
+    """One chain, collapsed offline to head granularity.
+
+    ``table`` is the virtual dimension (qualified feature columns, the
+    head's PK); ``dmask`` is the head-granularity validity vector with
+    every hop's ``found``, liveness and predicates folded in;
+    ``link_ptrs`` maps each link table to its head-granularity composed
+    pointers (group-by keys on sub-dimension columns gather through
+    these); ``hops`` caches the first ``k`` parent-granularity probes for
+    :func:`refresh_chain` (``None`` entries are re-probed on refresh —
+    the planner's prefuse-through side of the materialization decision).
+    """
+
+    arm: ArmSpec
+    table: Table
+    dmask: jnp.ndarray
+    link_ptrs: Tuple[Tuple[str, jnp.ndarray, jnp.ndarray], ...]
+    hops: Tuple[Optional[FactoredJoin], ...]
+
+    @property
+    def cached_hops(self) -> int:
+        return sum(1 for h in self.hops if h is not None)
+
+
+def resolve_chain(catalog: Mapping[str, Table], arm: ArmSpec, *,
+                  keep_hops: int = 0,
+                  reuse: Optional[CollapsedChain] = None,
+                  stale: Iterable[str] = ()) -> CollapsedChain:
+    """Collapse one chained arm to a head-granularity virtual dimension.
+
+    ``keep_hops`` caches the first ``k`` parent-granularity probes on the
+    result (the planner's materialize-at-hop-k decision).  ``reuse`` +
+    ``stale`` is the refresh path: hops cached on the previous collapse
+    whose parent *and* link tables are not stale are reused instead of
+    re-probed — the composition and feature gathers always rerun (they
+    are cheap dimension-sized gathers), so the result is bit-identical
+    to a cold collapse.
+    """
+    head = catalog[arm.table]
+    stale = set(stale)
+    # Identity composition for the head itself: link hops hanging directly
+    # off the head use their probe unchanged.
+    to_head: Dict[str, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]
+    to_head = {arm.table: None}
+    dmask = head.valid_mask()
+    for p in arm.preds:
+        dmask = dmask & p.mask(head)
+    feats = [head.col(c) for c in arm.feature_cols]
+    link_ptrs = []
+    hops = []
+    for i, (lk, parent) in enumerate(zip(arm.links, link_parents(arm))):
+        fj = None
+        if (reuse is not None and i < len(reuse.hops)
+                and reuse.hops[i] is not None
+                and parent not in stale and lk.table not in stale):
+            fj = reuse.hops[i]
+        if fj is None:
+            fj = join_factored(catalog[parent].key(lk.fk_col),
+                               catalog[lk.table].key(lk.pk_col))
+        hops.append(fj if i < keep_hops else None)
+        comp = to_head[parent]
+        if comp is None:
+            ptr_h, found_h = fj.ptr, fj.found
+        else:
+            p_ptr, p_found = comp
+            # Associative composition: head→parent pointers chase into the
+            # parent→link probe; a miss anywhere along the path is a miss.
+            ptr_h = jnp.take(fj.ptr, p_ptr)
+            found_h = p_found & jnp.take(fj.found, p_ptr)
+        to_head[lk.table] = (ptr_h, found_h)
+        link = catalog[lk.table]
+        ok = link.valid_mask()
+        for p in lk.preds:
+            ok = ok & p.mask(link)
+        dmask = dmask & found_h & jnp.take(ok, ptr_h)
+        # Gathered sub-dimension features are zeroed where the hop missed:
+        # the row is invalid either way (dmask is False there), but the
+        # virtual matrix stays deterministic for delta comparisons.
+        zero = found_h.astype(jnp.float32)
+        for c in lk.feature_cols:
+            feats.append(jnp.take(link.col(c), ptr_h) * zero)
+        link_ptrs.append((lk.table, ptr_h, found_h))
+    cols = qualified_cols(arm)
+    matrix = (jnp.stack(feats, axis=1).astype(jnp.float32) if feats
+              else jnp.zeros((head.capacity, 0), jnp.float32))
+    virtual = Table(virtual_name(arm), cols, matrix,
+                    {arm.pk_col: head.key(arm.pk_col)}, head.nvalid)
+    return CollapsedChain(arm, virtual, dmask, tuple(link_ptrs), tuple(hops))
+
+
+def refresh_chain(catalog: Mapping[str, Table], old: CollapsedChain,
+                  stale: Iterable[str]) -> CollapsedChain:
+    """Re-collapse after catalog deltas, reusing unchanged cached hops."""
+    return resolve_chain(catalog, old.arm, keep_hops=old.cached_hops,
+                         reuse=old, stale=stale)
+
+
+def chain_dirty_heads(cc: CollapsedChain,
+                      touched: Mapping[str, np.ndarray]
+                      ) -> Optional[np.ndarray]:
+    """Head rows whose virtual matrix rows may differ after the deltas.
+
+    ``touched`` maps real table names to appended/updated row ids; ``cc``
+    must be the *new* (re-collapsed) chain so freshly-found hops resolve
+    into the appended link rows and land in the dirty set.  Returns
+    sorted int32 ids, or None when nothing in the chain was touched.
+    """
+    ids: Set[int] = {int(i) for i in touched.get(cc.arm.table, ())}
+    for name, ptr, found in cc.link_ptrs:
+        t = np.asarray(touched.get(name, ()), np.int64)
+        if t.size:
+            hit = np.isin(np.asarray(ptr), t) & np.asarray(found)
+            ids.update(np.nonzero(hit)[0].tolist())
+    if not ids:
+        return None
+    return np.asarray(sorted(ids), np.int32)
+
+
+def materialize_chains(catalog: Mapping[str, Table], q: PredictiveQuery
+                       ) -> Tuple[Dict[str, Table], PredictiveQuery]:
+    """The flat-star baseline: each chain as one real pre-joined dimension.
+
+    Returns ``(tables, flat_q)`` where ``tables`` holds one materialized
+    dimension per chained arm and ``flat_q`` joins them as ordinary flat
+    arms.  Rows the chain's validity vector excludes are re-keyed to
+    unique negative sentinels, so the flat probe misses them exactly
+    where the collapsed path's ``found ∧ dmask[ptr]`` fold is False —
+    the two lowerings are bit-exact (assumes non-negative PKs, which
+    :func:`Table.from_columns` key columns and the workload generator
+    both guarantee).
+    """
+    tables: Dict[str, Table] = {}
+    arms = []
+    for arm in q.arms:
+        if not arm.links:
+            arms.append(arm)
+            continue
+        cc = resolve_chain(catalog, arm)
+        pk = np.asarray(catalog[arm.table].key(arm.pk_col))
+        dm = np.asarray(cc.dmask)
+        if np.any(pk[dm] < 0):
+            raise ValueError(
+                f"materialize_chains on arm {arm.table!r} requires "
+                "non-negative PKs (negative ids are the re-key sentinels)")
+        ids = np.arange(pk.shape[0], dtype=np.int64)
+        newpk = np.where(dm, pk, (-(ids + 2)).astype(pk.dtype))
+        flat = Table(cc.table.name, cc.table.columns, cc.table.matrix,
+                     {arm.pk_col: jnp.asarray(newpk)}, cc.table.nvalid)
+        tables[flat.name] = flat
+        arms.append(flat_arm(arm))
+    return tables, dataclasses.replace(q, arms=tuple(arms))

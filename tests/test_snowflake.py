@@ -1,0 +1,390 @@
+"""Snowflake chain tests: the compiler's collapsed-chain lowering must be
+bit-exact with (a) materializing each chain as a flat pre-joined dimension,
+(b) the float64 numpy oracle, and (c) its own cold rebuild after
+sub-dimension appends — across fused/nonfused × segment/matmul.  Plus the
+IR/builder validation surface and the pooled/serving chain paths.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.fusion.operators import LinearOperator
+from repro.core.laq import Catalog, Table
+from repro.core.query import (Aggregate, ArmSpec, ArtifactPool, ChainLink,
+                              GroupKey, PredictiveQuery, Session,
+                              compile_query, compile_serving,
+                              requests_from_rows)
+from repro.core.query.snowflake import (chain_key, chain_tables,
+                                        materialize_chains,
+                                        participating_tables, resolve_chain,
+                                        virtual_name)
+from repro.core.query.workload import np_oracle, np_serving_oracle
+
+import jax.numpy as jnp
+
+COMBOS = [(b, a) for b in ("fused", "nonfused")
+          for a in ("segment", "matmul")]
+
+
+def _snowflake_tables(seed=0, n_fact=40):
+    """fact → customer → nation → region, integer-valued, with FK misses."""
+    rng = np.random.default_rng(seed)
+    region = Table.from_columns("region", {
+        "r_pk": np.arange(4), "r_g": rng.integers(0, 3, 4),
+        "r_f0": rng.integers(-4, 5, 4)},
+        key_cols=("r_pk", "r_g"), capacity=8)
+    nation = Table.from_columns("nation", {
+        "n_pk": np.arange(6), "n_to_region": rng.integers(0, 6, 6),
+        "n_f0": rng.integers(-4, 5, 6)},
+        key_cols=("n_pk", "n_to_region"), capacity=12)
+    customer = Table.from_columns("customer", {
+        "c_pk": np.arange(12), "c_to_nation": rng.integers(0, 8, 12),
+        "c_f0": rng.integers(-4, 5, 12)},
+        key_cols=("c_pk", "c_to_nation"), capacity=20)
+    fact = Table.from_columns("sales", {
+        "fk_cust": rng.integers(0, 14, n_fact),
+        "s_g": rng.integers(0, 3, n_fact),
+        "revenue": rng.integers(-4, 5, n_fact)},
+        key_cols=("fk_cust", "s_g"), capacity=64)
+    return {"region": region, "nation": nation, "customer": customer,
+            "sales": fact}
+
+
+CHAIN_ARM = ArmSpec(
+    "customer", "fk_cust", "c_pk", ("c_f0",), (),
+    links=(ChainLink("nation", "c_to_nation", "n_pk", ("n_f0",)),
+           ChainLink("region", "n_to_region", "r_pk", ("r_f0",),
+                     parent="nation")))
+
+
+def _chain_query(model=True, groups=True, preds=False):
+    arm = CHAIN_ARM
+    fact_preds = ()
+    if preds:
+        # Sub-dimension predicate two hops deep + a fact-side one: both
+        # must fold into the chain validity / row mask identically across
+        # every lowering.
+        links = (dataclasses.replace(arm.links[0],
+                                     preds=(("n_f0", ">=", -2),)),
+                 arm.links[1])
+        arm = dataclasses.replace(arm, links=links)
+        fact_preds = (("revenue", "<=", 3),)
+    m = (LinearOperator(jnp.asarray([[1.0], [2.0], [-1.0]], jnp.float32))
+         if model else None)
+    gks = ((GroupKey("fact", "s_g", 3), GroupKey("region", "r_g", 3))
+           if groups else ())
+    aggs = (Aggregate("revenue", "sum", "rev"),
+            Aggregate("*", "count", "n"))
+    if model:
+        aggs += (Aggregate("@prediction", "sum", "p"),)
+    return PredictiveQuery("sales", (arm,), fact_preds, m, gks, aggs, 9)
+
+
+def _norm_query(q):
+    """Fold tuple preds into Pred objects via the builder-free path."""
+    from repro.core.query.session import _as_pred
+    arms = tuple(dataclasses.replace(
+        a, preds=tuple(_as_pred(p) for p in a.preds),
+        links=tuple(dataclasses.replace(
+            lk, preds=tuple(_as_pred(p) for p in lk.preds))
+            for lk in a.links)) for a in q.arms)
+    return dataclasses.replace(
+        q, arms=arms, fact_preds=tuple(_as_pred(p) for p in q.fact_preds))
+
+
+def _res_maps(res, names):
+    from repro.core.query.workload import _engine_maps
+    if "groups" in res:
+        return _engine_maps(res, names)
+    return {n: np.asarray(res[n], np.float64) for n in names}
+
+
+def _assert_equal_results(a, b, names):
+    assert int(a["rows"]) == int(b["rows"])
+    ma, mb = _res_maps(a, names), _res_maps(b, names)
+    for n in names:
+        if isinstance(ma[n], dict):
+            assert set(ma[n]) == set(mb[n])
+            for c in ma[n]:
+                np.testing.assert_array_equal(ma[n][c], mb[n][c])
+        else:
+            np.testing.assert_array_equal(ma[n], mb[n])
+
+
+# --------------------------------------------------------------------------
+# Tentpole property: prefuse ≡ materialized flat join ≡ float64 oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,agg_backend", COMBOS)
+def test_chain_prefuse_equals_flat_and_oracle(backend, agg_backend):
+    tables = _snowflake_tables()
+    q = _norm_query(_chain_query(preds=True))
+
+    res = compile_query(Catalog(dict(tables)), q, backend=backend,
+                        agg_backend=agg_backend).run()
+    want = np_oracle(tables, q)
+    from repro.core.query.workload import _compare
+    assert _compare(res, want, q, f"{backend}/{agg_backend}") == []
+
+    # The flat-star baseline only carries the chain's PK key, so the
+    # bit-exactness comparison groups on the fact side.
+    q2 = dataclasses.replace(q, group_keys=(GroupKey("fact", "s_g", 3),),
+                             num_groups=3)
+    names = [a.name for a in q2.aggregates]
+    res2 = compile_query(Catalog(dict(tables)), q2, backend=backend,
+                         agg_backend=agg_backend).run()
+    flat_tables, flat_q = materialize_chains(tables, q2)
+    flat_cat = Catalog({**{k: v for k, v in tables.items()
+                           if k not in chain_tables(q2.arms[0])},
+                        **flat_tables})
+    flat = compile_query(flat_cat, flat_q, backend=backend,
+                         agg_backend=agg_backend).run()
+    _assert_equal_results(res2, flat, names)
+
+
+@pytest.mark.parametrize("strategy", ["through", "materialize", "auto"])
+def test_chain_strategy_bit_equal_and_explained(strategy):
+    tables = _snowflake_tables()
+    q = _norm_query(_chain_query(preds=True))
+    plan = compile_query(Catalog(dict(tables)), q,
+                         chain_strategy=strategy)
+    assert "chain[" in plan.plan.reason
+    assert virtual_name(q.arms[0]) in plan.plan.reason
+    want = np_oracle(tables, q)
+    from repro.core.query.workload import _compare
+    assert _compare(plan.run(), want, q, strategy) == []
+
+
+def test_chain_without_model_or_groups():
+    tables = _snowflake_tables(seed=3)
+    for model, groups in ((False, True), (True, False), (False, False)):
+        q = _norm_query(_chain_query(model=model, groups=groups))
+        res = compile_query(Catalog(dict(tables)), q).run()
+        from repro.core.query.workload import _compare
+        assert _compare(res, np_oracle(tables, q), q,
+                        f"m={model} g={groups}") == []
+
+
+# --------------------------------------------------------------------------
+# Refresh: sub-dimension appends through the chain == cold rebuild
+# --------------------------------------------------------------------------
+def test_refresh_after_subdim_append_equals_cold():
+    tables = _snowflake_tables(seed=1)
+    q = _norm_query(_chain_query())
+    cat = Catalog(dict(tables))
+    sess = Session(cat)
+    sess.compile(q).run()
+
+    rng = np.random.default_rng(11)
+    # Append to every chain hop + the fact, one at a time, re-checking
+    # the cached plan against a cold compile after each.
+    appends = [
+        ("nation", {"n_pk": [6, 7], "n_to_region": [1, 9],
+                    "n_f0": [2, -3]}),
+        ("region", {"r_pk": [4], "r_g": [1], "r_f0": [0]}),
+        ("customer", {"c_pk": [12, 13], "c_to_nation": [7, 2],
+                      "c_f0": [1, 4]}),
+        ("sales", {"fk_cust": rng.integers(0, 14, 3), "s_g": [0, 2, 1],
+                   "revenue": [3, -1, 0]}),
+    ]
+    from repro.core.query.workload import _compare
+    for name, rows in appends:
+        cat.append(name, {k: np.asarray(v) for k, v in rows.items()})
+        res = sess.compile(q).run()
+        snap = {n: cat[n] for n in cat}
+        want = np_oracle(snap, q)
+        assert _compare(res, want, q, f"refresh[{name}]") == []
+        cold = compile_query(Catalog(snap), q).run()
+        assert _compare(cold, want, q, f"cold[{name}]") == []
+
+
+def test_resolve_chain_refresh_matches_cold_collapse():
+    tables = _snowflake_tables(seed=2)
+    cat = Catalog(dict(tables))
+    arm = _norm_query(_chain_query()).arms[0]
+    cc = resolve_chain(cat, arm, keep_hops=len(arm.links))
+    cat.append("nation", {"n_pk": np.array([6]),
+                          "n_to_region": np.array([2]),
+                          "n_f0": np.array([-1])})
+    from repro.core.query.snowflake import refresh_chain
+    warm = refresh_chain(cat, cc, {"nation"})
+    cold = resolve_chain(cat, arm)
+    np.testing.assert_array_equal(np.asarray(warm.dmask),
+                                  np.asarray(cold.dmask))
+    np.testing.assert_array_equal(np.asarray(warm.table.matrix),
+                                  np.asarray(cold.table.matrix))
+
+
+# --------------------------------------------------------------------------
+# IR validation (satellite a)
+# --------------------------------------------------------------------------
+def test_duplicate_alias_rejected():
+    arm = CHAIN_ARM
+    with pytest.raises(ValueError, match="duplicate table alias"):
+        PredictiveQuery("sales", (arm, arm))
+    dup_link = dataclasses.replace(
+        arm, links=arm.links + (ChainLink("nation", "x", "n_pk"),))
+    with pytest.raises(ValueError, match="duplicate table alias 'nation'"):
+        PredictiveQuery("sales", (dup_link,))
+
+
+def test_non_parent_first_chain_rejected():
+    bad = dataclasses.replace(
+        CHAIN_ARM,
+        links=(ChainLink("region", "n_to_region", "r_pk",
+                         parent="nation"),
+               ChainLink("nation", "c_to_nation", "n_pk")))
+    with pytest.raises(ValueError, match="declared parent-first"):
+        PredictiveQuery("sales", (bad,))
+    selfref = dataclasses.replace(
+        CHAIN_ARM,
+        links=(ChainLink("nation", "c_to_nation", "n_pk",
+                         parent="region"),))
+    with pytest.raises(ValueError, match="parent 'region'"):
+        PredictiveQuery("sales", (selfref,))
+
+
+def test_chain_key_ignores_fk_and_names_hops():
+    a1 = CHAIN_ARM
+    a2 = dataclasses.replace(a1, fk_col="other_fk")
+    assert chain_key(a1) == chain_key(a2)  # FK is the fact's business
+    a3 = dataclasses.replace(a1, links=a1.links[:1])
+    assert chain_key(a1) != chain_key(a3)
+    assert virtual_name(a1) == "customer->nation->region"
+    assert set(participating_tables(PredictiveQuery("sales", (a1,)))) == {
+        "sales", "customer", "nation", "region"}
+
+
+# --------------------------------------------------------------------------
+# Builder surface: via=, chained joins, link parsing
+# --------------------------------------------------------------------------
+def _bound_session():
+    return Session(Catalog(dict(_snowflake_tables())))
+
+
+def test_builder_via_equals_explicit_ir():
+    sess = _bound_session()
+    q = (sess.query("sales")
+         .join("customer", on=("fk_cust", "c_pk"), features=["c_f0"],
+               via=[("nation", "c_to_nation", "n_pk", ["n_f0"]),
+                    {"table": "region", "fk_col": "n_to_region",
+                     "pk_col": "r_pk", "features": ["r_f0"],
+                     "parent": "nation"}])
+         .build())
+    assert q.arms == _norm_query(_chain_query(model=False,
+                                              groups=False)).arms
+
+
+def test_builder_chained_join_auto_attaches():
+    sess = _bound_session()
+    q = (sess.query("sales")
+         .join("customer", on=("fk_cust", "c_pk"), features=["c_f0"])
+         .join("nation", on=("c_to_nation", "n_pk"), features=["n_f0"])
+         .join("region", on=("n_to_region", "r_pk"), features=["r_f0"])
+         .build())
+    assert len(q.arms) == 1
+    assert [lk.table for lk in q.arms[0].links] == ["nation", "region"]
+    # The chained form runs and matches the oracle end to end.
+    res = compile_query(sess.catalog, dataclasses.replace(
+        q, aggregates=(Aggregate("revenue", "sum", "rev"),),
+        num_groups=1)).run()
+    want = np_oracle({n: sess.catalog[n] for n in sess.catalog},
+                     dataclasses.replace(
+                         q, aggregates=(Aggregate("revenue", "sum",
+                                                  "rev"),), num_groups=1))
+    assert int(res["rows"]) == want["rows"]
+
+
+def test_builder_bad_links_are_named_errors():
+    sess = _bound_session()
+    b = sess.query("sales").join("customer", on=("fk_cust", "c_pk"))
+    with pytest.raises(ValueError, match="unknown keys"):
+        b.join("nation", on=("c_to_nation", "n_pk"),
+               via=[{"table": "nation", "fk_col": "c_to_nation",
+                     "pk_col": "n_pk", "banana": 1}])
+    with pytest.raises(ValueError, match="unparseable chain link"):
+        b.join("nation", on=("c_to_nation", "n_pk"), via=[("nation",)])
+    with pytest.raises(ValueError, match="missing key"):
+        b.join("nation", on=("c_to_nation", "n_pk"),
+               via=[{"table": "nation", "fk_col": "c_to_nation"}])
+
+
+def test_builder_detached_never_auto_chains():
+    from repro.core.query import query
+    q = (query("sales")
+         .join("customer", on=("fk_cust", "c_pk"))
+         .join("nation", on=("c_to_nation", "n_pk"))
+         .build())
+    # Detached builders have no catalog to inspect: both joins stay arms.
+    assert len(q.arms) == 2 and not q.arms[0].links
+
+
+# --------------------------------------------------------------------------
+# Pooled chains (multi-query sharing)
+# --------------------------------------------------------------------------
+def test_pooled_chain_shared_and_refreshed_once():
+    tables = _snowflake_tables(seed=4)
+    cat = Catalog(dict(tables))
+    pool = ArtifactPool(cat)
+    q1 = _norm_query(_chain_query())
+    q2 = _norm_query(dataclasses.replace(
+        _chain_query(), aggregates=(Aggregate("revenue", "max", "mx"),)))
+    p1 = compile_query(cat, q1, pool=pool)
+    p2 = compile_query(cat, q2, pool=pool)
+    st = pool.stats()
+    assert st["by_kind"].get("chain") == 1      # one collapsed chain shared
+    ck = chain_key(q1.arms[0])
+    assert pool.refcount(ck) >= 2
+
+    cat.append("region", {"r_pk": np.array([4, 5]),
+                          "r_g": np.array([2, 0]),
+                          "r_f0": np.array([3, -4])})
+    p1.refresh()
+    p2.refresh()                                # second refresh is a no-op
+    r1, r2 = p1.run(), p2.run()
+    assert pool.update_count(ck) == 1           # refreshed exactly once
+    snap = {n: cat[n] for n in cat}
+    from repro.core.query.workload import _compare
+    assert _compare(r1, np_oracle(snap, q1), q1, "pooled-q1") == []
+    assert _compare(r2, np_oracle(snap, q2), q2, "pooled-q2") == []
+
+    p1.close()
+    p2.close()
+    assert pool.stats()["entries"] == 0
+
+
+# --------------------------------------------------------------------------
+# Serving chains
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["fused", "nonfused"])
+def test_serving_chain_matches_oracle(backend):
+    tables = _snowflake_tables(seed=5)
+    q = _norm_query(_chain_query(groups=False))
+    cat = Catalog(dict(tables))
+    rt = compile_serving(cat, q, backend=backend)
+    n = int(tables["sales"].nvalid)
+    got = np.asarray(rt.serve(requests_from_rows(tables["sales"], q,
+                                                 np.arange(n))))
+    np.testing.assert_array_equal(got.astype(np.float64),
+                                  np_serving_oracle(tables, q))
+
+
+def test_serving_chain_append_rebuilds_and_matches_cold():
+    tables = _snowflake_tables(seed=6)
+    q = _norm_query(_chain_query(groups=False))
+    cat = Catalog(dict(tables))
+    rt = compile_serving(cat, q)
+    cat.append("nation", {"n_pk": np.array([6]),
+                          "n_to_region": np.array([0]),
+                          "n_f0": np.array([4])})
+    note = rt.refresh()
+    assert "chain tables changed" in note and "nation" in note
+    snap = {n: cat[n] for n in cat}
+    reqs = requests_from_rows(snap["sales"], q,
+                              np.arange(int(snap["sales"].nvalid)))
+    warm = np.asarray(rt.serve(reqs))
+    cold = np.asarray(compile_serving(Catalog(snap), q).serve(reqs))
+    np.testing.assert_array_equal(warm, cold)
+    np.testing.assert_array_equal(warm.astype(np.float64),
+                                  np_serving_oracle(snap, q))
