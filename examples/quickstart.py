@@ -352,3 +352,35 @@ for k, v in Session(snow).compile(q10.build()).run().items():
 print("sub-dimension append → chain refresh ≡ cold rebuild ✓")
 # The whole subsystem is fuzzed nightly against a float64 numpy oracle:
 # replay any reported case with `python scripts/fuzz_repro.py --seed N`.
+
+# -- 11. Query/model co-optimization: the IR rewrite engine ------------------
+# Because query and model are one algebraic program, optimization crosses
+# the boundary between them.  Filter on a tree model's prediction with
+# ``.predict(tree, where=[(leaf, "==", 1.0)])``: when the filter selects
+# exactly one leaf, the rewrite engine distills that leaf's root-to-leaf
+# path into ordinary dimension predicates and DROPS the model — the
+# predict-then-filter query runs as a pure relational aggregate, and every
+# data refresh skips the fact-sized tree GEMM.  All rewrites are exact:
+# ``rewrite="off"`` (the escape hatch) must reproduce results bit-for-bit.
+from repro.core.fusion.operators import tree_from_arrays
+
+# Depth-2 stump over [sqm, density, tax]: leaf 3 ⟺ sqm > 4 ∧ sqm > 2.
+big_tree = tree_from_arrays(np.array([0, 1, 0]),
+                            np.array([4., 2., 2.], np.float32), 3)
+q11 = (snow_sess.query("visits")
+       .join("stores", on=("v_store", "st_key"), features=["sqm"])
+       .join("cities", on=("st_city", "ci_key"), features=["density"])
+       .join("countries", on=("ci_country", "co_key"), features=["tax"])
+       .predict(big_tree, where=[(3, "==", 1.0)])   # big-store visits only
+       .agg(basket="sum(basket)", n="count"))
+plan11 = q11.compile()
+trail = dict(plan11.explain().extras)["rewrites"]
+assert any("distill" in t for t in trail)           # also in plan.reason
+res11 = q11.run()
+off11 = snow_sess.compile(q11.build(), rewrite="off")
+np.testing.assert_array_equal(np.asarray(res11["basket"]),
+                              np.asarray(off11.run()["basket"]))
+print(f"rewrite ✓ {trail[0]}")
+print(f"  big-store baskets={np.asarray(res11['basket']).ravel()} "
+      f"over n={int(np.asarray(res11['n']).ravel()[0])} visits — no model "
+      "online, bit-equal to rewrite='off'")

@@ -15,8 +15,15 @@ Two modes:
     point).  On mismatch, prints every failure plus the one-command
     replay line and exits nonzero.
 
+``--seed N --rewrite-matrix``
+    Replay one case through every backend combo with the IR rewrite
+    engine on AND off, printing the fired-rule trail and comparing the
+    two plans' results bit-for-bit (and both against the float64 oracle).
+    The targeted triage mode when a mismatch implicates a rewrite rule.
+
 Usage:
     PYTHONPATH=src python scripts/fuzz_repro.py --seed 12345
+    PYTHONPATH=src python scripts/fuzz_repro.py --seed 12345 --rewrite-matrix
     PYTHONPATH=src python scripts/fuzz_repro.py --cases 200 --base-seed 0
 """
 from __future__ import annotations
@@ -52,9 +59,46 @@ def main(argv=None) -> int:
                     help="campaign base seed (case i uses base*10000+i)")
     ap.add_argument("--full-every", type=int, default=4,
                     help="full-matrix check every Nth campaign case")
+    ap.add_argument("--rewrite-matrix", action="store_true",
+                    help="with --seed: compare rewrite on vs off across "
+                         "every backend combo (and both vs the oracle)")
     args = ap.parse_args(argv)
 
     from repro.core.query.workload import check_case, generate_case, run_fuzz
+
+    if args.rewrite_matrix:
+        if args.seed is None:
+            ap.error("--rewrite-matrix requires --seed")
+        from repro.core.query import compile_query, rewrite_query
+        from repro.core.query.workload import _compare, np_oracle
+        case = generate_case(args.seed)
+        print(_describe(case))
+        rw = rewrite_query(case.tables, case.query)
+        print("rewrite trail:", list(rw.trail) or "(nothing fired)")
+        want = np_oracle(case.tables, case.query)
+        bad = []
+        t0 = time.time()
+        for backend in ("fused", "nonfused"):
+            for agg_backend in ("segment", "matmul"):
+                res = {}
+                for mode in ("on", "off"):
+                    plan = compile_query(case.catalog(), case.query,
+                                         backend=backend,
+                                         agg_backend=agg_backend,
+                                         rewrite=mode)
+                    res[mode] = plan.run()
+                    bad += _compare(res[mode], want, case.query,
+                                    f"seed={args.seed} {backend}/"
+                                    f"{agg_backend}/rewrite={mode}")
+        dt = time.time() - t0
+        if bad:
+            print(f"FAIL ({len(bad)} mismatches, {dt:.1f}s):")
+            for b in bad:
+                print(" ", b)
+            return 1
+        print(f"OK: seed {args.seed} rewrite on == off == oracle across "
+              f"all combos ({dt:.1f}s)")
+        return 0
 
     if args.seed is not None:
         print(_describe(generate_case(args.seed)))

@@ -18,15 +18,27 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class LinearOperator:
-    """predictions = X @ L (k → l)."""
+    """predictions = X @ L + bias (k → l).
+
+    ``bias`` is optional (None ≡ zero) and exists for the rewrite engine's
+    constant-input folding: an equality predicate that pins feature i to v
+    removes row i from L and folds ``v · L[i, :]`` into the bias.  On the
+    fused path the bias is folded into arm 0's prefused partial
+    (``prefuse_dims``/``prefuse_rows``) — any arm miss invalidates the row,
+    whose output is zeroed by the validity mask, so attributing the
+    constant term to arm 0 is exact.
+    """
 
     L: jnp.ndarray  # (k, l)
+    bias: Optional[jnp.ndarray] = None  # (l,) or None
 
     @property
     def k(self) -> int:
@@ -37,11 +49,19 @@ class LinearOperator:
         return int(self.L.shape[1])
 
     def apply(self, x: jnp.ndarray) -> jnp.ndarray:
-        return x @ self.L
+        out = x @ self.L
+        if self.bias is not None:
+            out = out + self.bias[None, :].astype(out.dtype)
+        return out
 
     def compose(self, other: "LinearOperator") -> "LinearOperator":
         """Associativity: (X L₁) L₂ = X (L₁ L₂) — pre-fold chained layers."""
-        return LinearOperator(self.L @ other.L)
+        bias = None
+        if self.bias is not None:
+            bias = self.bias @ other.L
+        if other.bias is not None:
+            bias = other.bias if bias is None else bias + other.bias
+        return LinearOperator(self.L @ other.L, bias)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,8 +60,14 @@ def prefuse_dims(dims: Sequence[DimSpec], model: Model) -> PrefusedStar:
     mats = dim_mapping_matrices(dims)
     parts = []
     if isinstance(model, LinearOperator):
-        for d, m in zip(dims, mats):
-            parts.append(d.dim.matrix @ (m @ model.L))       # B M L
+        for j, (d, m) in enumerate(zip(dims, mats)):
+            part = d.dim.matrix @ (m @ model.L)              # B M L
+            if j == 0 and model.bias is not None:
+                # Constant term lives in arm 0's partial: a row missing any
+                # arm is invalid and zeroed after the sum, so the bias
+                # reaches exactly the rows model.apply would have biased.
+                part = part + model.bias[None, :].astype(part.dtype)
+            parts.append(part)
         return PrefusedStar(tuple(parts), None)
     # Decision tree: per-dim node-ownership masks W_j from F's column blocks.
     slices = _feature_slices(dims)
@@ -94,7 +100,10 @@ def prefuse_rows(dims: Sequence[DimSpec], model: Model, j: int,
     d, m = dims[j], mats[j]
     rows = jnp.take(d.dim.matrix, jnp.asarray(row_ids, jnp.int32), axis=0)
     if isinstance(model, LinearOperator):
-        return rows @ (m @ model.L)
+        out = rows @ (m @ model.L)
+        if j == 0 and model.bias is not None:   # matches prefuse_dims
+            out = out + model.bias[None, :].astype(out.dtype)
+        return out
     slices = _feature_slices(dims)
     lo, hi = slices[j]
     f_owner = jnp.argmax(model.F, axis=0)

@@ -152,9 +152,43 @@ Build chains fluently — ``.join(..., via=[("nation", "c_nationkey",
 already-joined dimension — or hand ``ArmSpec(links=(...))`` to the IR.
 
 The subsystem is fuzzed: ``core.query.workload`` generates random
-snowflake schemas/queries/models and checks every lowering bit-exact
-against a float64 numpy oracle (``python scripts/fuzz_repro.py --seed N``
-replays any failure deterministically).
+snowflake schemas/queries/models/prediction filters and checks every
+lowering bit-exact against a float64 numpy oracle (``python
+scripts/fuzz_repro.py --seed N`` replays any failure deterministically;
+``--rewrite-matrix`` re-runs a seed with the rewrite engine on and off).
+
+Query/model co-optimization (the rewrite engine)
+------------------------------------------------
+Because the paper expresses query *and* model as one linear-algebra
+program, optimizations can cross the boundary between them.
+:mod:`~repro.core.query.rewrite` runs a deterministic rule engine over the
+IR before planning (``compile_query(rewrite="on")``, the default; ``"off"``
+is the escape hatch):
+
+``distill_tree_filter``
+    ``.predict(tree, where=[(leaf, "==", 1.0)])`` filters rows on a tree
+    prediction (:class:`PredictionFilter`).  When the filters select
+    exactly one leaf, its root-to-leaf path conditions compile into
+    ordinary dimension/link predicates and the model drops out of the
+    online phase entirely — predict-then-filter becomes a pure relational
+    query.
+``fold_constant_inputs``
+    An equality predicate pinning a feature column folds ``u · L[row]``
+    into a model bias (carried by arm 0's prefused partial) and removes
+    the input.
+``project_zero_weights``
+    Features with all-zero model rows leave the arms and the model.
+``prune_tree_branches``
+    Range predicates that decide a tree-node comparison for every
+    surviving row fold that node into the compare vector ``h``.
+
+Every rule is exact — the rewritten plan's ``run()`` is bit-identical to
+the unrewritten plan's on all lowerings (the fuzzer checks on vs off per
+case) — and data-independent, so rewritten plans refresh through the same
+delta paths.  The planner costs the rewritten query against the original
+(:func:`~repro.core.query.planner.estimate_query_cost`) and keeps the
+winner; the fired-rule trail surfaces in ``plan.reason``
+(``rewrite=[...]``) and ``explain()`` extras.
 
 Out-of-core execution (fact streaming)
 --------------------------------------
@@ -238,9 +272,11 @@ the runtime.
 """
 from ..laq.catalog import (Catalog, CatalogHistoryError,
                            CatalogReadOnlyError, TableDelta, changed_spans)
-from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
-                 ChainLink, GroupKey, PredictiveQuery, eval_value)
+from .ir import (AGG_OPS, COUNT_STAR, FILTER_OPS, PREDICTION, Aggregate,
+                 ArmSpec, ChainLink, GroupKey, PredictionFilter,
+                 PredictiveQuery, eval_value, query_signature)
 from .compile import CompiledQuery, compile_query, query_from_star
+from .rewrite import RewriteResult, rewrite_query
 from .explain import ExplainReport
 from .snowflake import (CollapsedChain, chain_tables, materialize_chains,
                         resolve_chain, virtual_name)
@@ -264,8 +300,10 @@ from .sharding import (ShardedArm, ShardedPrefusedPartials,
                        shard_prefused_partials)
 
 __all__ = [
-    "AGG_OPS", "COUNT_STAR", "PREDICTION", "Aggregate", "ArmSpec",
-    "ChainLink", "GroupKey", "PredictiveQuery",
+    "AGG_OPS", "COUNT_STAR", "FILTER_OPS", "PREDICTION", "Aggregate",
+    "ArmSpec", "ChainLink", "GroupKey", "PredictionFilter",
+    "PredictiveQuery", "query_signature",
+    "RewriteResult", "rewrite_query",
     "CollapsedChain", "chain_tables", "materialize_chains", "resolve_chain",
     "virtual_name",
     "FuzzCase", "FuzzReport", "generate_case", "np_oracle", "run_fuzz",

@@ -57,9 +57,11 @@ from .explain import ExplainReport
 from .ir import (AGG_OPS, PREDICTION, Aggregate, ArmSpec, PredictiveQuery,
                  eval_value)
 from .multiquery import holds_tracers
-from .planner import (QueryPlan, effective_serve_backend, place_tables,
+from .planner import (QueryPlan, effective_serve_backend,
+                      estimate_query_cost, place_tables,
                       plan_chain_materialization, plan_query, plan_streaming,
                       resolve_mesh_serve_backend)
+from .rewrite import _FILTER_FNS, rewrite_query
 from .snowflake import (CollapsedChain, chain_dirty_heads, chain_tables,
                         flat_arm, link_parents, participating_tables,
                         refresh_chain, resolve_chain, virtual_name)
@@ -124,6 +126,10 @@ class CompiledQuery:
     # the fact axis; ``run()`` dispatches through it instead of the
     # in-core jitted program.  None on the in-core path.
     _stream: Optional[object] = None
+    # Per-rule trail from core.query.rewrite ("" entries never occur; empty
+    # tuple = no rule fired or rewrite="off").  ``query`` holds the
+    # *rewritten* IR the plan executes; ``_source`` the query as written.
+    _rewrites: Tuple[str, ...] = ()
 
     @property
     def is_traced(self) -> bool:
@@ -184,6 +190,7 @@ class CompiledQuery:
             trail=tuple(self._refresh_notes),
             shared_artifacts=tuple(self._pool_keys()),
             extras=(("selectivity", self.selectivity),
+                    ("rewrites", self._rewrites),
                     ("stream", self._stream.describe()
                      if self._stream is not None else None)))
 
@@ -512,6 +519,18 @@ def _assemble_star(catalog: Mapping[str, Table], q: PredictiveQuery,
         valid = valid & ok
     star = StarJoin(fact=fact, dims=tuple(dims), joins=tuple(joins),
                     row_valid=valid)
+    if q.model_preds:
+        # Prediction filters fold into the validity like any predicate: the
+        # predictions are quasi-static (functions of the joined dimension
+        # rows), so the mask is offline work and both delta-refresh paths
+        # inherit it by re-running this fold.  Invalid rows may see a
+        # different (zeroed-features) prediction than they would if valid —
+        # irrelevant under the AND: they stay invalid either way.
+        preds = q.model.apply(star.materialize())
+        for f in q.model_preds:
+            valid = valid & _FILTER_FNS[f.op](preds[:, f.output],
+                                              jnp.float32(f.value))
+        star = dataclasses.replace(star, row_valid=valid)
     return star, valid
 
 
@@ -692,6 +711,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                   memory_budget_bytes: Optional[int] = None,
                   stream_chunk_rows=None,
                   chain_strategy: str = "auto",
+                  rewrite: str = "on",
                   interpret: bool = False, mesh=None,
                   shard_axis: str = "model",
                   shard_threshold_bytes: Optional[int] = None,
@@ -746,14 +766,16 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     (``run``/``predictions``) stays single-device — it is fact-sized, not
     partial-sized.  ``mesh`` is incompatible with ``serve_backend="pallas"``.
     """
-    for arg, allowed in ((backend, ("auto", "fused", "nonfused")),
-                         (join_backend, ("auto", "gather", "matmul")),
-                         (agg_backend, ("auto", "segment", "matmul")),
-                         (serve_backend, ("auto", "jnp", "pallas")),
-                         (chain_strategy, ("auto", "through",
-                                           "materialize"))):
+    for name, arg, allowed in (
+            ("backend", backend, ("auto", "fused", "nonfused")),
+            ("join_backend", join_backend, ("auto", "gather", "matmul")),
+            ("agg_backend", agg_backend, ("auto", "segment", "matmul")),
+            ("serve_backend", serve_backend, ("auto", "jnp", "pallas")),
+            ("chain_strategy", chain_strategy,
+             ("auto", "through", "materialize")),
+            ("rewrite", rewrite, ("on", "off"))):
         if arg not in allowed:
-            raise ValueError(f"backend {arg!r} not one of {allowed}")
+            raise ValueError(f"{name} {arg!r} not one of {allowed}")
     serve_backend = resolve_mesh_serve_backend(serve_backend, mesh)
     _check_aggregates(q)
     if not isinstance(catalog, Catalog):
@@ -775,9 +797,31 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                 batches_per_update=batches_per_update,
                 memory_budget_bytes=memory_budget_bytes,
                 stream_chunk_rows=stream_chunk_rows,
-                chain_strategy=chain_strategy,
+                chain_strategy=chain_strategy, rewrite=rewrite,
                 interpret=interpret, mesh=mesh, shard_axis=shard_axis,
                 shard_threshold_bytes=shard_threshold_bytes, pool=pool)
+    # Query/model co-optimization (core.query.rewrite): run the exact
+    # rewrite rules over the IR, then keep whichever of (original,
+    # rewritten) the cost model scores cheaper.  The rules read arrays, so
+    # they are skipped under an outer trace; ``_source`` stays the original
+    # query, so refresh-by-recompile re-runs the rewrite from scratch.
+    rewrite_trail: Tuple[str, ...] = ()
+    if rewrite == "on" and not holds_tracers(cat0, q):
+        rw = rewrite_query(cat0, q)
+        if rw.changed:
+            def _cost(qq):
+                return estimate_query_cost(
+                    qq.model, cat0[qq.fact].capacity,
+                    [cat0[a.table].capacity for a in qq.arms],
+                    out_width=qq.model.l if qq.model is not None else 1,
+                    batches_per_update=batches_per_update)
+            cost_orig, cost_rw = _cost(q), _cost(rw.query)
+            if cost_rw <= cost_orig:
+                q = rw.query
+                rewrite_trail = rw.trail
+            else:
+                rewrite_trail = (
+                    f"rejected: cost {cost_rw:.3g} > {cost_orig:.3g}",)
     # Pool sharing engages only on the plain single-device path against the
     # pool's own catalog: select-compaction rebinds the fact to a local
     # table, mesh placement commits arrays to devices, and tracer-holding
@@ -871,6 +915,8 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
                       batches_per_update=batches_per_update,
                       memory_budget_bytes=memory_budget_bytes,
                       sharing=sharing)
+    if rewrite_trail:
+        chain_notes.insert(0, "rewrite=[" + "; ".join(rewrite_trail) + "]")
     if chain_notes:
         plan = dataclasses.replace(
             plan, reason="; ".join([plan.reason, *chain_notes]))
@@ -1090,7 +1136,7 @@ def compile_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
         _pool=pool if use_pool else None,
         _pool_refs=({"arms": arm_refs, "partials": tuple(partial_keys)}
                     if use_pool else {}),
-        _online_fn=_online, _stream=stream)
+        _online_fn=_online, _stream=stream, _rewrites=rewrite_trail)
 
 
 def _make_predict_rows_sharded(star: StarJoin, model,

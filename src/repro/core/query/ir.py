@@ -19,15 +19,21 @@ contract either way.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..fusion.operators import DecisionTreeGEMM, LinearOperator
 from ..laq.selection import Pred
 from ..laq.table import Table
 
 Model = Union[LinearOperator, DecisionTreeGEMM]
+
+#: Comparison ops a PredictionFilter may use (scalar compares only — the
+#: set/range forms belong to relational Pred, which filters *columns*).
+FILTER_OPS = ("==", "!=", "<", "<=", ">", ">=")
 
 #: Aggregate.value sentinel: aggregate the (n, l) model prediction matrix.
 PREDICTION = "@prediction"
@@ -111,6 +117,26 @@ class GroupKey:
 
 
 @dataclasses.dataclass(frozen=True)
+class PredictionFilter:
+    """A predicate over the *model's prediction*: ``op(P[:, output], value)``.
+
+    The model-side analogue of :class:`~repro.core.laq.selection.Pred`: a
+    fact row survives iff the comparison holds for its prediction — e.g.
+    ``PredictionFilter(3, "==", 1.0)`` keeps rows a tree classifies into
+    leaf 3.  Predictions are quasi-static (they depend only on join
+    pointers and dimension features, never fact measures), so the compiler
+    folds these filters into the offline validity vector; the rewrite
+    engine (:mod:`repro.core.query.rewrite`) goes further and *distills* a
+    tree-model filter into ordinary dimension predicates, dropping the
+    model from the online phase entirely.
+    """
+
+    output: int                           # prediction column, in [0, l)
+    op: str                               # one of FILTER_OPS
+    value: float
+
+
+@dataclasses.dataclass(frozen=True)
 class Aggregate:
     """``op(value) [GROUP BY ...]``; ``value`` is an expr or ``PREDICTION``.
 
@@ -144,8 +170,25 @@ class PredictiveQuery:
     group_keys: Tuple[GroupKey, ...] = ()
     aggregates: Tuple[Aggregate, ...] = (Aggregate("lo_revenue"),)
     num_groups: Union[int, str] = 8192
+    #: Predicates over the model's prediction matrix, ANDed into validity.
+    model_preds: Tuple[PredictionFilter, ...] = ()
 
     def __post_init__(self):
+        if self.model_preds:
+            if self.model is None:
+                raise ValueError(
+                    "model_preds filter the model's predictions, but the "
+                    "query has no model head")
+            l = self.model.l
+            for f in self.model_preds:
+                if f.op not in FILTER_OPS:
+                    raise ValueError(
+                        f"prediction filter op {f.op!r} not one of "
+                        f"{FILTER_OPS}")
+                if not 0 <= int(f.output) < l:
+                    raise ValueError(
+                        f"prediction filter output {f.output} out of range "
+                        f"for a model with l={l} outputs")
         # A duplicate table alias would silently shadow in every
         # name-keyed structure downstream (catalog overlays, group-key
         # pointer maps, serving version maps) — reject it here, once.
@@ -174,6 +217,62 @@ class PredictiveQuery:
     @property
     def feature_width(self) -> int:
         return sum(a.feature_width for a in self.arms)
+
+    # Content-based ("rewrite-safe") equality: a rewritten query must
+    # compare unequal to its source even when the object graphs alias, and
+    # two independently built but structurally identical queries must
+    # compare equal — model weight arrays are compared by value (digest),
+    # not identity.  The dataclass is eq=False, so these are the only
+    # equality semantics.
+    def __eq__(self, other):
+        if self is other:
+            return True
+        if not isinstance(other, PredictiveQuery):
+            return NotImplemented
+        return query_signature(self) == query_signature(other)
+
+    def __ne__(self, other):
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    def __hash__(self):
+        return hash(query_signature(self))
+
+
+def _content_token(obj):
+    """A hashable, by-value token for any IR node (arrays by digest).
+
+    Tracer-stage arrays cannot be read; they token by identity, which
+    degrades equality to identity for in-trace queries — exactly the old
+    (eq=False) behaviour, so nothing under a trace changes semantics.
+    """
+    if obj is None or isinstance(obj, (str, int, float, bool, bytes)):
+        return obj
+    if isinstance(obj, (tuple, list)):
+        return tuple(_content_token(o) for o in obj)
+    if isinstance(obj, (set, frozenset)):
+        return ("set",) + tuple(sorted(repr(o) for o in obj))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return ((type(obj).__name__,)
+                + tuple(_content_token(getattr(obj, f.name))
+                        for f in dataclasses.fields(obj)))
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        try:
+            arr = np.asarray(obj)
+        except Exception:   # tracer / abstract value: identity token
+            return ("tracer", tuple(obj.shape), str(obj.dtype), id(obj))
+        return ("array", str(arr.dtype), arr.shape,
+                hashlib.sha1(arr.tobytes()).hexdigest())
+    return (type(obj).__name__, repr(obj))
+
+
+def query_signature(q: PredictiveQuery) -> tuple:
+    """The query's content signature (cached; arrays digested by value)."""
+    sig = q.__dict__.get("_signature")
+    if sig is None:
+        sig = _content_token(q)
+        object.__setattr__(q, "_signature", sig)
+    return sig
 
 
 def eval_value(fact: Table, expr, *, query: Optional[str] = None

@@ -58,7 +58,7 @@ import numpy as np
 from ..fusion.operators import DecisionTreeGEMM, LinearOperator
 from ..fusion.pipeline import _feature_slices, prefuse_dims, prefuse_rows
 from ..laq.catalog import Catalog, CatalogHistoryError, changed_spans
-from ..laq.join import PKIndex, pk_index
+from ..laq.join import FactoredJoin, PKIndex, pk_index
 from ..laq.projection import mapping_matrix
 from ..laq.star import DimSpec
 from ..laq.table import PAD_KEY, Table
@@ -83,7 +83,8 @@ def model_key(model: Optional[Model]):
         return None
     try:
         if isinstance(model, LinearOperator):
-            return ("linear", _array_key(model.L))
+            return ("linear", _array_key(model.L),
+                    None if model.bias is None else _array_key(model.bias))
         if isinstance(model, DecisionTreeGEMM):
             return ("tree", _array_key(model.F), _array_key(model.v),
                     _array_key(model.H), _array_key(model.h))
@@ -120,20 +121,24 @@ def features_key(table: str, feature_cols: Sequence[str]) -> tuple:
 
 
 def partial_key(table: str, feature_cols: Sequence[str], model: Model,
-                lo: int, hi: int) -> tuple:
+                lo: int, hi: int, j: int = 0) -> tuple:
     """Content key of one arm's Eq. 1/3 prefused partial.
 
     Linear heads: the partial is ``B_j @ L[lo:hi]`` (the one-hot mapping
     matmul reproduces the slice exactly in fp32), so only the *slice
     content* keys it — two queries placing the same arm at different
     feature offsets still share, as long as their L rows there agree.
-    Tree heads additionally depend on the node-ownership mask, which reads
-    the argmax over the **full** F, so the key pins (lo, hi) and all of
-    F/v/H.
+    A folded constant bias (rewrite rule) is carried by arm 0's partial,
+    so that arm's key pins the bias bytes too.  Tree heads additionally
+    depend on the node-ownership mask, which reads the argmax over the
+    **full** F, so the key pins (lo, hi) and all of F/v/H.
     """
     if isinstance(model, LinearOperator):
+        bias = ()
+        if j == 0 and model.bias is not None:
+            bias = (("bias", _digest(model.bias)),)
         return ("partial", "linear", table, tuple(feature_cols),
-                _digest(np.asarray(model.L)[lo:hi]))
+                _digest(np.asarray(model.L)[lo:hi])) + bias
     return ("partial", "tree", table, tuple(feature_cols), int(lo), int(hi),
             _digest(model.F), _digest(model.v), _digest(model.H))
 
@@ -154,7 +159,7 @@ def arm_keys(q: PredictiveQuery) -> Tuple[Tuple[tuple, ...], ...]:
             slices.append((off, off + arm.feature_width))
             off += arm.feature_width
     out = []
-    for arm, (lo, hi) in zip(q.arms, slices):
+    for j, (arm, (lo, hi)) in enumerate(zip(q.arms, slices)):
         # Chained arms index/probe against the real head table (shared with
         # flat arms over the same head); the chain collapse and its partial
         # are keyed by the full chain content.
@@ -168,10 +173,10 @@ def arm_keys(q: PredictiveQuery) -> Tuple[Tuple[tuple, ...], ...]:
             if arm.links:
                 keys.append(partial_key(virtual_name(arm),
                                         qualified_cols(arm), q.model,
-                                        lo, hi) + (chain_key(arm),))
+                                        lo, hi, j) + (chain_key(arm),))
             else:
                 keys.append(partial_key(arm.table, arm.feature_cols,
-                                        q.model, lo, hi))
+                                        q.model, lo, hi, j))
         out.append(tuple(keys))
     return tuple(out)
 
@@ -302,7 +307,9 @@ class ArtifactPool:
         multiple references).  Returns the number of evictions.
         """
         evicted = 0
-        for key in keys:
+        work = list(keys)
+        while work:
+            key = work.pop()
             entry = self._entries.get(key)
             if entry is None:
                 continue
@@ -310,6 +317,9 @@ class ArtifactPool:
             if entry.refcount <= 0:
                 del self._entries[key]
                 evicted += 1
+                # Chains hold one reference on each pooled hop probe;
+                # evicting the chain drops those too.
+                work.extend(entry.spec.get("hops", ()))
         self.evictions += evicted
         return evicted
 
@@ -435,11 +445,39 @@ class ArtifactPool:
         refresh-speed hint only — it never changes the collapsed values —
         so plans that disagree on it still share one entry (first build
         wins).
+
+        Each hop's parent→link probe is itself pooled at hop granularity
+        (the ``join`` kind, parent table as the probing side): two chains
+        sharing a prefix — or a flat arm probing the same link — reuse one
+        probe entry instead of recomputing it per chain.  The chain holds
+        a reference on each hop key (recorded in ``spec["hops"]``);
+        :meth:`release` drops them when the chain is evicted.
         """
-        entry = self._fresh(
-            chain_key(arm), "chain", chain_tables(arm),
-            lambda: resolve_chain(self.catalog, arm, keep_hops=keep_hops),
-            {"arm": arm, "keep_hops": keep_hops})
+        key = chain_key(arm)
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            hop_keys: list = []
+
+            def hop_source(parent, lk):
+                _, ik = self.acquire_pkindex(lk.table, lk.pk_col)
+                (ptr, found), k = self.acquire_join(
+                    parent, lk.fk_col, lk.table, lk.pk_col)
+                hop_keys.extend((k, ik))
+                return FactoredJoin(ptr, found)
+
+            value = resolve_chain(self.catalog, arm, keep_hops=keep_hops,
+                                  hop_source=hop_source)
+            entry = _PoolEntry(
+                key=key, kind="chain", value=value,
+                versions={n: self.catalog.version(n)
+                          for n in chain_tables(arm)},
+                spec={"arm": arm, "keep_hops": keep_hops,
+                      "hops": tuple(hop_keys)})
+            self._entries[key] = entry
+        else:
+            self.hits += 1
+            self._refresh_entry(entry)
         entry.refcount += 1
         return entry.value, entry.key
 
@@ -465,8 +503,8 @@ class ArtifactPool:
         chains = tuple(chains) + (None,) * (len(dims) - len(chains))
         slices = _feature_slices(dims)
         keys, arm_specs = [], []
-        for d, (lo, hi), cc in zip(dims, slices, chains):
-            k = partial_key(d.dim.name, d.feature_cols, model, lo, hi)
+        for j, (d, (lo, hi), cc) in enumerate(zip(dims, slices, chains)):
+            k = partial_key(d.dim.name, d.feature_cols, model, lo, hi, j)
             if cc is not None:
                 k = k + (chain_key(cc.arm),)
                 arm_specs.append(cc.arm)
@@ -624,13 +662,37 @@ class ArtifactPool:
             rows = jnp.take(dim.matrix, jnp.asarray(ids), axis=0) @ m
             entry.value = entry.value.at[jnp.asarray(ids)].set(rows)
 
+    def _hop_source_for(self, entry):
+        """A ``resolve_chain`` hop source reading this chain's pooled hop
+        probes (refreshing each at most once via :meth:`get`); ``None``
+        for pre-pooling entries whose spec lacks hop keys."""
+        if "hops" not in entry.spec:
+            return None
+
+        def hop_source(parent, lk):
+            key = join_key(parent, lk.fk_col, lk.table, lk.pk_col)
+            if key not in self._entries:
+                return None
+            ptr, found = self.get(key)
+            return FactoredJoin(ptr, found)
+        return hop_source
+
     def _rebuild_chain(self, entry):
         s = entry.spec
         return resolve_chain(self.catalog, s["arm"],
-                             keep_hops=s["keep_hops"])
+                             keep_hops=s["keep_hops"],
+                             hop_source=self._hop_source_for(entry))
 
     def _refresh_chain(self, entry, deltas):
-        entry.value = refresh_chain(self.catalog, entry.value, set(deltas))
+        hs = self._hop_source_for(entry)
+        if hs is None:
+            entry.value = refresh_chain(self.catalog, entry.value,
+                                        set(deltas))
+        else:
+            s = entry.spec
+            entry.value = resolve_chain(self.catalog, s["arm"],
+                                        keep_hops=s["keep_hops"],
+                                        hop_source=hs)
 
     def _partial_dims(self, entry, chains: Optional[Mapping[
             int, CollapsedChain]] = None) -> Tuple[DimSpec, ...]:

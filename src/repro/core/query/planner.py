@@ -376,6 +376,42 @@ def plan_aggregation(online_rows: float, num_groups: int, out_width: int,
                        f"beat one-hot matmul ({matmul + shared:.0f} flops)")
 
 
+def estimate_query_cost(model: Optional[Model], fact_rows: int,
+                        dim_rows: Sequence[int], *, num_groups: int = 0,
+                        out_width: int = 1, agg_ops: Sequence[str] = ("sum",),
+                        batches_per_update: float = 1000.0,
+                        platform: Optional[str] = None) -> float:
+    """Scalar per-batch work estimate for rewrite-vs-original comparison.
+
+    One number covering the online phase (per-arm gathers + the model's
+    fused contribution + aggregation) plus the offline prefuse build
+    amortized over ``batches_per_update`` — so it moves in the right
+    direction for every rewrite rule: dropping the model removes the
+    dominant online term (distillation), while shrinking features (k),
+    tree nodes (p) or model width shrinks the amortized offline term.
+    It deliberately reuses :func:`plan_aggregation`'s FLOP counts rather
+    than re-deriving them.
+    """
+    n = float(max(fact_rows, 1))
+    j = max(len(dim_rows), 1)
+    r = float(sum(dim_rows)) if dim_rows else 0.0
+    cost = 2.0 * n * j                         # probes + validity fold
+    if model is not None:
+        l = max(model.l, 1)
+        cost += n * (j + 1) * l                # Σⱼ Iⱼ Pⱼ gathers + adds
+        offline = 2.0 * r * max(model.k, 1) * l        # B (M L) / B (M F)
+        if isinstance(model, DecisionTreeGEMM):
+            # compares + ownership mask + preds @ H per dimension row
+            offline += r * model.p * (l + 2.0)
+            cost += n * l                      # the == h compare
+        cost += offline / max(batches_per_update, 1.0)
+    if num_groups > 0:
+        agg = plan_aggregation(n, num_groups, out_width, ops=agg_ops,
+                               platform=platform)
+        cost += min(agg.matmul_flops, agg.segment_flops)
+    return cost
+
+
 def plan_query(model: Optional[Model], fact_rows: int,
                dim_rows: Sequence[int], *, selectivity: float = 1.0,
                num_groups: int = 0, out_width: int = 1,

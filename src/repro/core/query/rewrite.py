@@ -1,0 +1,464 @@
+"""Query/model co-optimization: exact rewrite rules over the IR.
+
+The paper treats data processing and model prediction as one algebraic
+program; this module rewrites *across* that boundary before planning, in
+the spirit of Park et al.'s end-to-end prediction-query optimizer
+(model-to-query transformations) and SystemML's fusion-plan rule engine
+(deterministic rules + a cost model, not ad-hoc lowering).
+
+Every rule is **exact**: the rewritten query computes bit-identical
+``run()`` results to the original on every execution path the compiler
+lowers (fused/nonfused × segment/matmul, streaming, pooled).  Two rules
+are exact on any float data (their transforms only move *comparisons*,
+never re-associate sums); two move a term between f32 summation orders and
+are exact under the repo's established exact-arithmetic convention
+(integer-valued data — the same convention that makes fused == nonfused
+bit-exact, see ``core.query.workload``):
+
+``distill_tree_filter`` (any data)
+    A query that thresholds/classifies on a *tree* model's prediction
+    (``model_preds``) selects a set of leaves.  When exactly one leaf
+    satisfies the filters, its root-to-leaf path conditions
+    (``feature > v`` / ``feature <= v``) compile into ordinary dimension /
+    link predicates, and the model drops out of the online phase entirely
+    — the paper's join+predict program degenerates to a pure relational
+    one.  When every leaf satisfies, the filters are vacuous and are
+    dropped.
+
+``prune_tree_branches`` (any data)
+    Range predicates already on the query imply some tree-node
+    comparisons are constant for every surviving row; those nodes are
+    removed from F/v/H and their contribution folded into the compare
+    vector ``h`` — the score sums lose only terms that were provably
+    constant, so the leaf one-hot is unchanged.
+
+``fold_constant_inputs`` (exact-arithmetic data)
+    An equality predicate pinning a dimension feature to ``u`` makes that
+    model input constant: the feature leaves the arm, its row leaves
+    ``L``, and ``u · L[row]`` folds into the model bias (carried in arm
+    0's Eq. 1 prefused partial).
+
+``project_zero_weights`` (exact-arithmetic data; ±0 folded)
+    Features with an all-zero ``L`` row (linear) or feeding no tree node
+    (all-zero ``F`` row) contribute nothing; they leave the arms and the
+    model, shrinking the prefused partial build and the nonfused
+    materialize width.
+
+:func:`rewrite_query` runs the rules to a bounded fixpoint and returns
+the rewritten IR plus a per-rule trail; ``compile_query(rewrite="on")``
+costs the rewritten query against the original
+(:func:`~.planner.estimate_query_cost`) and surfaces the trail in
+``plan.reason`` and ``explain()``.  All rules are data-*independent*
+(they read query structure, model weights and catalog schema — never row
+values), so a rewritten plan refreshes through the same delta paths as an
+unrewritten one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..fusion.operators import DecisionTreeGEMM, LinearOperator
+from ..laq.selection import Pred
+from ..laq.table import Table
+from .ir import PREDICTION, PredictiveQuery
+
+#: Fixpoint bound: each pass can only shrink the query (fewer features,
+#: nodes, filters), so a handful of passes always converges; the bound is
+#: a guard against a buggy rule oscillating, not a tuning knob.
+MAX_PASSES = 4
+
+_FILTER_FNS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSite:
+    """Where one model input column lives: an arm's head or one of its
+    links, in the model's global feature order (arms in order; within an
+    arm the head's ``feature_cols`` first, then each link's in declaration
+    order — the order ``qualified_cols``/``_feature_slices`` use)."""
+
+    arm: int                    # index into q.arms
+    link: Optional[int]         # index into arm.links, None for the head
+    table: str                  # real catalog table owning the column
+    col: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteResult:
+    """The rewritten IR plus the per-rule trail (empty = nothing fired)."""
+
+    query: PredictiveQuery
+    trail: Tuple[str, ...]
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.trail)
+
+
+def feature_sites(q: PredictiveQuery) -> List[FeatureSite]:
+    """Every model input column, in global (model-row) feature order."""
+    sites: List[FeatureSite] = []
+    for i, a in enumerate(q.arms):
+        sites.extend(FeatureSite(i, None, a.table, c)
+                     for c in a.feature_cols)
+        for li, lk in enumerate(a.links):
+            sites.extend(FeatureSite(i, li, lk.table, c)
+                         for c in lk.feature_cols)
+    return sites
+
+
+def _site_preds(q: PredictiveQuery, s: FeatureSite) -> Tuple[Pred, ...]:
+    a = q.arms[s.arm]
+    return a.preds if s.link is None else a.links[s.link].preds
+
+
+def _rewritable_col(catalog: Mapping[str, Table], s: FeatureSite) -> bool:
+    """Only plain float matrix columns are analyzable: ``Pred.mask``
+    prefers the int *key* array when the name is also a key column, whose
+    integer compare does not match the f32 feature compare."""
+    t = catalog.get(s.table) if hasattr(catalog, "get") else catalog[s.table]
+    return t is not None and s.col not in t.keys
+
+
+# -- predicate interval analysis (all comparisons in float32) ---------------
+@dataclasses.dataclass
+class _Bounds:
+    lo: float = -np.inf
+    lo_strict: bool = False
+    hi: float = np.inf
+    hi_strict: bool = False
+    values: Optional[frozenset] = None    # finite domain, when known
+
+    def _values_in_bounds(self):
+        out = []
+        for w in self.values:
+            if w < self.lo or (self.lo_strict and w == self.lo):
+                continue
+            if w > self.hi or (self.hi_strict and w == self.hi):
+                continue
+            out.append(w)
+        return out
+
+    def forced(self, v: np.float32) -> Optional[bool]:
+        """Is ``x > v`` decided for every x satisfying the bounds?"""
+        if self.values is not None:
+            vals = self._values_in_bounds()
+            if not vals:
+                return None        # empty domain: leave the node alone
+            if all(w > v for w in vals):
+                return True
+            if all(w <= v for w in vals):
+                return False
+            return None
+        if self.lo > v or (self.lo_strict and self.lo >= v):
+            return True
+        if self.hi <= v:
+            return False
+        return None
+
+    def pinned(self) -> Optional[np.float32]:
+        """The single value x must take, if the bounds pin one."""
+        if self.values is not None:
+            vals = self._values_in_bounds()
+            return np.float32(vals[0]) if len(vals) == 1 else None
+        if (self.lo == self.hi and not self.lo_strict
+                and not self.hi_strict and np.isfinite(self.lo)):
+            return np.float32(self.lo)
+        return None
+
+
+def _col_bounds(preds: Sequence[Pred], col: str) -> _Bounds:
+    """Fold every predicate on ``col`` into one f32 bound set."""
+    b = _Bounds()
+    for p in preds:
+        if p.col != col:
+            continue
+        if p.op == "between":
+            lo, hi = (np.float32(p.value[0]), np.float32(p.value[1]))
+            if lo > b.lo or (lo == b.lo):
+                b.lo = max(b.lo, float(lo))
+            b.hi = min(b.hi, float(hi))
+        elif p.op == "==":
+            vals = frozenset([float(np.float32(p.value))])
+            b.values = vals if b.values is None else (b.values & vals)
+        elif p.op == "in":
+            vals = frozenset(float(np.float32(v)) for v in p.value)
+            b.values = vals if b.values is None else (b.values & vals)
+        elif p.op == ">":
+            v = float(np.float32(p.value))
+            if v > b.lo or (v == b.lo and not b.lo_strict):
+                b.lo, b.lo_strict = v, True
+        elif p.op == ">=":
+            if float(np.float32(p.value)) > b.lo:
+                b.lo, b.lo_strict = float(np.float32(p.value)), False
+        elif p.op == "<":
+            v = float(np.float32(p.value))
+            if v < b.hi or (v == b.hi and not b.hi_strict):
+                b.hi, b.hi_strict = v, True
+        elif p.op == "<=":
+            if float(np.float32(p.value)) < b.hi:
+                b.hi = float(np.float32(p.value))
+        # "!=" carries no interval information — ignored.
+    return b
+
+
+# -- shared feature-dropping machinery --------------------------------------
+def _drop_features(q: PredictiveQuery, drop: Sequence[int]
+                   ) -> Tuple[PredictiveQuery, List[str]]:
+    """Remove the given global feature indices from every arm/link.
+
+    Returns the new query (model untouched — callers shrink it) and the
+    dropped ``table.col`` names for the trail.
+    """
+    sites = feature_sites(q)
+    dropset = set(drop)
+    names = [f"{sites[i].table}.{sites[i].col}" for i in sorted(dropset)]
+    gi = 0
+    arms = []
+    for a in q.arms:
+        keep_head = []
+        for c in a.feature_cols:
+            if gi not in dropset:
+                keep_head.append(c)
+            gi += 1
+        links = []
+        for lk in a.links:
+            keep_lk = []
+            for c in lk.feature_cols:
+                if gi not in dropset:
+                    keep_lk.append(c)
+                gi += 1
+            links.append(dataclasses.replace(
+                lk, feature_cols=tuple(keep_lk)))
+        arms.append(dataclasses.replace(
+            a, feature_cols=tuple(keep_head), links=tuple(links)))
+    return dataclasses.replace(q, arms=tuple(arms)), names
+
+
+# -- the rules ---------------------------------------------------------------
+def _rule_distill(catalog, q: PredictiveQuery):
+    """tree→predicate distillation: compile the satisfying leaf's path
+    into dimension/link predicates and drop the model entirely."""
+    if not isinstance(q.model, DecisionTreeGEMM) or not q.model_preds:
+        return None
+    m = q.model
+    l = m.l
+    # The prediction of a (valid) row is a one-hot leaf indicator, so the
+    # filters select a leaf subset — evaluate them on each unit vector,
+    # with the same f32 casts the folded validity path applies.
+    leaves = []
+    for leaf in range(l):
+        ok = True
+        for f in q.model_preds:
+            e = np.float32(1.0 if int(f.output) == leaf else 0.0)
+            if not bool(_FILTER_FNS[f.op](e, np.float32(f.value))):
+                ok = False
+                break
+        if ok:
+            leaves.append(leaf)
+    if len(leaves) == l:
+        # Vacuous filters: every leaf passes — drop the filters, keep the
+        # model (nothing else changes, so this is trivially exact).
+        return (dataclasses.replace(q, model_preds=()),
+                "vacuous filter dropped")
+    if any(a.value == PREDICTION for a in q.aggregates):
+        return None             # predictions still feed an aggregate
+    if len(leaves) != 1:
+        return None             # OR-of-paths / empty: not expressible yet
+    leaf = leaves[0]
+    sites = feature_sites(q)
+    F = np.asarray(m.F)
+    H = np.asarray(m.H)
+    v = np.asarray(m.v, np.float32)
+    if F.shape[0] != len(sites):
+        return None             # inconsistent IR; refuse to touch it
+    # Per-site path constraints: +1 → feature > v_p, −1 → feature <= v_p.
+    gt: dict = {}
+    le: dict = {}
+    for p in range(F.shape[1]):
+        d = H[p, leaf]
+        if d == 0:
+            continue            # node not on this leaf's path
+        if F[:, p].max() != 1.0:
+            return None
+        si = int(np.argmax(F[:, p]))
+        if not _rewritable_col(catalog, sites[si]):
+            return None
+        vp = float(v[p])
+        if d > 0:
+            gt[si] = max(gt.get(si, -np.inf), vp)
+        else:
+            le[si] = min(le.get(si, np.inf), vp)
+    for si in set(gt) & set(le):
+        if le[si] <= gt[si]:
+            return None         # path self-contradictory: leaf unreachable
+    # Attach the distilled predicates to the owning arm/link.
+    arms = list(q.arms)
+    for si in sorted(set(gt) | set(le)):
+        s = sites[si]
+        new: List[Pred] = []
+        if si in gt:
+            new.append(Pred(s.col, ">", gt[si]))
+        if si in le:
+            new.append(Pred(s.col, "<=", le[si]))
+        a = arms[s.arm]
+        if s.link is None:
+            arms[s.arm] = dataclasses.replace(a, preds=a.preds + tuple(new))
+        else:
+            links = list(a.links)
+            links[s.link] = dataclasses.replace(
+                links[s.link], preds=links[s.link].preds + tuple(new))
+            arms[s.arm] = dataclasses.replace(a, links=tuple(links))
+    q = dataclasses.replace(q, arms=tuple(arms), model=None, model_preds=())
+    # The features fed only the (now dropped) model.
+    q, _ = _drop_features(q, range(len(sites)))
+    npreds = sum(1 for d in (gt, le) for _ in d)
+    return q, f"leaf {leaf} -> {npreds} predicates, model dropped"
+
+
+def _rule_fold_constants(catalog, q: PredictiveQuery):
+    """constant-input folding: equality predicates pin features, whose
+    ``L`` rows fold into the model bias."""
+    if not isinstance(q.model, LinearOperator):
+        return None
+    sites = feature_sites(q)
+    L = np.asarray(q.model.L)
+    if L.shape[0] != len(sites):
+        return None
+    pinned: List[Tuple[int, np.float32]] = []
+    for i, s in enumerate(sites):
+        if not _rewritable_col(catalog, s):
+            continue
+        u = _col_bounds(_site_preds(q, s), s.col).pinned()
+        if u is not None:
+            pinned.append((i, u))
+    if not pinned or len(pinned) >= len(sites):
+        return None             # nothing pinned, or no feature would remain
+    drop = [i for i, _ in pinned]
+    delta = np.zeros((L.shape[1],), np.float32)
+    for i, u in pinned:
+        delta = delta + np.float32(u) * L[i].astype(np.float32)
+    bias = delta if q.model.bias is None else (
+        np.asarray(q.model.bias, np.float32) + delta)
+    import jax.numpy as jnp
+    model = LinearOperator(jnp.asarray(np.delete(L, drop, axis=0)),
+                           jnp.asarray(bias))
+    q, names = _drop_features(q, drop)
+    return (dataclasses.replace(q, model=model),
+            f"pinned {','.join(names)} into bias")
+
+
+def _rule_zero_weight(catalog, q: PredictiveQuery):
+    """zero-weight feature projection: inputs with an all-zero model row
+    (``L`` row / ``F`` row) leave the arms and the model."""
+    if q.model is None:
+        return None
+    sites = feature_sites(q)
+    if isinstance(q.model, LinearOperator):
+        W = np.asarray(q.model.L)
+    else:
+        W = np.asarray(q.model.F)
+    if W.shape[0] != len(sites):
+        return None
+    dead = [i for i in range(W.shape[0]) if not W[i].any()]
+    if not dead or len(dead) >= len(sites):
+        return None
+    import jax.numpy as jnp
+    if isinstance(q.model, LinearOperator):
+        model = dataclasses.replace(
+            q.model, L=jnp.asarray(np.delete(W, dead, axis=0)))
+    else:
+        model = dataclasses.replace(
+            q.model, F=jnp.asarray(np.delete(W, dead, axis=0)))
+    q, names = _drop_features(q, dead)
+    return (dataclasses.replace(q, model=model),
+            f"projected {','.join(names)}")
+
+
+def _rule_prune_tree(catalog, q: PredictiveQuery):
+    """predicate-implied tree pruning: nodes whose comparison the query's
+    range predicates decide are folded into ``h`` and removed."""
+    if not isinstance(q.model, DecisionTreeGEMM):
+        return None
+    m = q.model
+    sites = feature_sites(q)
+    F = np.asarray(m.F)
+    if F.shape[0] != len(sites):
+        return None
+    v = np.asarray(m.v, np.float32)
+    H = np.asarray(m.H, np.float32)
+    h = np.asarray(m.h, np.float32)
+    bounds: dict = {}
+    decided: dict = {}
+    for p in range(F.shape[1]):
+        if F[:, p].max() != 1.0:
+            continue
+        si = int(np.argmax(F[:, p]))
+        s = sites[si]
+        if not _rewritable_col(catalog, s):
+            continue
+        if si not in bounds:
+            bounds[si] = _col_bounds(_site_preds(q, s), s.col)
+        c = bounds[si].forced(np.float32(v[p]))
+        if c is not None:
+            decided[p] = c
+    if not decided or len(decided) >= F.shape[1]:
+        return None             # nothing decided, or no node would remain
+    keep = [p for p in range(F.shape[1]) if p not in decided]
+    # score == h  ⟺  score_kept == h − Σ_decided c_p · H[p, :]: the decided
+    # terms are constant over every surviving row, so moving them into the
+    # compare vector preserves the leaf one-hot exactly (±1 integer sums).
+    h2 = h.copy()
+    for p, c in decided.items():
+        if c:
+            h2 = h2 - H[p]
+    import jax.numpy as jnp
+    model = DecisionTreeGEMM(jnp.asarray(F[:, keep]),
+                             jnp.asarray(v[keep]),
+                             jnp.asarray(H[keep]), jnp.asarray(h2))
+    return (dataclasses.replace(q, model=model),
+            f"{F.shape[1]}->{len(keep)} nodes")
+
+
+#: Deterministic rule order.  Distillation first (it may drop the model,
+#: making the model-shrinking rules no-ops); pruning last so it sees any
+#: predicates the other rules introduced.
+RULES: Tuple[Tuple[str, object], ...] = (
+    ("distill_tree_filter", _rule_distill),
+    ("fold_constant_inputs", _rule_fold_constants),
+    ("project_zero_weights", _rule_zero_weight),
+    ("prune_tree_branches", _rule_prune_tree),
+)
+
+
+def rewrite_query(catalog: Mapping[str, Table], q: PredictiveQuery, *,
+                  max_passes: int = MAX_PASSES) -> RewriteResult:
+    """Run every rewrite rule to a bounded fixpoint.
+
+    Deterministic: rules run in :data:`RULES` order within a pass, and a
+    pass that fires nothing ends the loop.  The trail records one
+    ``rule(note)`` entry per firing, in order.
+    """
+    trail: List[str] = []
+    for _ in range(max_passes):
+        fired = False
+        for name, rule in RULES:
+            out = rule(catalog, q)
+            if out is None:
+                continue
+            q, note = out
+            trail.append(f"{name}({note})")
+            fired = True
+        if not fired:
+            break
+    return RewriteResult(q, tuple(trail))

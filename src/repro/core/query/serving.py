@@ -960,6 +960,11 @@ def compile_serving(catalog: Mapping[str, Table], q: PredictiveQuery, *,
     """
     if q.model is None:
         raise ValueError("compile_serving requires a model head")
+    if q.model_preds:
+        raise ValueError(
+            "compile_serving does not take prediction filters "
+            "(model_preds): serving returns raw predictions per request "
+            "row — filter in the aggregate path (compile_query) instead")
     if not q.arms:
         raise ValueError("compile_serving requires at least one star arm")
     for arg, allowed in ((backend, ("auto", "fused", "nonfused")),

@@ -55,7 +55,8 @@ from ..laq.table import Table
 from .compile import CompiledQuery, _program_state, compile_query
 from .explain import ExplainReport
 from .ir import (AGG_OPS, COUNT_STAR, PREDICTION, Aggregate, ArmSpec,
-                 ChainLink, GroupKey, Model, PredictiveQuery)
+                 ChainLink, GroupKey, Model, PredictionFilter,
+                 PredictiveQuery)
 # _array_key/model_key moved to multiquery (the arm-level hashing layer);
 # re-exported here because they are part of this module's public surface.
 from .multiquery import (ArtifactPool, _array_key, make_stacked_runner,
@@ -80,7 +81,7 @@ def query_key(q: PredictiveQuery) -> tuple:
     reconstruct their IR per call still hit the cache.
     """
     return ("pq", q.fact, q.arms, q.fact_preds, model_key(q.model),
-            q.group_keys, q.aggregates, q.num_groups)
+            q.group_keys, q.aggregates, q.num_groups, q.model_preds)
 
 
 def _signature_defaults(fn) -> Dict:
@@ -183,6 +184,16 @@ def _as_link(spec) -> ChainLink:
         "a dict with those keys")
 
 
+def _as_prediction_filter(spec) -> PredictionFilter:
+    if isinstance(spec, PredictionFilter):
+        return spec
+    if isinstance(spec, tuple) and len(spec) == 3:
+        return PredictionFilter(*spec)
+    raise ValueError(
+        f"unparseable prediction filter {spec!r}: expected a "
+        "PredictionFilter or an (output, op, value) tuple")
+
+
 def _as_group_key(spec) -> GroupKey:
     if isinstance(spec, GroupKey):
         return spec
@@ -260,6 +271,7 @@ class QueryBuilder:
     group_keys: Tuple[GroupKey, ...] = ()
     aggregates: Tuple[Aggregate, ...] = ()
     num_groups: Union[int, str] = 8192
+    model_preds: Tuple[PredictionFilter, ...] = ()
 
     # -- pipeline steps ------------------------------------------------------
     def join(self, table: str, *, on: Tuple[str, str],
@@ -341,9 +353,22 @@ class QueryBuilder:
         return dataclasses.replace(self,
                                    fact_preds=self.fact_preds + new)
 
-    def predict(self, model: Model) -> "QueryBuilder":
-        """Attach the model head (LinearOperator / DecisionTreeGEMM)."""
-        return dataclasses.replace(self, model=model)
+    def predict(self, model: Model, *, where: Sequence = ()
+                ) -> "QueryBuilder":
+        """Attach the model head (LinearOperator / DecisionTreeGEMM).
+
+        ``where`` filters rows on the *prediction*: each entry is a
+        :class:`~repro.core.query.ir.PredictionFilter` or an
+        ``(output, op, value)`` tuple — a row survives only when
+        ``op(prediction[output], value)`` holds.  For tree models, a filter
+        selecting exactly one leaf is distilled back into ordinary
+        dimension predicates by the rewrite engine
+        (``core.query.rewrite``), dropping the model from the online phase
+        entirely.
+        """
+        filters = self.model_preds + tuple(
+            _as_prediction_filter(f) for f in where)
+        return dataclasses.replace(self, model=model, model_preds=filters)
 
     def group_by(self, *keys,
                  num_groups: Optional[Union[int, str]] = None
@@ -376,7 +401,8 @@ class QueryBuilder:
         """Lower to the ``PredictiveQuery`` IR (the compiler contract)."""
         kw = dict(fact=self.fact, arms=self.arms,
                   fact_preds=self.fact_preds, model=self.model,
-                  group_keys=self.group_keys, num_groups=self.num_groups)
+                  group_keys=self.group_keys, num_groups=self.num_groups,
+                  model_preds=self.model_preds)
         if self.aggregates:
             kw["aggregates"] = self.aggregates
         elif self.model is not None:
@@ -503,7 +529,8 @@ class Session:
                             fact_preds=q.fact_preds, model=q.model,
                             group_keys=q.group_keys,
                             aggregates=q.aggregates,
-                            num_groups=q.num_groups)
+                            num_groups=q.num_groups,
+                            model_preds=q.model_preds)
 
     def _check_arm(self, fact: str, arm: ArmSpec):
         """Early, named errors for a new join arm (builder ergonomics)."""

@@ -133,7 +133,8 @@ class CollapsedChain:
 def resolve_chain(catalog: Mapping[str, Table], arm: ArmSpec, *,
                   keep_hops: int = 0,
                   reuse: Optional[CollapsedChain] = None,
-                  stale: Iterable[str] = ()) -> CollapsedChain:
+                  stale: Iterable[str] = (),
+                  hop_source=None) -> CollapsedChain:
     """Collapse one chained arm to a head-granularity virtual dimension.
 
     ``keep_hops`` caches the first ``k`` parent-granularity probes on the
@@ -143,6 +144,15 @@ def resolve_chain(catalog: Mapping[str, Table], arm: ArmSpec, *,
     re-probed — the composition and feature gathers always rerun (they
     are cheap dimension-sized gathers), so the result is bit-identical
     to a cold collapse.
+
+    ``hop_source(parent, link) -> FactoredJoin | None`` supplies individual
+    hop probes from outside — the :class:`~.multiquery.ArtifactPool` passes
+    one so two chains threading the *same* sub-dimension hop share one
+    parent-granularity probe instead of each collapsing it.  A None return
+    falls through to ``reuse``/``join_factored``; a supplied probe must be
+    ``join_factored(catalog[parent].key(link.fk_col),
+    catalog[link.table].key(link.pk_col))`` (which the pool's join artifact
+    is, by construction).
     """
     head = catalog[arm.table]
     stale = set(stale)
@@ -158,7 +168,9 @@ def resolve_chain(catalog: Mapping[str, Table], arm: ArmSpec, *,
     hops = []
     for i, (lk, parent) in enumerate(zip(arm.links, link_parents(arm))):
         fj = None
-        if (reuse is not None and i < len(reuse.hops)
+        if hop_source is not None:
+            fj = hop_source(parent, lk)
+        if (fj is None and reuse is not None and i < len(reuse.hops)
                 and reuse.hops[i] is not None
                 and parent not in stale and lk.table not in stale):
             fj = reuse.hops[i]
@@ -236,9 +248,16 @@ def materialize_chains(catalog: Mapping[str, Table], q: PredictiveQuery
     the two lowerings are bit-exact (assumes non-negative PKs, which
     :func:`Table.from_columns` key columns and the workload generator
     both guarantee).
+
+    Group keys on chain tables survive: every group-key column of the head
+    or a link is gathered through the composed pointers into a qualified
+    ``table.col`` *key* column on the flat dimension, and ``flat_q``'s
+    group keys are rewritten to reference it — so a group-by on a
+    sub-dimension column can be checked against this baseline.
     """
     tables: Dict[str, Table] = {}
     arms = []
+    group_keys = list(q.group_keys)
     for arm in q.arms:
         if not arm.links:
             arms.append(arm)
@@ -252,8 +271,25 @@ def materialize_chains(catalog: Mapping[str, Table], q: PredictiveQuery
                 "non-negative PKs (negative ids are the re-key sentinels)")
         ids = np.arange(pk.shape[0], dtype=np.int64)
         newpk = np.where(dm, pk, (-(ids + 2)).astype(pk.dtype))
+        keys = {arm.pk_col: jnp.asarray(newpk)}
+        # Head granularity is identity; links gather through the chain's
+        # composed head→link pointers.  Misses gather garbage rows, but
+        # those head rows are re-keyed sentinels the flat probe can never
+        # match (dmask folds every hop's found).
+        ptr_to = {arm.table: None}
+        ptr_to.update((name, ptr_h) for name, ptr_h, _f in cc.link_ptrs)
+        for gi, gk in enumerate(group_keys):
+            if gk.table not in ptr_to:
+                continue
+            src = catalog[gk.table].key(gk.col)
+            ptr_h = ptr_to[gk.table]
+            qname = f"{gk.table}.{gk.col}"
+            keys[qname] = src if ptr_h is None else jnp.take(src, ptr_h)
+            group_keys[gi] = dataclasses.replace(
+                gk, table=virtual_name(arm), col=qname)
         flat = Table(cc.table.name, cc.table.columns, cc.table.matrix,
-                     {arm.pk_col: jnp.asarray(newpk)}, cc.table.nvalid)
+                     keys, cc.table.nvalid)
         tables[flat.name] = flat
         arms.append(flat_arm(arm))
-    return tables, dataclasses.replace(q, arms=tuple(arms))
+    return tables, dataclasses.replace(q, arms=tuple(arms),
+                                       group_keys=tuple(group_keys))

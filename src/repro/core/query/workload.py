@@ -4,12 +4,15 @@ The compiler's correctness story leans on algebraic identities — factored
 joins compose associatively, predicates fold into validity vectors, Eq. 1
 prefusion distributes over arms — and hand-written tests only exercise the
 schemas their authors thought of.  This module generates *random* snowflake
-schemas (chain depth ≤ 3, fanout ≤ 3 per node), random predicates, models
-and aggregate sets, runs them end-to-end through :func:`compile_query`
-across fused/nonfused × segment/matmul, and checks the results **bit-exact**
-against an independent float64 numpy oracle.  Sampled cases additionally
-append rows and re-check the delta-refresh path against a cold rebuild, and
-serve FK request batches through :func:`compile_serving`.
+schemas (chain depth ≤ 3, fanout ≤ 3 per node), random predicates, models,
+prediction filters (``model_preds``) and aggregate sets, runs them
+end-to-end through :func:`compile_query` across fused/nonfused ×
+segment/matmul, and checks the results **bit-exact** against an independent
+float64 numpy oracle.  Sampled cases additionally run with ``rewrite="off"``
+(the IR rewrite engine's escape hatch — on/off must agree bit-for-bit),
+stream the fact axis out-of-core (``stream_chunk_rows=16``), append rows
+and re-check the delta-refresh path against a cold rebuild, and serve FK
+request batches through :func:`compile_serving`.
 
 Bit-exactness is by construction, not tolerance: every generated column is
 integer-valued in a small range, model weights and tree thresholds are small
@@ -42,7 +45,7 @@ from ..laq.selection import Pred
 from ..laq.table import PAD_KEY, Table
 from .compile import compile_query
 from .ir import (COUNT_STAR, PREDICTION, Aggregate, ArmSpec, ChainLink,
-                 GroupKey, PredictiveQuery)
+                 GroupKey, PredictionFilter, PredictiveQuery)
 from .serving import compile_serving, requests_from_rows
 from .session import Session
 
@@ -230,6 +233,21 @@ def generate_case(seed: int) -> FuzzCase:
     if rng.random() < 0.4:
         fact_preds = (_rand_pred(rng, str(rng.choice(measures))),)
 
+    # Prediction filters: exercise the model_preds validity fold and (for
+    # trees selecting a single leaf) the distillation rewrite.  Integer
+    # weights × integer features keep linear predictions exactly
+    # representable, so the threshold comparisons are noise-free.
+    model_preds: Tuple[PredictionFilter, ...] = ()
+    if model is not None and rng.random() < 0.4:
+        out_dim = int(model.l)
+        o = int(rng.integers(0, out_dim))
+        if hasattr(model, "F"):  # tree: one-hot leaf indicator outputs
+            model_preds = (PredictionFilter(o, "==", 1.0),)
+        else:
+            op = str(rng.choice([">", ">=", "<", "<="]))
+            model_preds = (PredictionFilter(o, op,
+                                            float(rng.integers(-6, 7))),)
+
     group_keys: Tuple[GroupKey, ...] = ()
     num_groups: int = 8
     if rng.random() < 0.6:
@@ -252,7 +270,8 @@ def generate_case(seed: int) -> FuzzCase:
         aggs.append(Aggregate(value, op, f"agg{i}"))
 
     q = PredictiveQuery("fact", tuple(arms), fact_preds, model,
-                        group_keys, tuple(aggs), num_groups)
+                        group_keys, tuple(aggs), num_groups,
+                        model_preds=model_preds)
     return FuzzCase(seed, tables, q)
 
 
@@ -372,6 +391,16 @@ def np_oracle(tables: Dict[str, Table], q: PredictiveQuery) -> dict:
         x = (np.stack(feats, axis=1) if feats
              else np.zeros((n, 0), np.float64))
         pred = _np_model(q.model, x)
+
+    if q.model_preds:
+        # AND semantics make miss-row feature garbage irrelevant: those
+        # rows are already invalid, and on valid rows the float32 engine
+        # predictions are exact, so the comparisons agree bit-for-bit.
+        import operator
+        ops = {"==": operator.eq, "!=": operator.ne, "<": operator.lt,
+               "<=": operator.le, ">": operator.gt, ">=": operator.ge}
+        for f in q.model_preds:
+            valid = valid & ops[f.op](pred[:, f.output], f.value)
 
     codes = None
     if q.group_keys:
@@ -549,6 +578,20 @@ def check_case(seed: int, *, full: bool = True) -> List[str]:
                         f"seed={seed} {backend}/{agg_backend}")
 
     if full:
+        # Rewrite escape hatch: the unrewritten plan must agree with the
+        # (default, rewritten) plans above — both sides check against the
+        # same oracle, so on/off bit-exactness is transitive.
+        res_off = compile_query(Catalog(dict(tables)), q,
+                                rewrite="off").run()
+        bad += _compare(res_off, want, q, f"seed={seed} rewrite=off")
+
+        # Out-of-core: stream the fact axis in small chunks and fold —
+        # chunked f32 sums of integer-valued data stay exact.
+        res_st = compile_query(Catalog(dict(tables)), q,
+                               stream_chunk_rows=16).run()
+        bad += _compare(res_st, want, q, f"seed={seed} stream[16]")
+
+    if full:
         # Append to a random participating table → session refresh must
         # equal a cold compile of the new catalog.
         rng = np.random.default_rng(seed + 1)
@@ -569,11 +612,15 @@ def check_case(seed: int, *, full: bool = True) -> List[str]:
         want = want2 = None
 
     if full and q.model is not None and q.arms:
-        rt = compile_serving(Catalog(dict(tables)), q)
+        # Serving returns raw predictions per request row — prediction
+        # filters live in the aggregate path only (compile_serving rejects
+        # them), so serve the unfiltered query.
+        qs = dataclasses.replace(q, model_preds=())
+        rt = compile_serving(Catalog(dict(tables)), qs)
         n = int(tables[q.fact].nvalid)
-        reqs = requests_from_rows(tables[q.fact], q, np.arange(n))
+        reqs = requests_from_rows(tables[q.fact], qs, np.arange(n))
         got = np.asarray(rt.serve(reqs), np.float64)
-        exp = np_serving_oracle(tables, q)
+        exp = np_serving_oracle(tables, qs)
         if not np.array_equal(got, exp):
             i = int(np.argmax(np.any(got != exp, axis=1)))
             bad.append(f"seed={seed} serving: row {i} "

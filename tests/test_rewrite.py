@@ -1,0 +1,353 @@
+"""Rewrite-engine tests: every rule must be bit-exact vs the unrewritten
+plan across fused/nonfused × segment/matmul, the trail must surface in
+``plan.reason`` / ``explain()``, and the satellites — hop-level pooled
+chains, the flat baseline's sub-dimension group keys — must hold their
+sharing/exactness contracts.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.fusion.operators import LinearOperator, tree_from_arrays
+from repro.core.laq import Catalog, Table
+from repro.core.laq.selection import Pred
+from repro.core.query import (Aggregate, ArmSpec, ArtifactPool, ChainLink,
+                              GroupKey, PredictionFilter, PredictiveQuery,
+                              Session, compile_query, compile_serving,
+                              rewrite_query)
+from repro.core.query.ir import PREDICTION
+from repro.core.query.multiquery import join_key
+from repro.core.query.rewrite import RewriteResult, feature_sites
+from repro.core.query.workload import _compare, np_oracle
+
+COMBOS = [(b, a) for b in ("fused", "nonfused")
+          for a in ("segment", "matmul")]
+
+
+# --------------------------------------------------------------------------
+# Schema: one star dimension with three features, integer-valued
+# --------------------------------------------------------------------------
+def _star_tables(seed=0, n=48):
+    rng = np.random.default_rng(seed)
+    d = Table.from_columns("d", {
+        "d_pk": np.arange(8),
+        "d_f0": rng.integers(-4, 5, 8),
+        "d_f1": rng.integers(-4, 5, 8),
+        "d_f2": rng.integers(-4, 5, 8)},
+        key_cols=("d_pk",), capacity=16)
+    fact = Table.from_columns("f", {
+        "fk": rng.integers(0, 10, n),          # some FK misses
+        "f_g": rng.integers(0, 3, n),
+        "m": rng.integers(-4, 5, n)},
+        key_cols=("fk", "f_g"), capacity=64)
+    return {"d": d, "f": fact}
+
+
+def _tree():
+    # node0: f0 > 0; node1: f1 > 1; node2: f0 > -1.  Leaf 3 (right-right)
+    # ⟺ f0 > 0 ∧ f0 > -1 ⟺ d_f0 > 0 — a single distilled predicate.
+    return tree_from_arrays(np.array([0, 1, 0]),
+                            np.array([0., 1., -1.], np.float32), 3)
+
+
+def _q(model, *, model_preds=(), arm_preds=(), aggs=None, groups=True):
+    arm = ArmSpec("d", "fk", "d_pk", ("d_f0", "d_f1", "d_f2"),
+                  tuple(arm_preds))
+    if aggs is None:
+        aggs = (Aggregate("m", "sum", "rev"), Aggregate("*", "count", "n"))
+    gks = (GroupKey("fact", "f_g", 3),) if groups else ()
+    return PredictiveQuery("f", (arm,), (), model, gks, tuple(aggs),
+                           3 if groups else 8, model_preds=tuple(model_preds))
+
+
+def _check_on_off(tables, q, rule, extra=()):
+    """Compile with rewrite on and off across every combo; both must match
+    the float64 oracle bit-exactly, and ``rule`` must appear in the trail."""
+    want = np_oracle(tables, q)
+    for backend, agg_backend in COMBOS:
+        on = compile_query(Catalog(dict(tables)), q, backend=backend,
+                           agg_backend=agg_backend)
+        off = compile_query(Catalog(dict(tables)), q, backend=backend,
+                            agg_backend=agg_backend, rewrite="off")
+        assert any(rule in t for t in on._rewrites), on._rewrites
+        for name in (rule, *extra):
+            assert name in on.plan.reason
+        assert off._rewrites == ()
+        assert "rewrite=[" not in off.plan.reason
+        lbl = f"{backend}/{agg_backend}"
+        assert _compare(on.run(), want, q, f"on {lbl}") == []
+        assert _compare(off.run(), want, q, f"off {lbl}") == []
+    return on
+
+
+# --------------------------------------------------------------------------
+# Rule 2: tree→predicate distillation
+# --------------------------------------------------------------------------
+def test_distill_single_leaf_drops_model():
+    tables = _star_tables()
+    q = _q(_tree(), model_preds=[PredictionFilter(3, "==", 1.0)])
+    plan = _check_on_off(tables, q, "distill_tree_filter",
+                         extra=("model dropped",))
+    # The rewritten IR is a pure relational query: model gone, the leaf's
+    # path compiled into one dimension predicate, features dropped.
+    rw = rewrite_query(tables, q)
+    assert isinstance(rw, RewriteResult) and rw.changed
+    assert rw.query.model is None and rw.query.model_preds == ()
+    assert rw.query.arms[0].feature_cols == ()
+    preds = rw.query.arms[0].preds
+    assert [(p.col, p.op, p.value) for p in preds] == [("d_f0", ">", 0.0)]
+    # explain() surfaces the trail.
+    rep = plan.explain()
+    assert dict(rep.extras)["rewrites"] == plan._rewrites
+
+
+def test_distill_vacuous_filter_dropped():
+    tables = _star_tables(1)
+    # >= 0 holds for every one-hot output: the filter is vacuous.
+    q = _q(_tree(), model_preds=[PredictionFilter(0, ">=", 0.0)],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    rw = rewrite_query(tables, q)
+    assert rw.query.model_preds == () and rw.query.model is not None
+    assert any("vacuous" in t for t in rw.trail)
+    _check_on_off(tables, q, "distill_tree_filter")
+
+
+def test_distill_blocked_by_prediction_aggregate():
+    tables = _star_tables(2)
+    q = _q(_tree(), model_preds=[PredictionFilter(3, "==", 1.0)],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),))
+    rw = rewrite_query(tables, q)
+    # Predictions still feed an aggregate: the model must stay.
+    assert rw.query.model is not None
+    want = np_oracle(tables, q)
+    res = compile_query(Catalog(dict(tables)), q).run()
+    assert _compare(res, want, q, "pred-agg") == []
+
+
+def test_distill_multi_leaf_not_expressible():
+    tables = _star_tables(3)
+    # != selects 3 of 4 leaves — an OR of paths; the rule must refuse.
+    q = _q(_tree(), model_preds=[PredictionFilter(3, "!=", 1.0)])
+    rw = rewrite_query(tables, q)
+    assert rw.query.model is not None
+    want = np_oracle(tables, q)
+    res = compile_query(Catalog(dict(tables)), q).run()
+    assert _compare(res, want, q, "multi-leaf") == []
+
+
+# --------------------------------------------------------------------------
+# Rule 1: constant-input folding (+ rule 4 riding along)
+# --------------------------------------------------------------------------
+def test_fold_constants_into_bias():
+    tables = _star_tables(4)
+    model = LinearOperator(jnp.asarray([[2., 1.], [0., 0.], [3., -1.]],
+                                       jnp.float32))
+    q = _q(model, arm_preds=[Pred("d_f0", "==", 2)],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    plan = _check_on_off(tables, q, "fold_constant_inputs")
+    rw = rewrite_query(tables, q)
+    # d_f0 pinned to 2 → bias 2·[2,1] = [4,2]; d_f1's zero row projected.
+    assert any("project_zero_weights" in t for t in rw.trail)
+    m = rw.query.model
+    np.testing.assert_array_equal(np.asarray(m.bias), [4., 2.])
+    assert m.L.shape == (1, 2)
+    assert rw.query.arms[0].feature_cols == ("d_f2",)
+    assert any("fold_constant_inputs" in t for t in plan._rewrites)
+
+
+def test_fold_keeps_at_least_one_feature():
+    tables = _star_tables(5)
+    model = LinearOperator(jnp.asarray([[2.]], jnp.float32))
+    arm = ArmSpec("d", "fk", "d_pk", ("d_f0",), (Pred("d_f0", "==", 1),))
+    q = PredictiveQuery("f", (arm,), (), model, (),
+                        (Aggregate(PREDICTION, "sum", "p"),), 8)
+    rw = rewrite_query(tables, q)
+    # Pinning the only feature would leave an empty model: refuse.
+    assert not any("fold" in t for t in rw.trail)
+    want = np_oracle(tables, q)
+    res = compile_query(Catalog(dict(tables)), q).run()
+    assert _compare(res, want, q, "single-feature") == []
+
+
+# --------------------------------------------------------------------------
+# Rule 3: predicate-implied tree pruning
+# --------------------------------------------------------------------------
+def test_prune_tree_branches():
+    tables = _star_tables(6)
+    # d_f0 > 2 decides node0 (f0>0) and node2 (f0>-1) True; only node1
+    # (f1 > 1) survives, then the dead f0/f2 rows project out.
+    q = _q(_tree(), arm_preds=[Pred("d_f0", ">", 2)],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    plan = _check_on_off(tables, q, "prune_tree_branches")
+    rw = rewrite_query(tables, q)
+    assert any("3->1 nodes" in t for t in rw.trail)
+    assert any("project_zero_weights" in t for t in rw.trail)
+    m = rw.query.model
+    assert m.F.shape[1] == 1 and rw.query.arms[0].feature_cols == ("d_f1",)
+    assert plan._rewrites
+
+
+# --------------------------------------------------------------------------
+# Engine plumbing: knob validation, session cache keys, serving, sites
+# --------------------------------------------------------------------------
+def test_rewrite_knob_validated():
+    tables = _star_tables(7)
+    q = _q(None, groups=True)
+    with pytest.raises(ValueError, match="rewrite"):
+        compile_query(Catalog(dict(tables)), q, rewrite="sometimes")
+
+
+def test_key_columns_never_distilled():
+    # A tree over a column that is also a key column must not rewrite:
+    # Pred.mask compares the int key array, not the f32 feature.
+    tables = _star_tables(8)
+    rng = np.random.default_rng(8)
+    d = Table.from_columns("d", {
+        "d_pk": np.arange(8), "d_f0": rng.integers(-4, 5, 8)},
+        key_cols=("d_pk", "d_f0"), capacity=16)
+    tables = dict(tables, d=d)
+    arm = ArmSpec("d", "fk", "d_pk", ("d_f0",), ())
+    q = PredictiveQuery(
+        "f", (arm,), (), tree_from_arrays(np.array([0]),
+                                          np.array([0.], np.float32), 1),
+        (), (Aggregate("m", "sum", "rev"),), 8,
+        model_preds=(PredictionFilter(1, "==", 1.0),))
+    rw = rewrite_query(tables, q)
+    assert rw.query.model is not None
+
+
+def test_session_cache_distinguishes_model_preds():
+    tables = _star_tables(9)
+    sess = Session(Catalog(dict(tables)))
+    q0 = _q(_tree(), aggs=(Aggregate(PREDICTION, "sum", "p"),))
+    q1 = dataclasses.replace(q0,
+                             model_preds=(PredictionFilter(3, "==", 1.0),))
+    p0, p1 = sess.compile(q0), sess.compile(q1)
+    assert p0 is not p1
+    assert sess.compile(q1) is p1          # cache hit on re-bind
+    w0, w1 = np_oracle(tables, q0), np_oracle(tables, q1)
+    assert _compare(p0.run(), w0, q0, "unfiltered") == []
+    assert _compare(p1.run(), w1, q1, "filtered") == []
+
+
+def test_builder_predict_where_and_refresh():
+    tables = _star_tables(10)
+    cat = Catalog(dict(tables))
+    sess = Session(cat)
+    plan = (sess.query("f")
+            .join("d", on=("fk", "d_pk"),
+                  features=["d_f0", "d_f1", "d_f2"])
+            .predict(_tree(), where=[(3, "==", 1.0)])
+            .group_by(("fact", "f_g", 3), num_groups=3)
+            .agg(rev="sum(m)", n="count")
+            .compile())
+    assert any("distill" in t for t in plan._rewrites)
+    snap = {n: cat[n] for n in cat}
+    q = _q(_tree(), model_preds=[PredictionFilter(3, "==", 1.0)])
+    assert _compare(plan.run(), np_oracle(snap, q), q, "builder") == []
+    # Rewrites are data-independent: appends refresh through the same
+    # delta paths and stay oracle-exact.
+    rng = np.random.default_rng(10)
+    cat.append("f", {"fk": rng.integers(0, 10, 4),
+                     "f_g": rng.integers(0, 3, 4),
+                     "m": rng.integers(-4, 5, 4)})
+    plan.refresh()
+    snap = {n: cat[n] for n in cat}
+    assert _compare(plan.run(), np_oracle(snap, q), q, "refreshed") == []
+
+
+def test_compile_serving_rejects_model_preds():
+    tables = _star_tables(11)
+    q = _q(_tree(), model_preds=[PredictionFilter(3, "==", 1.0)],
+           groups=False)
+    with pytest.raises(ValueError, match="model_preds"):
+        compile_serving(Catalog(dict(tables)), q)
+
+
+def test_feature_sites_global_order():
+    arm0 = ArmSpec("d", "fk", "d_pk", ("d_f0",), (),
+                   links=(ChainLink("e", "d_to_e", "e_pk", ("e_f0",)),))
+    arm1 = ArmSpec("g", "fk2", "g_pk", ("g_f0",), ())
+    q = PredictiveQuery("f", (arm0, arm1), (), None, (),
+                        (Aggregate("m", "sum", "rev"),), 8)
+    sites = feature_sites(q)
+    assert [(s.table, s.col) for s in sites] == [
+        ("d", "d_f0"), ("e", "e_f0"), ("g", "g_f0")]
+
+
+# --------------------------------------------------------------------------
+# Satellite: hop-level pooled chains
+# --------------------------------------------------------------------------
+def _chain_tables(seed=0, n=40):
+    rng = np.random.default_rng(seed)
+    e2 = Table.from_columns("e2", {
+        "e2_pk": np.arange(4), "e2_f0": rng.integers(-4, 5, 4)},
+        key_cols=("e2_pk",), capacity=8)
+    e1 = Table.from_columns("e1", {
+        "e1_pk": np.arange(6), "e1_to_e2": rng.integers(0, 6, 6),
+        "e1_f0": rng.integers(-4, 5, 6)},
+        key_cols=("e1_pk", "e1_to_e2"), capacity=12)
+    d = Table.from_columns("d", {
+        "d_pk": np.arange(8), "d_to_e1": rng.integers(0, 8, 8),
+        "d_f0": rng.integers(-4, 5, 8)},
+        key_cols=("d_pk", "d_to_e1"), capacity=16)
+    fact = Table.from_columns("f", {
+        "fk": rng.integers(0, 10, n), "f_g": rng.integers(0, 3, n),
+        "m": rng.integers(-4, 5, n)},
+        key_cols=("fk", "f_g"), capacity=64)
+    return {"e2": e2, "e1": e1, "d": d, "f": fact}
+
+
+def _chain_q(depth2: bool):
+    links = (ChainLink("e1", "d_to_e1", "e1_pk", ("e1_f0",)),)
+    feats = ["d_f0", "e1_f0"]
+    if depth2:
+        links += (ChainLink("e2", "e1_to_e2", "e2_pk", ("e2_f0",),
+                            parent="e1"),)
+        feats.append("e2_f0")
+    arm = ArmSpec("d", "fk", "d_pk", ("d_f0",), (), links=links)
+    model = LinearOperator(jnp.asarray(
+        np.ones((len(feats), 1)), jnp.float32))
+    return PredictiveQuery("f", (arm,), (), model, (),
+                           (Aggregate(PREDICTION, "sum", "p"),
+                            Aggregate("*", "count", "n")), 8)
+
+
+def test_shared_hop_pooled_once_across_chains():
+    tables = _chain_tables()
+    cat = Catalog(dict(tables))
+    pool = ArtifactPool(cat)
+    q1, q2 = _chain_q(depth2=True), _chain_q(depth2=False)
+    p1 = compile_query(cat, q1, pool=pool)
+    p2 = compile_query(cat, q2, pool=pool)
+    st = pool.stats()
+    assert st["by_kind"].get("chain") == 2     # distinct chain contents
+    # The d→e1 hop probe is ONE pooled entry, referenced by both chains.
+    hop = join_key("d", "d_to_e1", "e1", "e1_pk")
+    assert pool.refcount(hop) == 2
+    # Results stay oracle-exact through the pooled-hop path.
+    snap = {n: cat[n] for n in cat}
+    assert _compare(p1.run(), np_oracle(snap, q1), q1, "hop-q1") == []
+    assert _compare(p2.run(), np_oracle(snap, q2), q2, "hop-q2") == []
+    # Appending to the deep link refreshes the shared hop exactly once.
+    rng = np.random.default_rng(1)
+    cat.append("e1", {"e1_pk": np.array([6, 7]),
+                      "e1_to_e2": rng.integers(0, 6, 2),
+                      "e1_f0": rng.integers(-4, 5, 2)})
+    p1.refresh()
+    p2.refresh()
+    assert pool.update_count(hop) == 1
+    snap = {n: cat[n] for n in cat}
+    assert _compare(p1.run(), np_oracle(snap, q1), q1, "hop-q1r") == []
+    assert _compare(p2.run(), np_oracle(snap, q2), q2, "hop-q2r") == []
+    # Releasing both plans drops the chains AND their hop references.
+    p1.close()
+    p2.close()
+    assert pool.stats()["entries"] == 0
