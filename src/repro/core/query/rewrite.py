@@ -184,10 +184,15 @@ def _col_bounds(preds: Sequence[Pred], col: str) -> _Bounds:
         if p.col != col:
             continue
         if p.op == "between":
-            lo, hi = (np.float32(p.value[0]), np.float32(p.value[1]))
-            if lo > b.lo or (lo == b.lo):
-                b.lo = max(b.lo, float(lo))
-            b.hi = min(b.hi, float(hi))
+            lo, hi = (float(np.float32(p.value[0])),
+                      float(np.float32(p.value[1])))
+            # A non-strict bound that strictly tightens must also clear the
+            # strict flag an earlier '>'/'<' left behind; at equality the
+            # existing (strict) bound is already at least as tight.
+            if lo > b.lo:
+                b.lo, b.lo_strict = lo, False
+            if hi < b.hi:
+                b.hi, b.hi_strict = hi, False
         elif p.op == "==":
             vals = frozenset([float(np.float32(p.value))])
             b.values = vals if b.values is None else (b.values & vals)
@@ -207,7 +212,7 @@ def _col_bounds(preds: Sequence[Pred], col: str) -> _Bounds:
                 b.hi, b.hi_strict = v, True
         elif p.op == "<=":
             if float(np.float32(p.value)) < b.hi:
-                b.hi = float(np.float32(p.value))
+                b.hi, b.hi_strict = float(np.float32(p.value)), False
         # "!=" carries no interval information — ignored.
     return b
 
@@ -289,8 +294,8 @@ def _rule_distill(catalog, q: PredictiveQuery):
         d = H[p, leaf]
         if d == 0:
             continue            # node not on this leaf's path
-        if F[:, p].max() != 1.0:
-            return None
+        if np.count_nonzero(F[:, p]) != 1 or F[:, p].max() != 1.0:
+            return None         # not a single-feature node: refuse
         si = int(np.argmax(F[:, p]))
         if not _rewritable_col(catalog, sites[si]):
             return None
@@ -401,8 +406,8 @@ def _rule_prune_tree(catalog, q: PredictiveQuery):
     bounds: dict = {}
     decided: dict = {}
     for p in range(F.shape[1]):
-        if F[:, p].max() != 1.0:
-            continue
+        if np.count_nonzero(F[:, p]) != 1 or F[:, p].max() != 1.0:
+            continue            # not a single-feature node: leave it alone
         si = int(np.argmax(F[:, p]))
         s = sites[si]
         if not _rewritable_col(catalog, s):

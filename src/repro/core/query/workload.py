@@ -4,8 +4,10 @@ The compiler's correctness story leans on algebraic identities — factored
 joins compose associatively, predicates fold into validity vectors, Eq. 1
 prefusion distributes over arms — and hand-written tests only exercise the
 schemas their authors thought of.  This module generates *random* snowflake
-schemas (chain depth ≤ 3, fanout ≤ 3 per node), random predicates, models,
-prediction filters (``model_preds``) and aggregate sets, runs them
+schemas (chain depth ≤ 3, fanout ≤ 3 per node), random predicates (up to
+two per column, mixing strict and non-strict bounds so the rewrite
+engine's interval merging is exercised), models, prediction filters
+(``model_preds``) and aggregate sets, runs them
 end-to-end through :func:`compile_query` across fused/nonfused ×
 segment/matmul, and checks the results **bit-exact** against an independent
 float64 numpy oracle.  Sampled cases additionally run with ``rewrite="off"``
@@ -102,7 +104,7 @@ def _make_table(rng: np.random.Generator, name: str, n: int, cap: int,
 
 
 def _rand_pred(rng: np.random.Generator, col: str) -> Pred:
-    op = rng.choice(["==", ">=", "<=", "between", "in"])
+    op = rng.choice(["==", ">", ">=", "<", "<=", "between", "in"])
     if op == "between":
         lo = int(rng.integers(-4, 2))
         return Pred(col, "between", (lo, lo + int(rng.integers(1, 5))))
@@ -111,6 +113,16 @@ def _rand_pred(rng: np.random.Generator, col: str) -> Pred:
             np.arange(-4, 5), size=int(rng.integers(2, 5)), replace=False))
         return Pred(col, "in", tuple(vals))
     return Pred(col, str(op), int(rng.integers(-3, 4)))
+
+
+def _rand_preds(rng: np.random.Generator, col: str) -> Tuple[Pred, ...]:
+    """1–2 predicates on the *same* column: stacked strict/non-strict
+    bounds exercise the rewrite engine's interval analysis (``_col_bounds``
+    strictness merging) that single-pred columns never reach."""
+    preds = [_rand_pred(rng, col)]
+    if rng.random() < 0.4:
+        preds.append(_rand_pred(rng, col))
+    return tuple(preds)
 
 
 def _gen_dim_tree(rng: np.random.Generator, arm_id: int
@@ -147,7 +159,7 @@ def _gen_dim_tree(rng: np.random.Generator, arm_id: int
             explicit = not (i == 0 and (is_head or rng.random() < 0.5))
             preds = ()
             if rng.random() < 0.35 and child["nfeat"]:
-                preds = (_rand_pred(rng, f"{child['name']}_f0"),)
+                preds = _rand_preds(rng, f"{child['name']}_f0")
             links.append(ChainLink(
                 table=child["name"],
                 fk_col=f"{spec['name']}_to_{child['name']}",
@@ -200,7 +212,7 @@ def generate_case(seed: int) -> FuzzCase:
             group_candidates.append((name, f"{name}_g"))
         head_preds = ()
         if rng.random() < 0.3 and head["nfeat"]:
-            head_preds = (_rand_pred(rng, f"{head['name']}_f0"),)
+            head_preds = _rand_preds(rng, f"{head['name']}_f0")
         arms.append(ArmSpec(
             head["name"], f"fk{a}", f"{head['name']}_pk",
             tuple(f"{head['name']}_f{k}" for k in range(head["nfeat"])),
@@ -231,7 +243,7 @@ def generate_case(seed: int) -> FuzzCase:
 
     fact_preds = ()
     if rng.random() < 0.4:
-        fact_preds = (_rand_pred(rng, str(rng.choice(measures))),)
+        fact_preds = _rand_preds(rng, str(rng.choice(measures)))
 
     # Prediction filters: exercise the model_preds validity fold and (for
     # trees selecting a single leaf) the distillation rewrite.  Integer

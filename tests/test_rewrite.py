@@ -19,9 +19,11 @@ from repro.core.query import (Aggregate, ArmSpec, ArtifactPool, ChainLink,
                               GroupKey, PredictionFilter, PredictiveQuery,
                               Session, compile_query, compile_serving,
                               rewrite_query)
+from repro.core.fusion.operators import DecisionTreeGEMM
 from repro.core.query.ir import PREDICTION
 from repro.core.query.multiquery import join_key
-from repro.core.query.rewrite import RewriteResult, feature_sites
+from repro.core.query.rewrite import (RewriteResult, _col_bounds,
+                                      feature_sites)
 from repro.core.query.workload import _compare, np_oracle
 
 COMBOS = [(b, a) for b in ("fused", "nonfused")
@@ -192,6 +194,128 @@ def test_prune_tree_branches():
     m = rw.query.model
     assert m.F.shape[1] == 1 and rw.query.arms[0].feature_cols == ("d_f1",)
     assert plan._rewrites
+
+
+# --------------------------------------------------------------------------
+# Interval analysis: stacked predicates on one column (strictness merging)
+# --------------------------------------------------------------------------
+def test_col_bounds_between_clears_stale_strictness():
+    # 'between' after '>' replaces the strict lo=2 with a NON-strict lo=6:
+    # x=6 satisfies both predicates, so `x > 6` must stay undecided.
+    b = _col_bounds([Pred("x", ">", 2), Pred("x", "between", (6, 10))], "x")
+    assert (b.lo, b.lo_strict, b.hi, b.hi_strict) == (6.0, False, 10.0,
+                                                      False)
+    assert b.forced(np.float32(6.0)) is None
+    assert b.forced(np.float32(5.0)) is True
+    assert b.forced(np.float32(10.0)) is False
+
+
+def test_col_bounds_le_clears_stale_lt_strictness():
+    # '<=' tightening past a strict '<' must clear hi_strict: x may be 8,
+    # so the finite domain {5, 8} is not pinned to a single value.
+    b = _col_bounds([Pred("x", "<", 10), Pred("x", "<=", 8),
+                     Pred("x", "in", (5, 8))], "x")
+    assert (b.hi, b.hi_strict) == (8.0, False)
+    assert b.pinned() is None
+
+
+def test_col_bounds_strictness_kept_at_equal_value():
+    # A strict bound at the same value is the tighter one either way round.
+    for preds in ([Pred("x", ">", 6), Pred("x", "between", (6, 10))],
+                  [Pred("x", "between", (6, 10)), Pred("x", ">", 6)]):
+        b = _col_bounds(preds, "x")
+        assert b.lo_strict and b.forced(np.float32(6.0)) is True
+    b = _col_bounds([Pred("x", "<", 8), Pred("x", "between", (0, 8))], "x")
+    assert b.hi_strict
+
+
+def test_col_bounds_pin_via_stacked_inequalities():
+    b = _col_bounds([Pred("x", ">=", 2), Pred("x", "<=", 2)], "x")
+    assert b.pinned() == np.float32(2.0)
+    # A strict bound at the pin value empties the interval — no pin.
+    b = _col_bounds([Pred("x", ">", 2), Pred("x", "<=", 2)], "x")
+    assert b.pinned() is None
+
+
+def test_prune_keeps_boundary_node_under_stacked_preds():
+    # Regression: [d_f0 > -3, d_f0 between (0, 4)] admits d_f0 == 0, which
+    # takes node0's (f0 > 0) *left* branch; a stale strict flag from '>'
+    # used to decide the node True and misroute exactly those rows.
+    tables = _star_tables(16)
+    q = _q(_tree(), arm_preds=[Pred("d_f0", ">", -3),
+                               Pred("d_f0", "between", (0, 4))],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    _check_on_off(tables, q, "prune_tree_branches")
+    rw = rewrite_query(tables, q)
+    # node2 (f0 > -1) is decided; node0 (f0 > 0) must survive.
+    assert any("3->2 nodes" in t for t in rw.trail)
+
+
+def test_fold_refuses_false_pin_from_stale_strictness():
+    # Regression: [d_f0 < 4, d_f0 <= 2, d_f0 in (0, 2)] leaves BOTH 0 and
+    # 2 feasible; the stale '<' flag used to exclude 2 and fold 0 into the
+    # bias, corrupting every surviving d_f0 == 2 row.
+    tables = _star_tables(15)
+    model = LinearOperator(jnp.asarray([[2., 1.], [1., 2.], [3., -1.]],
+                                       jnp.float32))
+    q = _q(model, arm_preds=[Pred("d_f0", "<", 4), Pred("d_f0", "<=", 2),
+                             Pred("d_f0", "in", (0, 2))],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    rw = rewrite_query(tables, q)
+    assert not any("fold_constant_inputs" in t for t in rw.trail)
+    want = np_oracle(tables, q)
+    on = compile_query(Catalog(dict(tables)), q).run()
+    off = compile_query(Catalog(dict(tables)), q, rewrite="off").run()
+    assert _compare(on, want, q, "on") == []
+    assert _compare(off, want, q, "off") == []
+
+
+def test_fold_pins_via_stacked_inequalities():
+    # >= 2 and <= 2 together pin d_f0 without an equality predicate.
+    tables = _star_tables(17)
+    model = LinearOperator(jnp.asarray([[2., 1.], [1., 2.], [3., -1.]],
+                                       jnp.float32))
+    q = _q(model, arm_preds=[Pred("d_f0", ">=", 2), Pred("d_f0", "<=", 2)],
+           aggs=(Aggregate(PREDICTION, "sum", "p"),
+                 Aggregate("*", "count", "n")))
+    _check_on_off(tables, q, "fold_constant_inputs")
+    rw = rewrite_query(tables, q)
+    m = rw.query.model
+    np.testing.assert_array_equal(np.asarray(m.bias), [4., 2.])
+    assert rw.query.arms[0].feature_cols == ("d_f1", "d_f2")
+
+
+def test_malformed_multi_feature_node_refused():
+    # An F column with two 1s (a sum-of-features node) violates the
+    # one-1-per-column invariant: distill must refuse and prune must skip
+    # that node rather than treat it as testing only the argmax feature.
+    tables = _star_tables(14)
+    t = _tree()
+    F = np.asarray(t.F).copy()
+    F[2, 0] = 1.0                      # node0 now tests d_f0 + d_f2
+    m = DecisionTreeGEMM(jnp.asarray(F), t.v, t.H, t.h)
+    q = _q(m, model_preds=[PredictionFilter(3, "==", 1.0)])
+    rw = rewrite_query(tables, q)
+    assert rw.query.model is not None          # distill refused
+    assert not rw.changed
+    want = np_oracle(tables, q)
+    on = compile_query(Catalog(dict(tables)), q).run()
+    off = compile_query(Catalog(dict(tables)), q, rewrite="off").run()
+    assert _compare(on, want, q, "malformed-on") == []
+    assert _compare(off, want, q, "malformed-off") == []
+    # Pruning skips the malformed node but still fires on sound ones.
+    q2 = _q(m, arm_preds=[Pred("d_f0", ">", 2)],
+            aggs=(Aggregate(PREDICTION, "sum", "p"),
+                  Aggregate("*", "count", "n")))
+    rw2 = rewrite_query(tables, q2)
+    assert any("3->2 nodes" in s for s in rw2.trail)
+    want2 = np_oracle(tables, q2)
+    on2 = compile_query(Catalog(dict(tables)), q2).run()
+    off2 = compile_query(Catalog(dict(tables)), q2, rewrite="off").run()
+    assert _compare(on2, want2, q2, "prune-on") == []
+    assert _compare(off2, want2, q2, "prune-off") == []
 
 
 # --------------------------------------------------------------------------
